@@ -1,0 +1,37 @@
+"""Shared benchmark utilities: the paper's benchmark suite of SPNs."""
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.core import learn, program
+from repro.data import spn_datasets
+
+BENCH_SUITE = ["nltcs", "msnbc", "kdd", "plants", "baudio", "jester",
+               "bnetflix"]
+
+
+@functools.lru_cache(maxsize=None)
+def bench_spn(name: str):
+    """Learned SPN + lowered program for one suite dataset (cached)."""
+    X = spn_datasets.load(name, "train", 600)
+    spn = learn.learn_spn(X, min_instances=60, seed=0)
+    prog = program.lower(spn)
+    return spn, prog
+
+
+def timeit(fn, n_iter: int = 20, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.2f},{derived}"

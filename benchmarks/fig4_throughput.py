@@ -1,0 +1,83 @@
+"""Paper fig. 4: throughput (ops/cycle) of CPU / GPU / Pvect / Ptree on the
+benchmark suite; plus Table-adjacent claims: Ptree ≥ 12× CPU/GPU at peak,
+Ptree ≈ 2× Pvect.
+
+CPU/GPU numbers come from the structural performance models (§III);
+Ptree/Pvect from the real compiler + cycle-accurate simulator (§IV–V).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import executors
+from repro.core.compiler.pipeline import compile_program
+from repro.core.processor import cpu_model, gpu_model, sim
+from repro.core.processor.config import PTREE, PVECT
+from repro.data import spn_datasets
+from .common import BENCH_SUITE, bench_spn, csv_row, timeit
+
+
+def run(verbose: bool = True, suite=None) -> dict:
+    from repro.core.program import interleave
+    suite = suite or BENCH_SUITE
+    table = {}
+    for name in suite:
+        spn, prog = bench_spn(name)
+        X = spn_datasets.load(name, "test", 8)
+        cpu = cpu_model.analyze(prog).ops_per_cycle
+        gpu = gpu_model.analyze(prog, 256).ops_per_cycle
+        row = {"ops": prog.n_ops, "cpu": cpu, "gpu": gpu}
+        for cfg in (PVECT, PTREE):
+            vprog = compile_program(prog, cfg)
+            res = sim.simulate(vprog, prog, X, cfg)
+            ref = executors.eval_ops_numpy(
+                prog, prog.leaves_from_evidence(X))
+            assert np.allclose(res.root_values, ref, rtol=1e-4), name
+            row[cfg.name.lower()] = res.ops_per_cycle
+        # §Perf-C beyond-paper mode: 2 evaluations software-pipelined
+        # through the trees (the paper's 100k-execution throughput regime)
+        vp2 = compile_program(interleave(prog, 2), PTREE)
+        row["ptree_x2"] = vp2.ops_per_cycle
+        table[name] = row
+        if verbose:
+            print(f"  {name:10s} ops={row['ops']:6d}  "
+                  f"CPU {cpu:4.2f}  GPU {gpu:4.2f}  "
+                  f"Pvect {row['pvect']:5.2f}  Ptree {row['ptree']:5.2f}  "
+                  f"Ptree-pipe2 {row['ptree_x2']:5.2f}  "
+                  f"(Ptree/GPU {row['ptree']/max(gpu,1e-9):4.1f}x)")
+
+    peak_tree = max(r["ptree"] for r in table.values())
+    peak_pipe = max(r["ptree_x2"] for r in table.values())
+    peak_cpu = max(r["cpu"] for r in table.values())
+    peak_gpu = max(r["gpu"] for r in table.values())
+    mean_ratio_vect = float(np.mean([r["ptree"] / r["pvect"]
+                                     for r in table.values()]))
+    speedup_cpu = min(r["ptree"] / r["cpu"] for r in table.values())
+    speedup_gpu = min(r["ptree"] / r["gpu"] for r in table.values())
+    out = {"table": table, "peak_ptree": peak_tree, "peak_cpu": peak_cpu,
+           "peak_gpu": peak_gpu, "ptree_vs_pvect": mean_ratio_vect,
+           "min_speedup_cpu": speedup_cpu, "min_speedup_gpu": speedup_gpu,
+           "peak_ptree_pipelined": peak_pipe}
+    if verbose:
+        print(f"fig4: peak Ptree {peak_tree:.2f} ops/cycle "
+              f"(paper: 11.6); pipelined-x2 {peak_pipe:.2f}; "
+              f"CPU {peak_cpu:.2f} (0.55); GPU {peak_gpu:.2f} (0.95)")
+        print(f"  min Ptree speedup vs CPU {speedup_cpu:.1f}x, vs GPU "
+              f"{speedup_gpu:.1f}x (paper: ≥12x); Ptree/Pvect "
+              f"{mean_ratio_vect:.2f}x (paper: ~2x)")
+    return out
+
+
+def main() -> list[str]:
+    out = run()
+    _, prog = bench_spn("nltcs")
+    us = timeit(lambda: compile_program(prog, PTREE), n_iter=3, warmup=1)
+    return [csv_row("fig4_throughput", us,
+                    f"peak_ptree={out['peak_ptree']:.2f};"
+                    f"min_speedup_cpu={out['min_speedup_cpu']:.1f}x;"
+                    f"min_speedup_gpu={out['min_speedup_gpu']:.1f}x;"
+                    f"ptree_vs_pvect={out['ptree_vs_pvect']:.2f}x")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Pallas spn_eval kernel microbenchmark (interpret-mode on CPU).
+
+Wall-times are CPU-interpret numbers (the TPU target can't be timed here);
+the derived metric that transfers is the *instruction/VMEM geometry*:
+value-buffer residency, instruction bytes, and padding overhead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import executors
+from repro.data import spn_datasets
+from repro.kernels.spn_eval import pad_program, spn_eval
+from .common import bench_spn, csv_row, timeit
+
+
+def run(verbose: bool = True, dataset: str = "nltcs", batch: int = 256):
+    _, prog = bench_spn(dataset)
+    pp = pad_program(prog)
+    X = spn_datasets.load(dataset, "test", batch)
+    leaves = jnp.asarray(prog.leaves_from_evidence(X), jnp.float32)
+
+    r_kernel = spn_eval(prog, leaves, log_domain=True)
+    r_leveled = executors.eval_leveled(prog, leaves, None, True)
+    err = float(jnp.abs(r_kernel - r_leveled).max())
+    assert err < 1e-4
+
+    us_kernel = timeit(lambda: jax.block_until_ready(
+        spn_eval(prog, leaves, log_domain=True)))
+    us_leveled = timeit(lambda: jax.block_until_ready(
+        executors.eval_leveled(prog, leaves, None, True)))
+    us_scan = timeit(lambda: jax.block_until_ready(
+        executors.eval_scan(prog, leaves, None, True)), n_iter=5)
+
+    pad_ops = pp.n_ops_pad - prog.n_ops
+    vmem_kib = pp.num_slots * 128 * 4 / 1024
+    stats = {
+        "ops": prog.n_ops, "levels": prog.num_levels,
+        "pad_overhead": pad_ops / prog.n_ops,
+        "vmem_kib_per_tile": vmem_kib,
+        "instr_bytes": pp.n_ops_pad * 12,
+        "us_kernel": us_kernel, "us_leveled": us_leveled, "us_scan": us_scan,
+    }
+    if verbose:
+        print(f"kernel_microbench[{dataset}] ops={prog.n_ops} "
+              f"levels={prog.num_levels} pad={pad_ops/prog.n_ops:.1%} "
+              f"VMEM/tile={vmem_kib:.0f}KiB")
+        print(f"  pallas(interp) {us_kernel:9.1f} us | leveled "
+              f"{us_leveled:9.1f} us | scan {us_scan:9.1f} us  (batch {batch})")
+    return stats
+
+
+def main() -> list[str]:
+    s = run()
+    return [csv_row("kernel_microbench", s["us_kernel"],
+                    f"ops={s['ops']};levels={s['levels']};"
+                    f"pad={s['pad_overhead']:.2f};"
+                    f"vmem_kib={s['vmem_kib_per_tile']:.0f}")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        --dir experiments/dryrun --md
+
+Reads every ``<arch>_<shape>_<mesh>.json`` produced by
+``repro.launch.dryrun`` and emits the per-cell roofline table: the three
+terms (compute / memory / collective, seconds per step), the dominant
+bottleneck, MODEL_FLOPS, and the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs.base import ARCH_IDS, SHAPES
+
+MESHES = {"single": "pod16x16", "multi": "pod2x16x16"}
+
+
+def load_records(dirpath: str, mesh: str = "single") -> list[dict]:
+    out = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            p = os.path.join(dirpath, f"{arch}_{shape}_{mesh}.json")
+            if os.path.exists(p):
+                with open(p) as f:
+                    out.append(json.load(f))
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped: "
+                f"{r.get('reason','')} | — |")
+    if r["status"] == "error":
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR | — |"
+    rf = r["roofline"]
+    ratio = r.get("useful_flops_ratio")
+    return ("| {a} | {s} | {tc:.4f} | {tm:.4f} | {tl:.4f} | **{b}** | "
+            "{mf:.2e} | {ur} |".format(
+                a=r["arch"], s=r["shape"], tc=rf["t_compute_s"],
+                tm=rf["t_memory_s"], tl=rf["t_collective_s"],
+                b=rf["bottleneck"], mf=r["model_flops"],
+                ur=f"{ratio:.3f}" if ratio else "—"))
+
+
+HEADER = ("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s)"
+          " | bottleneck | MODEL_FLOPS | useful ratio |\n"
+          "|---|---|---|---|---|---|---|---|")
+
+
+def emit_table(records: list[dict]) -> str:
+    return "\n".join([HEADER] + [fmt_row(r) for r in records])
+
+
+def emit_dryrun_summary(records: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | status | compile (s) | args/dev (GiB) |"
+             " temp/dev (GiB) | collective bytes/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r['status']} | — | — | — | — |")
+            continue
+        m = r["memory"]
+        cb = sum(r["collectives"]["bytes"].values())
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.1f} | {m.get('argument_size_gib', 0):.2f} | "
+            f"{m.get('temp_size_gib', 0):.2f} | {cb:.3e} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single", choices=list(MESHES))
+    ap.add_argument("--summary", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.dir, args.mesh)
+    if args.summary:
+        print(emit_dryrun_summary(recs))
+    else:
+        print(emit_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+``python -m benchmarks.run`` prints a ``name,us_per_call,derived`` CSV row
+per benchmark (plus the human-readable tables above them).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import fig2c_gpu_scaling, fig4_throughput, kernel_microbench, table1_resources
+    rows: list[str] = []
+    for mod in (table1_resources, fig2c_gpu_scaling, fig4_throughput,
+                kernel_microbench):
+        print(f"\n=== {mod.__name__.split('.')[-1]} ===")
+        rows.extend(mod.main())
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

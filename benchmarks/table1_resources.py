@@ -1,0 +1,39 @@
+"""Paper Table I: compute and memory resources of each platform."""
+from __future__ import annotations
+
+from repro.core.processor.config import CPU_MODEL, GPU_MODEL, PTREE, PVECT
+from .common import csv_row
+
+ROWS = [
+    ("CPU", "2 arith units (superscalar)", "168 80b regs + 32KB L1", 16),
+    ("GPU", f"{GPU_MODEL.cuda_cores} CUDA cores",
+     "64K 32b regs + 64KB shared", GPU_MODEL.shared_banks),
+]
+
+
+def run(verbose: bool = True) -> dict:
+    rows = list(ROWS)
+    for cfg in (PVECT, PTREE):
+        rows.append((f"Ours ({cfg.name})", f"{cfg.num_pes} PEs",
+                     f"{cfg.total_regs} 32b regs + 64KB data mem",
+                     cfg.banks))
+    if verbose:
+        print(f"{'Platform':14s} {'Compute':28s} {'Memory':28s} Banks")
+        for r in rows:
+            print(f"{r[0]:14s} {r[1]:28s} {r[2]:28s} {r[3]}")
+    # Table I invariants
+    assert PTREE.num_pes == 30 and PVECT.num_pes == 16
+    assert PTREE.total_regs == 2048            # 2K 32b registers
+    assert PTREE.banks == GPU_MODEL.shared_banks == 32
+    assert PTREE.data_mem_rows * PTREE.banks * 4 == 64 * 1024  # 64 KB
+    return {"rows": rows}
+
+
+def main() -> list[str]:
+    run()
+    return [csv_row("table1_resources", 0.0,
+                    "ptree_pes=30;pvect_pes=16;banks=32;datamem=64KB")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Exercises the full production path at CPU scale: real config (qwen2-0.5b
+geometry scaled to ~100M params), sharded planner on the local mesh,
+AdamW + warmup-cosine, deterministic data pipeline, async checkpointing,
+heartbeat + watchdog, and an injected mid-run crash recovered through the
+restart harness — proof the fault-tolerance contract holds end-to-end.
+
+    PYTHONPATH=src python examples/train_lm_e2e.py --steps 300
+(defaults to a 60-step run so CI stays fast; pass --steps 300 for the
+full demonstration)
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch.train import TrainConfig, Trainer
+from repro.models import api
+from repro.models.common import count_params
+from repro.optim import AdamWConfig
+from repro.runtime import FailureInjector, run_with_restarts
+
+# ~110M params: 12L × 768d GQA transformer over a 32k vocab
+ARCH_100M = ArchConfig(
+    name="lm-100m", family="dense", n_layers=12, d_model=768, n_heads=12,
+    n_kv_heads=6, head_dim=64, d_ff=3072, vocab=32_000, qkv_bias=False,
+    rope_theta=10_000.0, tie_embeddings=True,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="inject a crash at this step (default: mid-run)")
+    args = ap.parse_args()
+    crash_at = args.crash_at or args.steps // 2
+
+    import jax
+    n = count_params(jax.eval_shape(
+        lambda: api.init_params(ARCH_100M, jax.random.PRNGKey(0))))
+    print(f"arch {ARCH_100M.name}: {n/1e6:.1f}M params; "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        tc = TrainConfig(arch_config=ARCH_100M, steps=args.steps,
+                         global_batch=args.batch, seq_len=args.seq,
+                         ckpt_dir=ckpt, ckpt_every=max(args.steps // 6, 5),
+                         opt=AdamWConfig(lr=6e-4, warmup_steps=20,
+                                         total_steps=args.steps * 2))
+        inj = FailureInjector({crash_at})
+
+        def run(state):
+            t = Trainer(tc, injector=inj)
+            st = t.resume_state()
+            if st is None:
+                st = t.init_state()
+            return t.run(st)
+
+        out = run_with_restarts(lambda: None, lambda: None, run)
+        losses = out["losses"]
+        print(f"crash injected at step {crash_at}; run completed "
+              f"{out['step']} steps after restart")
+        k = max(len(losses) // 5, 1)
+        print(f"loss: first-{k} mean {np.mean(losses[:k]):.4f} → "
+              f"last-{k} mean {np.mean(losses[-k:]):.4f}")
+        assert np.mean(losses[-k:]) < np.mean(losses[:k]), "loss must drop"
+        print("OK: end-to-end training with crash recovery")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Sharded checkpointing: atomic, async, elastic-remesh restore.
+
+Format: one directory per step —
+
+    <root>/step_000123/
+        manifest.json        # tree structure, shapes, dtypes, step, extras
+        arrays.npz           # flat path → host array
+
+Commit protocol: write into ``step_000123.tmp`` then ``os.rename`` —
+readers never observe a partial checkpoint (restart-safe). An async
+writer thread makes ``save`` non-blocking (the training loop donates
+nothing: arrays are fetched to host first, so the step can proceed).
+
+Elastic restore: arrays are saved *unsharded* (host-gathered); restore
+``device_put``s against whatever mesh/sharding the *new* topology built —
+a checkpoint taken on 256 chips restores onto 512 or 8 (the resharding is
+GSPMD's problem, not the format's). At real multi-pod scale the same
+manifest schema holds per-shard chunk files instead; noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SENTINEL = object()
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in paths:
+        key = "/".join(_k(k) for k in kp)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # npz has no native bf16: store f32, restore casts back via the
+            # target dtype (recorded in the manifest)
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def _k(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def save(root: str, step: int, tree: Any, extras: dict | None = None) -> str:
+    """Synchronous atomic save; returns the committed directory."""
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extras": extras or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(root: str) -> int | None:
+    if not os.path.isdir(root):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(root)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(root: str, target: Any, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, dict]:
+    """Restore into the structure of ``target`` (pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional same-structure NamedShardings
+    for elastic remesh placement. Returns (tree, extras)."""
+    step = latest_step(root) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {root}")
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    leaves = []
+    for (kp, tgt), shd in zip(paths, shard_leaves):
+        key = "/".join(_k(k) for k in kp)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(f"{key}: saved {arr.shape} != target {tgt.shape}")
+        arr = arr.astype(tgt.dtype)
+        leaves.append(jax.device_put(arr, shd) if shd is not None else
+                      jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extras"]
+
+
+def gc_old(root: str, keep: int = 3) -> list[str]:
+    """Delete all but the newest ``keep`` checkpoints."""
+    if not os.path.isdir(root):
+        return []
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(root)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    removed = []
+    for s in steps[:-keep] if keep else steps:
+        p = os.path.join(root, f"step_{s:08d}")
+        shutil.rmtree(p)
+        removed.append(p)
+    return removed
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: ``save`` returns once arrays are on host."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._errors: list[BaseException] = []
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        while True:
+            item = self._q.get()
+            if item is _SENTINEL:
+                return
+            step, host_tree, extras = item
+            try:
+                save(self.root, step, host_tree, extras)
+                gc_old(self.root, self.keep)
+            except BaseException as e:   # surfaced on next save/close
+                self._errors.append(e)
+
+    def save(self, step: int, tree: Any, extras: dict | None = None) -> None:
+        if self._errors:
+            raise RuntimeError("async checkpoint failed") from self._errors[0]
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._q.put((step, host_tree, extras))
+
+    def close(self) -> None:
+        self._q.put(_SENTINEL)
+        self._thread.join()
+        if self._errors:
+            raise RuntimeError("async checkpoint failed") from self._errors[0]

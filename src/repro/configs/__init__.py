@@ -1,0 +1,5 @@
+from .base import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig,
+                   applicable_shapes, get_config, get_smoke_config, registry)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "ShapeConfig",
+           "applicable_shapes", "get_config", "get_smoke_config", "registry"]

@@ -1,0 +1,114 @@
+"""Architecture + shape registries.
+
+Every assigned architecture is a frozen :class:`ArchConfig`; the four
+assigned input shapes are :class:`ShapeConfig` entries. ``registry()``
+maps ``--arch`` ids to configs; each ``configs/<id>.py`` defines ``CONFIG``
+(full geometry) and ``SMOKE`` (reduced same-family geometry for CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | encdec | ssm | hybrid | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+    qkv_bias: bool = False
+    attn_out_bias: bool = False
+    mlp_bias: bool = False
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    rope_theta: float | None = 10000.0
+    act: str = "swiglu"             # swiglu | gelu
+    parallel_block: bool = False    # attn+FFN in parallel (command-r)
+    tie_embeddings: bool = False
+    logit_softcap: float | None = None
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    moe_group_size: int = 1024
+    moe_impl: str = "dense"         # dense (EP) | ragged (serving)
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # ssm (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    # hybrid (zamba2): shared attn+MLP block applied every N ssm layers
+    attn_every: int = 0
+    # encdec (whisper)
+    n_enc_layers: int = 0
+    enc_ctx: int = 1500             # audio frames after the (stubbed) conv frontend
+    # vlm (internvl2)
+    n_img_tokens: int = 0           # patch embeddings prepended to the text
+    # capability flags
+    sub_quadratic: bool = False     # may run long_500k
+    has_decoder: bool = True        # encoder-only archs skip decode shapes
+    notes: str = ""
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "qwen3-moe-235b-a22b", "granite-moe-1b-a400m", "internvl2-2b",
+    "command-r-plus-104b", "starcoder2-7b", "qwen2-0.5b", "glm4-9b",
+    "whisper-medium", "mamba2-780m", "zamba2-7b",
+]
+
+
+def _module(arch_id: str):
+    return importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).SMOKE
+
+
+def registry() -> dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def applicable_shapes(cfg: ArchConfig) -> list[str]:
+    """The assigned shape cells this architecture runs (DESIGN.md §4)."""
+    out = ["train_4k", "prefill_32k"]
+    if cfg.has_decoder:
+        out.append("decode_32k")
+        if cfg.sub_quadratic:
+            out.append("long_500k")
+    return out

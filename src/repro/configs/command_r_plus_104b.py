@@ -1,0 +1,18 @@
+"""Command R+ 104B [dense] — 64L d12288 96H (GQA kv=8) d_ff 33792,
+vocab 256000, parallel attn+FFN blocks, LayerNorm, no biases, tied
+embeddings. [hf:CohereForAI/c4ai-command-r-plus family; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-plus-104b", family="dense",
+    n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8, head_dim=128,
+    d_ff=33792, vocab=256000, norm="layernorm", rope_theta=75_000_000.0,
+    parallel_block=True, tie_embeddings=True,
+)
+
+SMOKE = ArchConfig(
+    name="command-r-smoke", family="dense",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, head_dim=16,
+    d_ff=256, vocab=512, norm="layernorm", parallel_block=True,
+    tie_embeddings=True,
+)

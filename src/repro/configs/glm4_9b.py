@@ -1,0 +1,16 @@
+"""GLM-4 9B [dense] — 40L d4096 32H (GQA kv=2) d_ff 13696, vocab 151552,
+QKV bias, RoPE. [hf:THUDM/glm-4-9b; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="glm4-9b", family="dense",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=2, head_dim=128,
+    d_ff=13696, vocab=151552, qkv_bias=True, rope_theta=10_000.0,
+    notes="GLM4 partial-rotary (0.5) approximated as full rotary",
+)
+
+SMOKE = ArchConfig(
+    name="glm4-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+    d_ff=192, vocab=256, qkv_bias=True,
+)

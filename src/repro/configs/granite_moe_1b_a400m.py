@@ -1,0 +1,17 @@
+"""Granite-3.0 1B-A400M [moe] — 24L d1024 16H (GQA kv=8) expert-ff 512,
+vocab 49155, 32 experts top-8. [hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab=49155, rope_theta=10_000.0, tie_embeddings=True,
+    n_experts=32, top_k=8, moe_group_size=1024,
+)
+
+SMOKE = ArchConfig(
+    name="granite-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=32, vocab=256, tie_embeddings=True,
+    n_experts=8, top_k=2, moe_group_size=64,
+)

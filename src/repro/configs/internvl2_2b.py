@@ -1,0 +1,18 @@
+"""InternVL2-2B [vlm] — InternLM2-1.8B backbone: 24L d2048 16H (GQA kv=8)
+d_ff 8192, vocab 92553; InternViT frontend STUBBED to precomputed patch
+embeddings (256 tokens after pixel-shuffle). [arXiv:2404.16821; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-2b", family="vlm",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=92553, rope_theta=1_000_000.0,
+    n_img_tokens=256,
+    notes="ViT tower stubbed: input_specs feeds (B,256,2048) patch embeds",
+)
+
+SMOKE = ArchConfig(
+    name="internvl2-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=256, n_img_tokens=8,
+)

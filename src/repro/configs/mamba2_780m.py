@@ -1,0 +1,18 @@
+"""Mamba2-780M [ssm] — 48L d1536, attention-free SSD (state-space
+duality), ssm_state=128, vocab 50280. Sub-quadratic: runs long_500k.
+[arXiv:2405.21060; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-780m", family="ssm",
+    n_layers=48, d_model=1536, d_ff=0, vocab=50280,
+    ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_chunk=256,
+    conv_width=4, sub_quadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="mamba2-smoke", family="ssm",
+    n_layers=2, d_model=64, d_ff=0, vocab=256,
+    ssm_state=16, ssm_expand=2, ssm_headdim=16, ssm_chunk=8,
+    conv_width=4, sub_quadratic=True,
+)

@@ -1,0 +1,18 @@
+"""Qwen3-MoE 235B-A22B [moe] — 94L d4096 64H (GQA kv=4) expert-ff 1536,
+vocab 151936, 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B family; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+    d_ff=1536, vocab=151936, rope_theta=1_000_000.0,
+    n_experts=128, top_k=8, moe_group_size=2048,
+    notes="MoE SwiGLU experts; expert d_ff=1536 per assignment",
+)
+
+SMOKE = ArchConfig(
+    name="qwen3-moe-smoke", family="moe",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=64, vocab=512, rope_theta=1_000_000.0,
+    n_experts=8, top_k=2, moe_group_size=64,
+)

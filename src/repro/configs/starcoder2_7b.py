@@ -1,0 +1,19 @@
+"""StarCoder2-7B [dense] — 32L d4608 36H (GQA kv=4) d_ff 18432,
+vocab 49152, GELU MLP with biases, LayerNorm, RoPE, QKV bias.
+[arXiv:2402.19173; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4, head_dim=128,
+    d_ff=18432, vocab=49152, norm="layernorm", act="gelu",
+    qkv_bias=True, attn_out_bias=True, mlp_bias=True,
+    rope_theta=100_000.0,
+)
+
+SMOKE = ArchConfig(
+    name="starcoder2-smoke", family="dense",
+    n_layers=2, d_model=72, n_heads=6, n_kv_heads=2, head_dim=12,
+    d_ff=288, vocab=256, norm="layernorm", act="gelu",
+    qkv_bias=True, attn_out_bias=True, mlp_bias=True,
+)

@@ -1,0 +1,23 @@
+"""Whisper-medium [audio/encdec] — 24L enc + 24L dec, d1024 16H (MHA)
+d_ff 4096, vocab 51865; conv frontend STUBBED to precomputed frame
+embeddings (1500 frames). [arXiv:2212.04356; unverified]
+
+The assignment's "24L" is read as 24 encoder + 24 decoder layers (the
+actual whisper-medium geometry); noted in DESIGN.md §4.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium", family="encdec",
+    n_layers=24, n_enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    head_dim=64, d_ff=4096, vocab=51865, norm="layernorm", act="gelu",
+    qkv_bias=True, rope_theta=None, enc_ctx=1500, tie_embeddings=True,
+    notes="conv frontend stubbed: input_specs feeds (B,1500,1024) frames",
+)
+
+SMOKE = ArchConfig(
+    name="whisper-smoke", family="encdec",
+    n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    head_dim=16, d_ff=128, vocab=256, norm="layernorm", act="gelu",
+    qkv_bias=True, rope_theta=None, enc_ctx=32, tie_embeddings=True,
+)

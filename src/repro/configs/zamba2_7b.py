@@ -1,0 +1,22 @@
+"""Zamba2-7B [hybrid] — 81L d3584, Mamba2 backbone (ssm_state=64) with a
+shared attention block (32H MHA kv=32, d_ff 14336) applied every 6 mamba
+layers (13 applications + 3 tail layers). Sub-quadratic prefix: runs
+long_500k. [arXiv:2411.15242; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32, head_dim=112,
+    d_ff=14336, vocab=32000, rope_theta=10_000.0,
+    ssm_state=64, ssm_expand=2, ssm_headdim=64, ssm_chunk=256,
+    conv_width=4, attn_every=6, sub_quadratic=True,
+    notes="Zamba2 embedding-concat + per-application LoRA simplified away "
+          "(DESIGN.md §4)",
+)
+
+SMOKE = ArchConfig(
+    name="zamba2-smoke", family="hybrid",
+    n_layers=7, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab=256, ssm_state=16, ssm_expand=2, ssm_headdim=16,
+    ssm_chunk=8, conv_width=4, attn_every=3, sub_quadratic=True,
+)

@@ -1,0 +1,2 @@
+from .pipeline import compile_program  # noqa: F401
+from .isa import VLIWProgram  # noqa: F401

@@ -1,0 +1,102 @@
+"""Custom VLIW instruction set for the SPN processor (paper §IV).
+
+One :class:`VLIWInstr` configures the whole machine for one clock cycle:
+
+- per-tree: the crossbar read for every leaf port, the opcode of every PE
+  and the register-writeback list,
+- one optional vector load/store between a register row and data memory.
+
+PE opcodes follow the paper: sum, product, or *forward* of either input
+(forwarding is what lets a crossbar operand ride up the tree to meet a
+deeper op, and is not counted as a useful arithmetic op).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# PE opcodes
+PE_NOP = 0
+PE_ADD = 1
+PE_MUL = 2
+PE_FWD_A = 3   # forward left input
+PE_FWD_B = 4   # forward right input
+
+OP_NAMES = {PE_NOP: "nop", PE_ADD: "add", PE_MUL: "mul",
+            PE_FWD_A: "fwda", PE_FWD_B: "fwdb"}
+
+
+@dataclasses.dataclass
+class ReadSrc:
+    """Crossbar read feeding one leaf port: register (bank, reg)."""
+    bank: int   # global bank id
+    reg: int
+
+
+@dataclasses.dataclass
+class WriteBack:
+    """Writeback of PE (level, pos) output into (bank, reg).
+
+    Commits ``level * pe_latency`` cycles after issue (pipelined tree).
+    ``op_id`` tags the SPN op whose value is produced (-1 for forwards).
+    """
+    level: int
+    pos: int
+    bank: int   # global bank id (must lie in the tree's private slice)
+    reg: int
+    op_id: int = -1
+
+
+@dataclasses.dataclass
+class TreeInstr:
+    """One tree's configuration for one cycle."""
+    tree: int
+    reads: dict[int, ReadSrc] = dataclasses.field(default_factory=dict)   # port -> src
+    pe_ops: dict[tuple[int, int], int] = dataclasses.field(default_factory=dict)  # (level,pos) -> opcode
+    writes: list[WriteBack] = dataclasses.field(default_factory=list)
+    op_ids: list[int] = dataclasses.field(default_factory=list)  # useful ops this issue
+
+    @property
+    def num_useful_ops(self) -> int:
+        return len(self.op_ids)
+
+
+@dataclasses.dataclass
+class MemInstr:
+    """Vector row transfer: data_mem[addr] <-> regfile[:, reg]."""
+    kind: str   # "load" | "store"
+    addr: int   # data-memory row
+    reg: int    # register row (same index in every bank)
+
+
+@dataclasses.dataclass
+class VLIWInstr:
+    trees: list[Optional[TreeInstr]]
+    mem: Optional[MemInstr] = None
+
+    @property
+    def num_useful_ops(self) -> int:
+        return sum(t.num_useful_ops for t in self.trees if t is not None)
+
+
+@dataclasses.dataclass
+class VLIWProgram:
+    """Compiled SPN: instruction stream + I/O layout metadata."""
+    instrs: list[VLIWInstr]
+    # leaf input layout: data-memory rows holding the input vector;
+    # input_layout[i] = (row, bank) for indicator slot i of the TensorProgram
+    input_rows: int
+    input_layout: list[tuple[int, int]]
+    # constants (parameter leaves): preloaded data-memory image rows
+    const_rows: dict[int, list[float]]   # row -> 32 values
+    root_loc: tuple[int, int]            # (row, bank) of the root in data memory
+    n_useful_ops: int
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_cycles(self) -> int:
+        return len(self.instrs)
+
+    @property
+    def ops_per_cycle(self) -> float:
+        return self.n_useful_ops / max(self.num_cycles, 1)

@@ -1,0 +1,630 @@
+"""End-to-end SPN → VLIW compilation (paper §IV "Compilation").
+
+Cycle-by-cycle list scheduler implementing all four compiler duties named
+by the paper:
+
+1. *operation placement on PE trees* — greedy deepest-subtree bundle
+   packing (:mod:`treepack`), so producer→consumer chains stay inside the
+   datapath and skip the register file;
+2. *register-bank allocation in tandem with placement* — a level-ℓ PE can
+   only write its 2^ℓ private banks, so the writeback bank is chosen when
+   the op is placed (balance + write-port feasibility at the commit cycle);
+3. *RAW-hazard-aware reordering* — values become readable ``level``
+   cycles after issue (pipelined trees); the ready/active machinery issues
+   whatever independent work fits while dependents wait;
+4. *careful spilling* — leaf rows stream in on demand into a reserved
+   load region (prefetched in first-use order); full intermediate rows
+   spill to data memory LRU-style when banks fill and reload on demand.
+
+The register file is a compiler-managed resource: rows ``[0, load_region)``
+stage vector loads (leaf inputs + reloads), rows ``[load_region, R)`` hold
+per-bank allocated intermediates.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import defaultdict
+
+import numpy as np
+
+from ..processor.config import ProcessorConfig
+from ..program import TensorProgram
+from . import isa, regalloc, treepack
+
+_NOWHERE, _MEM, _REG, _PENDING = 0, 1, 2, 3
+_ALL_BANKS = -1  # write_res sentinel: vector load occupies every bank
+
+
+class _Scheduler:
+    def __init__(self, prog: TensorProgram, cfg: ProcessorConfig, *,
+                 load_region: int, candidate_scan: int, max_cycles: int):
+        self.prog, self.cfg = prog, cfg
+        self.load_region = load_region
+        self.candidate_scan = candidate_scan
+        self.max_cycles = max_cycles
+        m, n = prog.m, prog.n_ops
+        self.m, self.n = m, n
+        self.b, self.c, self.is_prod = prog.b, prog.c, prog.op_is_prod
+
+        # static analysis ------------------------------------------------
+        self.consumers: list[list[int]] = [[] for _ in range(m + n)]
+        for i in range(n):
+            self.consumers[self.b[i]].append(i)
+            self.consumers[self.c[i]].append(i)
+        self.refcnt = np.array([len(cs) for cs in self.consumers], np.int64)
+        self.root_op = prog.root_slot - m
+        assert self.root_op >= 0
+        self.refcnt[prog.root_slot] += 1          # epilogue store
+        self.height = np.ones(n, np.int64)
+        for j in range(n - 1, -1, -1):
+            for s in (self.b[j], self.c[j]):
+                if s >= m:
+                    self.height[s - m] = max(self.height[s - m],
+                                             self.height[j] + 1)
+
+        # leaf layout ------------------------------------------------------
+        (self.leaf_bank, self.leaf_row, self.n_in_rows,
+         self.images) = regalloc.layout_leaves(prog, cfg)
+
+        # value state ------------------------------------------------------
+        self.state = np.zeros(m + n, np.int8)
+        self.state[:m] = _MEM
+        self.reg_of: dict[int, tuple[int, int]] = {}
+        self.mem_of: dict[int, tuple[int, int]] = {
+            s: (int(self.leaf_row[s]), int(self.leaf_bank[s]))
+            for s in range(m)}
+        self.ready_cycle = np.full(m + n, 1 << 60, np.int64)
+
+        # op readiness -----------------------------------------------------
+        self.nmat = np.zeros(n, np.int32)
+        self.issued = np.zeros(n, bool)
+        self.ready_heap: list[tuple[int, int, int]] = []
+        self.active: dict[int, int] = {}
+
+        # load-region rows ---------------------------------------------------
+        self.loaded_row_of: dict[int, int] = {}     # reg row -> mem row
+        self.resident_mem_rows: set[int] = set()
+        self.row_live: dict[int, int] = defaultdict(int)
+        self.row_slots: dict[int, list[int]] = defaultdict(list)
+        self.free_load_rows = list(range(load_region - 1, -1, -1))
+        self.row_last_use: dict[int, int] = {}
+
+        # data-memory rows ---------------------------------------------------
+        self.mem_row_slots: dict[int, list[int]] = defaultdict(list)
+        for s in range(m):
+            self.mem_row_slots[int(self.leaf_row[s])].append(s)
+        self.mem_free_rows = list(range(cfg.data_mem_rows - 1,
+                                        self.n_in_rows - 1, -1))
+        self.want_rows: dict[int, int] = {}
+        # leaf-row prefetch order: by first consuming op
+        first_use = {}
+        for i in range(n):
+            for s in (self.b[i], self.c[i]):
+                if s < m:
+                    r = int(self.leaf_row[s])
+                    if r not in first_use:
+                        first_use[r] = i
+        self.prefetch = sorted(first_use, key=lambda r: first_use[r])
+        self.prefetch_ptr = 0
+
+        # intermediate registers ---------------------------------------------
+        self.bank_free: list[list[int]] = [
+            list(range(cfg.regs_per_bank - 1, load_region - 1, -1))
+            for _ in range(cfg.banks)]
+        self.cell_slot: dict[tuple[int, int], int] = {}
+        self.write_res: dict[int, set[int]] = defaultdict(set)
+        self.pending_rows: dict[int, int] = defaultdict(int)
+        self.pending_heap: list[tuple[int, int]] = []   # (commit, reg row)
+
+        self.instrs: list[isa.VLIWInstr] = []
+        self.t = 0
+        self.remaining = n
+        self.stats = {"stall_cycles": 0, "loads": 0, "stores": 0,
+                      "spills": 0, "evictions": 0, "max_live_regs": 0,
+                      "bundles": 0, "bundle_ops": 0}
+
+    # ---------------- value state helpers ------------------------------ #
+    def readable(self, s: int) -> bool:
+        # _PENDING becomes readable once its commit cycle has passed
+        return (self.state[s] in (_REG, _PENDING)
+                and self.ready_cycle[s] <= self.t)
+
+    def mat(self, s: int) -> bool:
+        return self.state[s] in (_REG, _PENDING)
+
+    def try_enqueue(self, i: int) -> None:
+        if self.issued[i] or self.nmat[i] < 2:
+            return
+        t_ready = max(self.ready_cycle[self.b[i]], self.ready_cycle[self.c[i]])
+        heapq.heappush(self.ready_heap,
+                       (int(t_ready), int(-self.height[i]), i))
+
+    def mark_materialized(self, s: int, bank: int, reg: int, at: int) -> None:
+        newly = not self.mat(s)
+        self.state[s] = _PENDING if at > self.t else _REG
+        self.reg_of[s] = (bank, reg)
+        self.ready_cycle[s] = at
+        if newly:
+            for i in self.consumers[s]:
+                if not self.issued[i]:
+                    self.nmat[i] += 1
+                    # one operand just arrived — pull the other from data
+                    # memory if that is where it lives
+                    other = int(self.c[i]) if int(self.b[i]) == s else int(self.b[i])
+                    if self.state[other] == _MEM and self.refcnt[other] > 0:
+                        self.want(other, int(self.height[i]))
+                    self.try_enqueue(i)
+
+    def unmaterialize(self, s: int) -> None:
+        if not self.mat(s):
+            return
+        self.state[s] = _MEM if s in self.mem_of else _NOWHERE
+        self.reg_of.pop(s, None)
+        self.ready_cycle[s] = 1 << 60
+        for i in self.consumers[s]:
+            if not self.issued[i]:
+                self.nmat[i] -= 1
+
+    def free_cell(self, s: int) -> None:
+        if s not in self.reg_of:
+            self.state[s] = _NOWHERE if s not in self.mem_of else self.state[s]
+            return
+        bank, reg = self.reg_of.pop(s)
+        if reg < self.load_region:
+            self.row_live[reg] -= 1
+        else:
+            self.bank_free[bank].append(reg)
+            self.cell_slot.pop((bank, reg), None)
+        self.state[s] = _NOWHERE
+        self.ready_cycle[s] = 1 << 60
+
+    def want(self, s: int, prio: int) -> None:
+        if s in self.mem_of and self.state[s] == _MEM:
+            row = self.mem_of[s][0]
+            if row not in self.resident_mem_rows:
+                self.want_rows[row] = max(self.want_rows.get(row, -1), prio)
+
+    # ---------------- memory ops ---------------------------------------- #
+    def evict_load_row(self) -> int | None:
+        best, best_key = None, None
+        for r, mrow in self.loaded_row_of.items():
+            if self.pending_rows[r]:
+                continue
+            key = (self.row_live[r], self.row_last_use.get(r, -1))
+            if best_key is None or key < best_key:
+                best, best_key = r, key
+        if best is None:
+            return None
+        for s in self.row_slots[best]:
+            if self.reg_of.get(s, (None, None))[1] == best:
+                self.unmaterialize(s)
+        self.row_slots[best] = []
+        self.row_live[best] = 0
+        self.resident_mem_rows.discard(self.loaded_row_of.pop(best))
+        self.stats["evictions"] += 1
+        return best
+
+    def issue_load(self, mrow: int) -> isa.MemInstr | None:
+        if mrow in self.resident_mem_rows:
+            self.want_rows.pop(mrow, None)
+            return None
+        if self.write_res[self.t + 1]:   # vload writes every bank at t+1
+            return None
+        if self.free_load_rows:
+            rrow = self.free_load_rows.pop()
+        else:
+            rrow = self.evict_load_row()
+            if rrow is None:
+                return None
+        self.loaded_row_of[rrow] = mrow
+        self.resident_mem_rows.add(mrow)
+        self.write_res[self.t + 1].add(_ALL_BANKS)
+        live = 0
+        for s in self.mem_row_slots[mrow]:
+            if self.refcnt[s] > 0 and not self.mat(s):
+                bank = self.mem_of[s][1]
+                self.mark_materialized(s, bank, rrow, self.t + 1)
+                self.row_slots[rrow].append(s)
+                live += 1
+        self.row_live[rrow] = live
+        self.want_rows.pop(mrow, None)
+        self.stats["loads"] += 1
+        return isa.MemInstr("load", mrow, rrow)
+
+    def spill_intermediate(self) -> isa.MemInstr | None:
+        if not self.mem_free_rows:
+            return None
+        rows_use: dict[int, list[int]] = defaultdict(list)
+        for (bank, reg), s in self.cell_slot.items():
+            rows_use[reg].append(s)
+        best, best_key = None, None
+        for reg, slots in rows_use.items():
+            if self.pending_rows[reg]:
+                continue
+            if any(self.ready_cycle[s] > self.t for s in slots):
+                continue
+            key = self.row_last_use.get(reg, 0)
+            if best_key is None or key < best_key:
+                best, best_key = reg, key
+        if best is None:
+            return None
+        mrow = self.mem_free_rows.pop()
+        for s in list(rows_use[best]):
+            bank, _ = self.reg_of[s]
+            self.free_cell(s)
+            self.unmaterialize(s)
+            self.mem_of[s] = (mrow, bank)
+            self.mem_row_slots[mrow].append(s)
+            self.state[s] = _MEM
+        self.stats["stores"] += 1
+        self.stats["spills"] += 1
+        return isa.MemInstr("store", mrow, best)
+
+    # ---------------- bundle issue --------------------------------------- #
+    def try_issue(self, op: int, tree: int, buddy: treepack.Buddy,
+                  ti: isa.TreeInstr, reads_cycle: dict[int, int]):
+        """Returns (issued op ids, pressure_flag)."""
+        m = self.m
+        maxd = buddy.max_depth()
+        if maxd < 1:
+            return [], False
+
+        def incl(j: int) -> bool:
+            return not self.issued[j]
+
+        grown = treepack.grow(op, maxd, b=self.b, c=self.c, m=m,
+                              readable=self.readable, includable=incl)
+        if grown is None:
+            # operand stuck in data memory? register a want so loads flow
+            for s in (int(self.b[op]), int(self.c[op])):
+                if self.state[s] == _MEM:
+                    self.want(s, int(self.height[op]))
+            return [], False
+        # climb: deepest packable ancestor gives bigger bundles; keep the
+        # whole history so crossbar/writeback conflicts can fall back to a
+        # smaller bundle instead of deferring the op entirely
+        history = [grown]
+        cur = op
+        improved = True
+        while improved and history[-1][1] < maxd:
+            improved = False
+            for j in self.consumers[m + cur]:
+                if self.issued[j]:
+                    continue
+                cand = treepack.grow(j, maxd, b=self.b, c=self.c, m=m,
+                                     readable=self.readable, includable=incl)
+                if cand and (treepack.count_ops(cand[0])
+                             > treepack.count_ops(history[-1][0])):
+                    history.append(cand)
+                    cur = j
+                    improved = True
+                    break
+
+        pressure_any = False
+        for tree_dict, depth in reversed(history):
+            res = self._attempt_bundle(tree_dict, max(depth, 1), tree,
+                                       buddy, ti, reads_cycle)
+            if res is None:
+                pressure_any = True
+                continue
+            if res:
+                return res, False
+
+        # persistent crossbar conflict: both operands of the op live in the
+        # same bank under different addresses — no schedule can ever read
+        # them together. Use the VLIW copy capability (read -> FWD -> write
+        # to another bank) to break the conflict; the op issues next cycle.
+        bs, cs = int(self.b[op]), int(self.c[op])
+        if (self.readable(bs) and self.readable(cs)
+                and bs in self.reg_of and cs in self.reg_of):
+            (bb, br), (cb, cr) = self.reg_of[bs], self.reg_of[cs]
+            if bb == cb and br != cr:
+                self._emit_copy(bs, cb, tree, buddy, ti, reads_cycle)
+        return [], pressure_any
+
+    def _emit_copy(self, slot: int, avoid_bank: int, tree: int,
+                   buddy: treepack.Buddy, ti: isa.TreeInstr,
+                   reads_cycle: dict[int, int]) -> bool:
+        """Move ``slot`` to a different bank via a FWD-only level-1 PE."""
+        src_bank, src_reg = self.reg_of[slot]
+        prev = reads_cycle.get(src_bank)
+        if prev is not None and prev != src_reg:
+            return False          # can't even read the source this cycle
+        commit = self.t + self.cfg.pe_latency
+        res = self.write_res[commit]
+        if _ALL_BANKS in res:
+            return False
+        tree_base = tree * self.cfg.banks_per_tree
+        tried: list[tuple[int, int]] = []
+        chosen = None
+        while True:
+            base = buddy.alloc(1)
+            if base is None:
+                break
+            p = base >> 1
+            banks = [tree_base + lb for lb in self.cfg.write_banks(1, p)]
+            good = [bk for bk in banks
+                    if bk != avoid_bank and bk != src_bank
+                    and self.bank_free[bk] and bk not in res]
+            if good:
+                chosen = (base, p, good[0])
+                break
+            tried.append((base, 1))
+        for (b0, d0) in tried:
+            buddy.free(b0, d0)
+        if chosen is None:
+            return False
+        base, p, bk = chosen
+        reg = self.bank_free[bk].pop()
+        port = base
+        ti.reads[port] = isa.ReadSrc(bank=src_bank, reg=src_reg)
+        reads_cycle[src_bank] = src_reg
+        ti.pe_ops[(1, p)] = isa.PE_FWD_A
+        ti.writes.append(isa.WriteBack(level=1, pos=p, bank=bk, reg=reg,
+                                       op_id=-1))
+        self.write_res[commit].add(bk)
+        # release the old cell and point the value at its new home
+        if src_reg < self.load_region:
+            self.row_live[src_reg] -= 1
+        else:
+            self.bank_free[src_bank].append(src_reg)
+            self.cell_slot.pop((src_bank, src_reg), None)
+        self.reg_of[slot] = (bk, reg)
+        self.ready_cycle[slot] = commit
+        self.state[slot] = _PENDING
+        self.cell_slot[(bk, reg)] = slot
+        self.pending_rows[reg] += 1
+        heapq.heappush(self.pending_heap, (commit, reg))
+        self.stats["copies"] = self.stats.get("copies", 0) + 1
+        return True
+
+    def _attempt_bundle(self, tree_dict, depth: int, tree: int,
+                        buddy: treepack.Buddy, ti: isa.TreeInstr,
+                        reads_cycle: dict[int, int]):
+        """Feasibility + commit for one grown bundle.
+
+        Returns issued ops on success, [] on structural conflict, None on
+        register pressure (spill wanted).
+        """
+        m = self.m
+        ops: list[int] = []
+        inside = defaultdict(int)
+        reads: dict[int, int] = {}   # slot -> None (set semantics)
+
+        def collect(nd):
+            if "val" in nd:
+                reads[nd["val"]] = None
+                return
+            ops.append(nd["op"])
+            for kid in (nd["l"], nd["r"]):
+                if "op" in kid:
+                    inside[kid["op"]] += 1
+                collect(kid)
+        collect(tree_dict)
+
+        # crossbar feasibility (≤1 address per bank per cycle, broadcast ok)
+        local_banks: dict[int, int] = {}
+        for s in reads:
+            bank, reg = self.reg_of[s]
+            prev = reads_cycle.get(bank, local_banks.get(bank))
+            if prev is not None and prev != reg:
+                return []
+            local_banks[bank] = reg
+
+        base = buddy.alloc(depth)
+        if base is None:
+            return []
+
+        def needs_wb(j: int) -> bool:
+            return self.refcnt[m + j] > inside[j]
+
+        bundle = treepack.place(tree, tree_dict, depth, base, needs_wb)
+
+        # writeback allocation — "in tandem with the placement": avoid the
+        # banks already holding the *other* operands of this value's future
+        # consumers, so the consumer's two reads land in different banks
+        wb_alloc: list[tuple[int, int, int, int, int]] = []  # lvl,pos,bank,reg,op
+        ok, pressure = True, False
+        for (level, pos, j) in bundle.writes:
+            commit = self.t + level * self.cfg.pe_latency
+            res = self.write_res[commit]
+            tree_base = tree * self.cfg.banks_per_tree
+            cands = [tree_base + lb for lb in self.cfg.write_banks(level, pos)]
+            usable = [bk for bk in cands
+                      if self.bank_free[bk] and bk not in res
+                      and _ALL_BANKS not in res]
+            if not usable:
+                ok = False
+                pressure = all(not self.bank_free[bk] for bk in cands)
+                break
+            avoid = set()
+            for k in self.consumers[m + j]:
+                if self.issued[k]:
+                    continue
+                for s2 in (int(self.b[k]), int(self.c[k])):
+                    if s2 != m + j and s2 in self.reg_of:
+                        avoid.add(self.reg_of[s2][0])
+            preferred = [bk for bk in usable if bk not in avoid] or usable
+            bk = max(preferred, key=lambda x: len(self.bank_free[x]))
+            reg = self.bank_free[bk].pop()
+            wb_alloc.append((level, pos, bk, reg, j))
+        if not ok:
+            for (_, _, bk, reg, _) in wb_alloc:
+                self.bank_free[bk].append(reg)
+            buddy.free(base, depth)
+            return None if pressure else []
+
+        # ---- commit the bundle ----
+        for port, s in bundle.reads.items():
+            bank, reg = self.reg_of[s]
+            ti.reads[port] = isa.ReadSrc(bank=bank, reg=reg)
+            reads_cycle[bank] = reg
+            if reg < self.load_region:
+                self.row_last_use[reg] = self.t
+        for (lvlpos, opid) in bundle.nodes.items():
+            ti.pe_ops[lvlpos] = (isa.PE_MUL if self.is_prod[opid]
+                                 else isa.PE_ADD)
+        for lvlpos, code in bundle.fwds.items():
+            ti.pe_ops[lvlpos] = code
+        for (level, pos, bk, reg, j) in wb_alloc:
+            commit = self.t + level * self.cfg.pe_latency
+            ti.writes.append(isa.WriteBack(level=level, pos=pos, bank=bk,
+                                           reg=reg, op_id=j))
+            self.write_res[commit].add(bk)
+            self.cell_slot[(bk, reg)] = m + j
+            self.mark_materialized(m + j, bk, reg, commit)
+            self.pending_rows[reg] += 1
+            heapq.heappush(self.pending_heap, (commit, reg))
+        ti.op_ids.extend(ops)
+        self.stats["bundles"] += 1
+        self.stats["bundle_ops"] += len(ops)
+        return ops
+
+    # ---------------- main loop ------------------------------------------ #
+    def run(self) -> isa.VLIWProgram:
+        cfg, prog, m = self.cfg, self.prog, self.m
+        stalled = 0
+        while self.remaining > 0:
+            if self.t >= self.max_cycles:
+                raise RuntimeError(
+                    f"exceeded {self.max_cycles} cycles; "
+                    f"{self.remaining}/{self.n} ops left")
+            t = self.t
+            while self.pending_heap and self.pending_heap[0][0] <= t:
+                _, reg = heapq.heappop(self.pending_heap)
+                self.pending_rows[reg] -= 1
+            # activate ready ops
+            while self.ready_heap and self.ready_heap[0][0] <= t:
+                _, negh, i = heapq.heappop(self.ready_heap)
+                if self.issued[i]:
+                    continue
+                if self.nmat[i] < 2:
+                    # an operand was evicted/spilled back to memory since
+                    # enqueue: request its row; the op re-enqueues via
+                    # mark_materialized when the load lands
+                    for s in (int(self.b[i]), int(self.c[i])):
+                        if self.state[s] == _MEM and self.refcnt[s] > 0:
+                            self.want(s, int(self.height[i]))
+                    continue
+                self.active[i] = negh
+
+            tree_instrs: list[isa.TreeInstr | None] = [None] * cfg.num_trees
+            reads_cycle: dict[int, int] = {}
+            issued_now: list[int] = []
+            need_spill = False
+
+            cand = sorted(self.active.items(), key=lambda kv: kv[1])
+            for tree in range(cfg.num_trees):
+                buddy = treepack.Buddy(cfg.tree_levels)
+                ti = isa.TreeInstr(tree=tree)
+                scanned = 0
+                for op, _ in cand:
+                    if buddy.max_depth() < 1 or scanned >= self.candidate_scan:
+                        break
+                    if self.issued[op]:
+                        continue
+                    scanned += 1
+                    ops, pressure = self.try_issue(op, tree, buddy, ti,
+                                                   reads_cycle)
+                    need_spill |= pressure
+                    for j in ops:
+                        self.issued[j] = True
+                        issued_now.append(j)
+                if ti.op_ids or ti.writes:
+                    tree_instrs[tree] = ti
+                cand = [(o, p) for (o, p) in cand if not self.issued[o]]
+
+            # memory slot: spill > wanted reload > leaf prefetch
+            mem_instr = None
+            if need_spill:
+                mem_instr = self.spill_intermediate()
+            if mem_instr is None and self.want_rows:
+                row = max(self.want_rows.items(), key=lambda kv: kv[1])[0]
+                mem_instr = self.issue_load(row)
+            if mem_instr is None and not self.write_res[t + 1]:
+                while self.prefetch_ptr < len(self.prefetch):
+                    row = self.prefetch[self.prefetch_ptr]
+                    if row in self.resident_mem_rows:
+                        self.prefetch_ptr += 1
+                        continue
+                    # only prefetch if a clean row is free (don't thrash)
+                    if self.free_load_rows:
+                        mem_instr = self.issue_load(row)
+                        if mem_instr:
+                            self.prefetch_ptr += 1
+                    break
+
+            # bookkeeping for issued ops
+            for op in issued_now:
+                self.active.pop(op, None)
+                self.remaining -= 1
+                for s in (int(self.b[op]), int(self.c[op])):
+                    self.refcnt[s] -= 1
+            for op in issued_now:
+                for s in (int(self.b[op]), int(self.c[op])):
+                    if self.refcnt[s] == 0:
+                        self.free_cell(s)
+                        self.refcnt[s] = -1   # freed once
+
+            self.instrs.append(isa.VLIWInstr(trees=tree_instrs, mem=mem_instr))
+            copies_done = any(ti and ti.writes and not ti.op_ids
+                              for ti in tree_instrs)
+            if not issued_now and mem_instr is None and not copies_done:
+                self.stats["stall_cycles"] += 1
+                stalled += 1
+                if stalled > 256 + cfg.tree_levels:
+                    raise RuntimeError(
+                        f"deadlock at cycle {t}: {self.remaining} ops left, "
+                        f"active={len(self.active)} wants={len(self.want_rows)}")
+            elif not issued_now:
+                # copies/loads alone are progress only for a bounded while —
+                # a machine too small to ever issue must fail loudly, not spin
+                stalled += 1
+                if stalled > 4096:
+                    raise RuntimeError(
+                        f"live-lock at cycle {t}: memory traffic but no op "
+                        f"issued for {stalled} cycles; {self.remaining} ops "
+                        f"left (machine too small for this program?)")
+            else:
+                stalled = 0
+            self.t += 1
+            self.write_res.pop(t, None)
+
+        # epilogue: wait for root commit, store its row
+        root_slot = prog.root_slot
+        t_end = int(self.ready_cycle[root_slot])
+        while self.t < t_end:
+            self.instrs.append(isa.VLIWInstr(trees=[None] * cfg.num_trees))
+            self.t += 1
+        root_bank, root_reg = self.reg_of[root_slot]
+        out_row = self.mem_free_rows.pop() if self.mem_free_rows else cfg.data_mem_rows - 1
+        self.instrs.append(isa.VLIWInstr(
+            trees=[None] * cfg.num_trees,
+            mem=isa.MemInstr("store", out_row, root_reg)))
+        self.stats["stores"] += 1
+        self.t += 1
+
+        self.stats["cycles"] = self.t
+        self.stats["n_in_rows"] = self.n_in_rows
+        self.stats["ops_per_cycle"] = self.n / self.t
+        return isa.VLIWProgram(
+            instrs=self.instrs,
+            input_rows=self.n_in_rows,
+            input_layout=[(int(self.leaf_row[s]), int(self.leaf_bank[s]))
+                          for s in range(prog.m_ind)],
+            const_rows={r: self.images[r].tolist()
+                        for r in range(self.n_in_rows)},
+            root_loc=(out_row, root_bank),
+            n_useful_ops=self.n,
+            stats=dict(self.stats))
+
+
+def compile_program(prog: TensorProgram, cfg: ProcessorConfig, *,
+                    load_region: int = 16, candidate_scan: int = 24,
+                    max_cycles: int = 4_000_000) -> isa.VLIWProgram:
+    # the load region stages vector rows; it must leave intermediate
+    # registers in every bank or no op output can ever be written back
+    load_region = max(1, min(load_region, cfg.regs_per_bank // 2))
+    return _Scheduler(prog, cfg, load_region=load_region,
+                      candidate_scan=candidate_scan,
+                      max_cycles=max_cycles).run()

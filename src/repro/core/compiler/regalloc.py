@@ -1,0 +1,61 @@
+"""Register-bank allocation helpers (paper §IV: "The compiler allocates
+register banks ... while trying to minimize the register read/write bank
+conflicts").
+
+Leaf inputs live in data memory as 32-wide vector rows; the *bank* a leaf
+lands in is a compiler choice. Two leaves that are operands of the same op
+are read in the same cycle, so same-bank placement is a crossbar conflict —
+exactly the structure the paper attacks with graph coloring on the GPU.
+We greedy-color the leaf conflict graph onto banks, balancing bank loads
+(row count = max per-bank load, and rows are what vector loads move).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+from ..program import TensorProgram
+from ..processor.config import ProcessorConfig
+
+
+def layout_leaves(prog: TensorProgram, cfg: ProcessorConfig):
+    """Color leaf slots onto banks; returns (bank_of, row_of, n_rows, images).
+
+    ``images`` is the (n_rows, banks) float32 constant image of the input
+    region of data memory: parameter values baked in, indicator cells 0.
+    """
+    m = prog.m
+    conflicts: dict[int, set[int]] = defaultdict(set)
+    for i in range(prog.n_ops):
+        b, c = int(prog.b[i]), int(prog.c[i])
+        if b < m and c < m and b != c:
+            conflicts[b].add(c)
+            conflicts[c].add(b)
+
+    order = sorted(range(m), key=lambda s: -len(conflicts.get(s, ())))
+    bank_of = np.full(m, -1, np.int32)
+    load = np.zeros(cfg.banks, np.int64)
+    for s in order:
+        banned = {int(bank_of[x]) for x in conflicts.get(s, ()) if bank_of[x] >= 0}
+        # least-loaded bank, strongly preferring conflict-free ones
+        best, best_key = 0, None
+        for bk in range(cfg.banks):
+            key = (bk in banned, int(load[bk]))
+            if best_key is None or key < best_key:
+                best, best_key = bk, key
+        bank_of[s] = best
+        load[best] += 1
+
+    row_of = np.zeros(m, np.int32)
+    counter = np.zeros(cfg.banks, np.int64)
+    for s in range(m):
+        bk = int(bank_of[s])
+        row_of[s] = counter[bk]
+        counter[bk] += 1
+    n_rows = int(counter.max()) if m else 0
+
+    images = np.zeros((n_rows, cfg.banks), np.float32)
+    for s in range(prog.m_ind, m):  # parameter leaves: bake values
+        images[int(row_of[s]), int(bank_of[s])] = prog.param_values[s - prog.m_ind]
+    return bank_of, row_of, n_rows, images

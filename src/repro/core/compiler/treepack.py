@@ -1,0 +1,151 @@
+"""PE-tree bundle packing (paper §IV: "trees of PEs that enable local reuse
+of data, by avoiding frequent writebacks to the register file").
+
+A *bundle* maps a subtree of SPN ops onto one PE tree for one issue slot:
+producers feed consumers directly through the pipelined tree, so values
+consumed only inside the bundle never touch the register file. Operands
+that are already-computed values enter at the crossbar leaf ports and ride
+up through PEs in *forward* mode.
+
+Positions: at tree level ℓ (1 = bottom) position ``p`` covers leaf ports
+``[p·2^ℓ, (p+1)·2^ℓ)``. A depth-``d`` bundle owns an aligned block of
+``2^d`` leaf ports handed out by a per-cycle buddy allocator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from . import isa
+
+
+@dataclasses.dataclass
+class Bundle:
+    tree: int
+    depth: int
+    base_port: int                      # aligned block start (tree-local)
+    # op placement: (level, global pos within tree) -> op id
+    nodes: dict[tuple[int, int], int]
+    # forward chains: (level, pos) -> PE_FWD_A (value rides leftmost edge)
+    fwds: dict[tuple[int, int], int]
+    # crossbar reads: port (tree-local) -> value slot
+    reads: dict[int, int]
+    # ops that need a register writeback: list of (level, pos, op_id)
+    writes: list[tuple[int, int, int]]
+    ops: list[int]                      # all op ids included (useful ops)
+
+
+class Buddy:
+    """Per-cycle buddy allocator over one tree's 2^L leaf ports."""
+
+    def __init__(self, levels: int):
+        self.levels = levels
+        self.blocks: dict[int, set[int]] = {l: set() for l in range(levels + 1)}
+        self.blocks[levels].add(0)
+
+    def max_depth(self) -> int:
+        for l in range(self.levels, -1, -1):
+            if self.blocks[l]:
+                return l
+        return -1
+
+    def alloc(self, depth: int) -> int | None:
+        for l in range(depth, self.levels + 1):
+            if self.blocks[l]:
+                base = min(self.blocks[l])
+                self.blocks[l].remove(base)
+                # split down to requested depth
+                while l > depth:
+                    l -= 1
+                    self.blocks[l].add(base + (1 << l))
+                return base
+        return None
+
+    def free(self, base: int, depth: int) -> None:
+        """Return a block (no buddy-merging; fine within one cycle)."""
+        self.blocks[depth].add(base)
+
+
+def grow(root_op: int, max_depth: int, *,
+         b, c, m: int,
+         readable: Callable[[int], bool],
+         includable: Callable[[int], bool]) -> tuple[dict, int] | None:
+    """Try to build the op subtree rooted at ``root_op``.
+
+    Returns ``(tree, depth)`` or None if infeasible. Tree representation:
+    nested dict ``{"op": op_id, "l": left, "r": right}`` with leaves
+    ``{"val": slot}``. An operand that is an unmaterialized op MUST be
+    included (otherwise the bundle cannot issue); if it cannot be included
+    within the depth budget the whole bundle fails. Each op is included at
+    most once per bundle (DAG diamonds fall back to a register read of the
+    already-scheduled value, or defer the bundle).
+    """
+    claimed: set[int] = set()
+
+    def rec(op: int, budget: int):
+        if budget < 1 or op in claimed:
+            return None
+        snap = set(claimed)
+        claimed.add(op)
+        kids = []
+        for s in (int(b[op]), int(c[op])):
+            sub = None
+            if s >= m and (s - m) not in claimed and includable(s - m):
+                sub = rec(s - m, budget - 1)  # restores claims on failure
+            if sub is not None:
+                kids.append(sub)
+            elif readable(s):
+                kids.append({"val": s})
+            else:
+                claimed.clear()
+                claimed.update(snap)
+                return None
+        return {"op": op, "l": kids[0], "r": kids[1]}
+
+    tree = rec(root_op, max_depth)
+    if tree is None:
+        return None
+    return tree, _depth(tree)
+
+
+def _depth(tree: dict) -> int:
+    if "val" in tree:
+        return 0
+    return 1 + max(_depth(tree["l"]), _depth(tree["r"]))
+
+
+def place(tree_id: int, tree: dict, depth: int, base_port: int,
+          needs_wb: Callable[[int], bool]) -> Bundle:
+    """Assign tree slots/ports for a grown subtree of ``depth`` at ``base_port``."""
+    bundle = Bundle(tree=tree_id, depth=depth, base_port=base_port,
+                    nodes={}, fwds={}, reads={}, writes=[], ops=[])
+
+    def assign(node: dict, level: int, pos: int) -> None:
+        # ``pos`` is the global position at ``level`` (port block = pos·2^level)
+        if "val" in node:
+            port = pos * (1 << level)
+            # record read; forward chain from port up to (level, pos)
+            prev = bundle.reads.get(port)
+            assert prev is None or prev == node["val"]
+            bundle.reads[port] = node["val"]
+            for l in range(1, level + 1):
+                bundle.fwds[(l, port >> l)] = isa.PE_FWD_A
+            return
+        op = node["op"]
+        bundle.nodes[(level, pos)] = op
+        bundle.ops.append(op)
+        assign(node["l"], level - 1, pos * 2)
+        assign(node["r"], level - 1, pos * 2 + 1)
+
+    root_pos = base_port >> depth
+    assign(tree, depth, root_pos)
+    for (level, pos), op in bundle.nodes.items():
+        if needs_wb(op):
+            bundle.writes.append((level, pos, op))
+    return bundle
+
+
+def count_ops(tree: dict) -> int:
+    if "val" in tree:
+        return 0
+    return 1 + count_ops(tree["l"]) + count_ops(tree["r"])

@@ -1,0 +1,80 @@
+"""Serialization of SPNs in a simple `.ac` (arithmetic circuit) text format.
+
+Line-oriented, one node per line, children-before-parents:
+
+    ind <var> <value>
+    param <float>
+    sum <k> <child...> [w <weight...>]
+    prod <k> <child...>
+    root <node-id>          (last line)
+
+This mirrors the AC files emitted by PSDD/AC learning tools (paper ref
+[5]) closely enough that real circuit files are a small shim away.
+"""
+from __future__ import annotations
+
+import io as _io
+
+from .spn import LEAF_IND, LEAF_PARAM, PROD, SUM, SPN, SPNBuilder
+
+
+def dumps(spn: SPN) -> str:
+    out = _io.StringIO()
+    for i in range(spn.num_nodes):
+        t = spn.node_type[i]
+        if t == LEAF_IND:
+            out.write(f"ind {int(spn.leaf_var[i])} {int(spn.leaf_value[i])}\n")
+        elif t == LEAF_PARAM:
+            out.write(f"param {float(spn.param_value[i])!r}\n")
+        elif t == SUM:
+            ch = " ".join(map(str, spn.children[i]))
+            w = spn.weights[i]
+            if w is None:
+                out.write(f"sum {len(spn.children[i])} {ch}\n")
+            else:
+                ws = " ".join(repr(float(x)) for x in w)
+                out.write(f"sum {len(spn.children[i])} {ch} w {ws}\n")
+        else:
+            ch = " ".join(map(str, spn.children[i]))
+            out.write(f"prod {len(spn.children[i])} {ch}\n")
+    out.write(f"root {spn.root}\n")
+    return out.getvalue()
+
+
+def loads(text: str) -> SPN:
+    b = SPNBuilder()
+    root = None
+    for line in text.strip().splitlines():
+        tok = line.split()
+        if not tok:
+            continue
+        kind = tok[0]
+        if kind == "ind":
+            b.indicator(int(tok[1]), int(tok[2]))
+        elif kind == "param":
+            b.param(float(tok[1]))
+        elif kind == "sum":
+            k = int(tok[1])
+            ch = [int(x) for x in tok[2: 2 + k]]
+            w = None
+            if len(tok) > 2 + k and tok[2 + k] == "w":
+                w = [float(x) for x in tok[3 + k: 3 + k + k]]
+            b.sum(ch, w)
+        elif kind == "prod":
+            k = int(tok[1])
+            b.product([int(x) for x in tok[2: 2 + k]])
+        elif kind == "root":
+            root = int(tok[1])
+        else:
+            raise ValueError(f"bad .ac line: {line!r}")
+    return b.build(root)
+
+
+def save(spn: SPN, path: str) -> None:
+    with open(path, "w") as f:
+        f.write(dumps(spn))
+
+
+def load(path: str) -> SPN:
+    with open(path) as f:
+        return loads(f.read())

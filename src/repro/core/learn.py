@@ -1,0 +1,326 @@
+"""SPN structure + parameter learning.
+
+Two structure learners, mirroring how the paper's benchmark SPNs arise
+("SPNs trained on a suite of standard benchmarks [3], [7] using the
+algorithm in [5]"):
+
+- :func:`random_spn` — RAT-SPN-style random region-graph structure
+  (random variable partitions, sums over cross-products of sub-regions),
+- :func:`learn_spn` — LearnSPN-lite over binary data: recursive
+  independence splits (pairwise MI + connected components → product) and
+  row clustering (→ mixture sum).
+
+Parameter learning:
+
+- :func:`em_step` / :func:`fit_em` — soft-count EM on sum weights (exact
+  SPN EM via the gradient identity n_k = w_k · ∂logP/∂w_k),
+- :func:`fit_sgd` — Adam on per-sum softmax logits (maximum likelihood),
+  differentiating straight through the leveled log-domain executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import executors, program
+from .spn import SPN, SPNBuilder
+
+
+# --------------------------------------------------------------------------- #
+# random (RAT-style) structure
+# --------------------------------------------------------------------------- #
+def random_spn(num_vars: int, *, depth: int = 3, num_sums: int = 4,
+               num_input_dists: int = 4, repetitions: int = 2,
+               seed: int = 0) -> SPN:
+    """Random region-graph SPN over ``num_vars`` binary variables.
+
+    Each *region* (variable subset) carries ``num_sums`` mixture nodes;
+    a region is split into two random halves whose node sets combine via
+    cross-products. Leaves are Bernoulli distributions (sum over the two
+    indicators). ``repetitions`` independent region graphs are mixed at
+    the root (the RAT-SPN construction).
+    """
+    rng = np.random.default_rng(seed)
+    b = SPNBuilder()
+    ind = [[b.indicator(v, 1), b.indicator(v, 0)] for v in range(num_vars)]
+
+    def leaf_nodes(v: int, k: int) -> list[int]:
+        out = []
+        for _ in range(k):
+            p = float(rng.uniform(0.05, 0.95))
+            out.append(b.sum(ind[v], [p, 1.0 - p]))
+        return out
+
+    def region(scope: np.ndarray, d: int, k: int) -> list[int]:
+        if len(scope) == 1:
+            return leaf_nodes(int(scope[0]), k)
+        if d <= 0:
+            # factorize fully: product of Bernoullis, k mixture components
+            out = []
+            for _ in range(k):
+                parts = [leaf_nodes(int(v), 1)[0] for v in scope]
+                out.append(b.product(parts))
+            return out
+        perm = rng.permutation(scope)
+        left, right = perm[: len(perm) // 2], perm[len(perm) // 2:]
+        ln = region(left, d - 1, k)
+        rn = region(right, d - 1, k)
+        prods = [b.product([l, r]) for l in ln for r in rn]
+        out = []
+        for _ in range(k):
+            take = rng.choice(len(prods), size=min(len(prods), 2 * k), replace=False)
+            w = rng.dirichlet(np.ones(len(take)))
+            out.append(b.sum([prods[t] for t in take], w.tolist()))
+        return out
+
+    roots = []
+    for _ in range(repetitions):
+        roots.extend(region(np.arange(num_vars), depth, num_sums))
+    w = rng.dirichlet(np.ones(len(roots)))
+    root = b.sum(roots, w.tolist())
+    return b.build(root)
+
+
+# --------------------------------------------------------------------------- #
+# LearnSPN-lite
+# --------------------------------------------------------------------------- #
+def _mutual_info(data: np.ndarray, alpha: float = 0.1) -> np.ndarray:
+    """Pairwise MI matrix for binary data (Laplace-smoothed)."""
+    n, d = data.shape
+    x = data.astype(np.float64)
+    p1 = (x.sum(0) + 2 * alpha) / (n + 4 * alpha)
+    p11 = (x.T @ x + alpha) / (n + 4 * alpha)
+    mi = np.zeros((d, d))
+    for a in range(2):
+        pa = p1 if a else 1 - p1
+        for bb in range(2):
+            pb = p1 if bb else 1 - p1
+            if a and bb:
+                pj = p11
+            elif a and not bb:
+                pj = p1[:, None] - p11
+            elif not a and bb:
+                pj = p1[None, :] - p11
+            else:
+                pj = 1 - p1[:, None] - p1[None, :] + p11
+            pj = np.clip(pj, 1e-12, 1)
+            mi += pj * np.log(pj / np.clip(pa[:, None] * pb[None, :], 1e-12, 1))
+    np.fill_diagonal(mi, 0)
+    return mi
+
+
+def _components(adj: np.ndarray) -> list[np.ndarray]:
+    d = adj.shape[0]
+    seen = np.zeros(d, bool)
+    comps = []
+    for s in range(d):
+        if seen[s]:
+            continue
+        stack, comp = [s], []
+        seen[s] = True
+        while stack:
+            u = stack.pop()
+            comp.append(u)
+            for v in np.flatnonzero(adj[u]):
+                if not seen[v]:
+                    seen[v] = True
+                    stack.append(v)
+        comps.append(np.asarray(sorted(comp)))
+    return comps
+
+
+def _cluster_rows(data: np.ndarray, rng: np.random.Generator, k: int = 2,
+                  iters: int = 8) -> np.ndarray:
+    """k-means on binary rows (Hamming); returns cluster labels."""
+    n = data.shape[0]
+    cent = data[rng.choice(n, size=k, replace=False)].astype(np.float64)
+    lab = np.zeros(n, np.int64)
+    for _ in range(iters):
+        dist = np.abs(data[:, None, :] - cent[None, :, :]).sum(-1)
+        lab = dist.argmin(1)
+        for j in range(k):
+            sel = data[lab == j]
+            if len(sel):
+                cent[j] = sel.mean(0)
+    return lab
+
+
+def hmm_spn(num_vars: int, *, n_states: int = 4, seed: int = 0) -> SPN:
+    """HMM as an SPN (forward algorithm unrolled) — a DEEP, narrow circuit.
+
+    The paper's benchmark circuits (decision-tree Markov nets [7] compiled
+    with [5]) are deep and narrow, unlike LearnSPN's wide mixtures; this
+    generator produces that regime: depth grows linearly in ``num_vars``.
+    """
+    rng = np.random.default_rng(seed)
+    b = SPNBuilder()
+    K = n_states
+    ind = [[b.indicator(v, 1), b.indicator(v, 0)] for v in range(num_vars)]
+
+    def emission(v: int, k: int) -> int:
+        p = float(rng.uniform(0.1, 0.9))
+        return b.sum(ind[v], [p, 1.0 - p])
+
+    pi = rng.dirichlet(np.ones(K))
+    alpha = [b.product([b.sum([emission(0, k)], [1.0]), ])
+             for k in range(K)]
+    # weight initial states: alpha_k = pi_k * P(x_0|k)
+    alpha = [b.sum([a], [float(pi[k])]) for k, a in enumerate(alpha)]
+    for t in range(1, num_vars):
+        A = rng.dirichlet(np.ones(K), size=K)      # transition rows
+        new = []
+        for k in range(K):
+            mix = b.sum(alpha, [float(A[j][k]) for j in range(K)])
+            new.append(b.product([mix, emission(t, k)]))
+        alpha = new
+    root = b.sum(alpha, [1.0 / K] * K)
+    return b.build(root)
+
+
+def learn_spn(data: np.ndarray, *, mi_threshold: float = 0.02,
+              min_instances: int = 40, max_depth: int = 20,
+              alpha: float = 0.2, seed: int = 0) -> SPN:
+    """LearnSPN-lite on binary ``data`` (rows = samples)."""
+    rng = np.random.default_rng(seed)
+    b = SPNBuilder()
+    num_vars = data.shape[1]
+    ind = [[b.indicator(v, 1), b.indicator(v, 0)] for v in range(num_vars)]
+
+    def bern(rows: np.ndarray, v: int) -> int:
+        p = float((rows.sum() + alpha) / (len(rows) + 2 * alpha))
+        return b.sum(ind[v], [p, 1.0 - p])
+
+    def factorized(rows: np.ndarray, scope: np.ndarray) -> int:
+        parts = [bern(rows[:, j], int(scope[j])) for j in range(len(scope))]
+        return parts[0] if len(parts) == 1 else b.product(parts)
+
+    def rec(rows: np.ndarray, scope: np.ndarray, depth: int, try_split: bool) -> int:
+        if len(scope) == 1:
+            return bern(rows[:, 0], int(scope[0]))
+        if len(rows) < min_instances or depth >= max_depth:
+            return factorized(rows, scope)
+        if try_split:
+            mi = _mutual_info(rows)
+            comps = _components(mi > mi_threshold)
+            if len(comps) > 1:
+                parts = [rec(rows[:, comp], scope[comp], depth + 1, False)
+                         for comp in comps]
+                return b.product(parts)
+        lab = _cluster_rows(rows, rng)
+        groups = [np.flatnonzero(lab == j) for j in range(lab.max() + 1)]
+        groups = [g for g in groups if len(g) > 0]
+        if len(groups) < 2:  # clustering failed to split
+            return factorized(rows, scope)
+        parts = [rec(rows[g], scope, depth + 1, True) for g in groups]
+        w = [(len(g) + alpha) / (len(rows) + alpha * len(groups)) for g in groups]
+        s = sum(w)
+        return b.sum(parts, [wi / s for wi in w])
+
+    root = rec(data, np.arange(num_vars), 0, True)
+    return b.build(root)
+
+
+# --------------------------------------------------------------------------- #
+# parameter learning
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ParamState:
+    """Learnable view of a program's parameters (sum weights only move)."""
+    prog: program.TensorProgram
+    params: jnp.ndarray         # (m_param,) current parameter leaf values
+    group_idx: jnp.ndarray      # (m_param,) group id per param (-1 = frozen)
+    num_groups: int
+
+    @classmethod
+    def init(cls, prog: program.TensorProgram) -> "ParamState":
+        gidx = np.full(prog.m_param, -1, np.int32)
+        for g, idx in enumerate(prog.sum_weight_groups):
+            gidx[idx] = g
+        return cls(prog=prog, params=jnp.asarray(prog.param_values, jnp.float32),
+                   group_idx=jnp.asarray(gidx),
+                   num_groups=len(prog.sum_weight_groups))
+
+
+def _group_normalize(params: jnp.ndarray, group_idx: jnp.ndarray,
+                     num_groups: int) -> jnp.ndarray:
+    """Renormalize each sum's weights to 1 (frozen params pass through)."""
+    grp = jnp.where(group_idx < 0, num_groups, group_idx)
+    totals = jnp.zeros(num_groups + 1, params.dtype).at[grp].add(params)
+    denom = jnp.where(group_idx < 0, 1.0, totals[grp])
+    return params / jnp.maximum(denom, 1e-30)
+
+
+def em_step(state: ParamState, leaf_ind: jnp.ndarray) -> tuple[ParamState, float]:
+    """One exact EM step on sum weights; returns (new state, mean LL)."""
+    def total_ll(p):
+        return executors.eval_leveled(state.prog, leaf_ind, p, True).sum()
+
+    ll, g = jax.value_and_grad(total_ll)(state.params)
+    counts = state.params * g                      # n_k = w_k · Σ ∂logP/∂w_k
+    counts = jnp.where(state.group_idx >= 0, jnp.maximum(counts, 1e-8),
+                       state.params)
+    new = _group_normalize(counts, state.group_idx, state.num_groups)
+    new_state = dataclasses.replace(state, params=new)
+    return new_state, float(ll) / leaf_ind.shape[0]
+
+
+def fit_em(prog: program.TensorProgram, X: np.ndarray, *, iters: int = 20,
+           verbose: bool = False) -> tuple[ParamState, list[float]]:
+    state = ParamState.init(prog)
+    leaf_ind = jnp.asarray(prog.leaves_from_evidence(X), jnp.float32)
+    hist = []
+    for it in range(iters):
+        state, ll = em_step(state, leaf_ind)
+        hist.append(ll)
+        if verbose:
+            print(f"EM iter {it:3d}  mean LL {ll:.4f}")
+    return state, hist
+
+
+def fit_sgd(prog: program.TensorProgram, X: np.ndarray, *, steps: int = 200,
+            lr: float = 5e-2, batch_size: int = 256, seed: int = 0,
+            verbose: bool = False) -> tuple[ParamState, list[float]]:
+    """Adam on per-sum softmax logits, through the log-domain executor."""
+    state = ParamState.init(prog)
+    gi, ng = state.group_idx, state.num_groups
+    logits0 = jnp.log(jnp.maximum(state.params, 1e-6))
+
+    def to_params(logits):
+        # stable per-group softmax via exp + group normalize
+        grp = jnp.where(gi < 0, ng, gi)
+        gmax = jnp.full(ng + 1, -jnp.inf).at[grp].max(logits)
+        z = jnp.exp(logits - gmax[grp])
+        z = jnp.where(gi < 0, state.params, z)
+        return _group_normalize(z, gi, ng)
+
+    def loss_fn(logits, li):
+        return -executors.eval_leveled(prog, li, to_params(logits), True).mean()
+
+    @jax.jit
+    def step(logits, mom, vel, t, li):
+        loss, g = jax.value_and_grad(loss_fn)(logits, li)
+        mom = 0.9 * mom + 0.1 * g
+        vel = 0.999 * vel + 0.001 * g * g
+        mh = mom / (1 - 0.9 ** t)
+        vh = vel / (1 - 0.999 ** t)
+        logits = logits - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return logits, mom, vel, loss
+
+    rng = np.random.default_rng(seed)
+    leaf_all = prog.leaves_from_evidence(X)
+    logits = logits0
+    mom = jnp.zeros_like(logits)
+    vel = jnp.zeros_like(logits)
+    hist = []
+    for t in range(1, steps + 1):
+        sel = rng.choice(len(X), size=min(batch_size, len(X)), replace=False)
+        li = jnp.asarray(leaf_all[sel], jnp.float32)
+        logits, mom, vel, loss = step(logits, mom, vel, t, li)
+        hist.append(-float(loss))
+        if verbose and t % 50 == 0:
+            print(f"SGD step {t:4d}  mean LL {-float(loss):.4f}")
+    final = dataclasses.replace(state, params=to_params(logits))
+    return final, hist

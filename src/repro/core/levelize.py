@@ -1,0 +1,64 @@
+"""Group decomposition of SPN op graphs (paper fig. 2a).
+
+Nodes in a *group* (topological level) are mutually independent, so they can
+execute on any thread / PE / vector lane without synchronization; barriers
+are only needed between groups.  This is the scheduling substrate shared by
+the paper's GPU baseline, the custom processor compiler and the TPU
+executors.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def op_levels(b: np.ndarray, c: np.ndarray, m: int) -> np.ndarray:
+    """ASAP level of each binary op.
+
+    Ops are indexed 0..n-1 producing slots m..m+n-1; operands ``b``/``c``
+    reference earlier slots (leaf slots < m are level 0).
+    """
+    n = len(b)
+    lvl = np.zeros(n, dtype=np.int32)
+    for i in range(n):
+        lb = lvl[b[i] - m] if b[i] >= m else 0
+        lc = lvl[c[i] - m] if c[i] >= m else 0
+        lvl[i] = max(lb, lc) + 1
+    return lvl
+
+
+def alap_levels(b: np.ndarray, c: np.ndarray, m: int, n_levels: int | None = None) -> np.ndarray:
+    """ALAP level of each op (latest level that still meets dependents)."""
+    n = len(b)
+    asap = op_levels(b, c, m)
+    depth = int(asap.max()) if n else 0
+    n_levels = depth if n_levels is None else n_levels
+    alap = np.full(n, n_levels, dtype=np.int32)
+    for i in range(n - 1, -1, -1):
+        for o in (b[i], c[i]):
+            if o >= m:
+                alap[o - m] = min(alap[o - m], alap[i] - 1)
+    return alap
+
+
+def level_sort(b: np.ndarray, c: np.ndarray, m: int):
+    """Renumber ops so each level's outputs occupy contiguous slots.
+
+    Returns ``(perm, new_b, new_c, level_offsets)`` where ``perm[j]`` is the
+    original op index of the new op ``j`` and ``level_offsets`` has length
+    ``num_levels+1`` delimiting ops per level in the new order.
+    """
+    n = len(b)
+    lvl = op_levels(b, c, m)
+    perm = np.argsort(lvl, kind="stable").astype(np.int32)
+    # old slot -> new slot
+    new_slot_of_old = np.empty(n, dtype=np.int64)
+    new_slot_of_old[perm] = np.arange(n)
+    remap = lambda x: np.where(x >= m, new_slot_of_old[np.maximum(x - m, 0)] + m, x)
+    new_b = remap(b[perm]).astype(np.int32)
+    new_c = remap(c[perm]).astype(np.int32)
+    sorted_lvl = lvl[perm]
+    num_levels = int(sorted_lvl.max()) if n else 0
+    # ops are level 1..num_levels (leaves occupy level 0); one range per level
+    offsets = np.searchsorted(sorted_lvl, np.arange(2, num_levels + 2)).astype(np.int32)
+    offsets = np.concatenate([[0], offsets]).astype(np.int32)
+    return perm, new_b, new_c, offsets

@@ -1,0 +1,1 @@
+from .config import CPU_MODEL, GPU_MODEL, PTREE, PVECT, ProcessorConfig  # noqa: F401

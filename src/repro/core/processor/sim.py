@@ -1,0 +1,181 @@
+"""Cycle-accurate simulator of the SPN processor (paper §V: "a
+cycle-accurate model is developed in the MyHDL framework").
+
+Executes a compiled :class:`~repro.core.compiler.isa.VLIWProgram` against
+the machine model of :mod:`config`, enforcing every structural constraint
+the hardware imposes:
+
+- ≤ 1 read address per register bank per cycle (crossbar rule; broadcast
+  of one address to many ports is allowed),
+- ≤ 1 write per bank per cycle, including pipelined writebacks landing
+  ``level`` cycles after issue and vector loads occupying every bank,
+- PEs compute strictly from their two children in the tree (level 0 =
+  crossbar ports), with sum/product/forward opcodes,
+- data memory moves whole 32-wide vector rows.
+
+Values carry a batch dimension, so one simulation validates a whole batch
+of SPN evaluations bit-for-bit against the numpy oracle while costing the
+same number of machine cycles as a single one (the throughput metric is
+cycles per evaluation, as in the paper's 100k-execution average).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..compiler import isa
+from ..program import TensorProgram
+from .config import ProcessorConfig
+
+
+class SimError(AssertionError):
+    pass
+
+
+@dataclasses.dataclass
+class SimResult:
+    root_values: np.ndarray      # (batch,)
+    cycles: int
+    useful_ops: int
+    ops_per_cycle: float
+    checks: dict
+
+
+def build_input_memory(vprog: isa.VLIWProgram, prog: TensorProgram,
+                       X: np.ndarray, cfg: ProcessorConfig) -> dict[int, np.ndarray]:
+    """Data-memory image: constant rows + indicator overlay for batch X."""
+    leaf_ind = prog.leaves_from_evidence(X).astype(np.float32)  # (batch, m_ind)
+    batch = leaf_ind.shape[0]
+    mem: dict[int, np.ndarray] = {}
+    for row, consts in vprog.const_rows.items():
+        mem[row] = np.broadcast_to(
+            np.asarray(consts, np.float32)[:, None], (cfg.banks, batch)).copy()
+    for slot, (row, bank) in enumerate(vprog.input_layout):
+        mem[row][bank] = leaf_ind[:, slot]
+    return mem
+
+
+def simulate(vprog: isa.VLIWProgram, prog: TensorProgram, X: np.ndarray,
+             cfg: ProcessorConfig) -> SimResult:
+    X = np.atleast_2d(X)
+    batch = X.shape[0]
+    mem = build_input_memory(vprog, prog, X, cfg)
+    nan = np.full(batch, np.nan, np.float32)
+
+    regs = np.full((cfg.banks, cfg.regs_per_bank, batch), np.nan, np.float32)
+    valid = np.zeros((cfg.banks, cfg.regs_per_bank), bool)
+    # pending commits: cycle -> list of (bank, reg, value or ("row", row_vals))
+    pending: dict[int, list] = {}
+
+    useful = 0
+    checks = {"read_conflicts_checked": 0, "write_conflicts_checked": 0}
+    # write-port reservations by COMMIT cycle — global across issue cycles,
+    # since pipelined writebacks from different issues can land together
+    write_res: dict[int, set[int]] = {}
+
+    def make_reserver(t: int):
+        def reserve_write(commit: int, bank: int) -> None:
+            busy = write_res.setdefault(commit, set())
+            if bank == -1:
+                if busy:
+                    raise SimError(f"cycle {t}: vload write collides @ {commit}")
+                busy.add(-1)
+            else:
+                if bank in busy or -1 in busy:
+                    raise SimError(
+                        f"cycle {t}: write-port conflict bank {bank} @ {commit}")
+                busy.add(bank)
+            checks["write_conflicts_checked"] += 1
+        return reserve_write
+
+    for t, instr in enumerate(vprog.instrs):
+        # 1) commits for this cycle land at cycle start
+        for (bank, reg, val) in pending.pop(t, []):
+            if bank == -1:  # whole-row vector load
+                regs[:, reg] = val
+                valid[:, reg] = True
+            else:
+                regs[bank, reg] = val
+                valid[bank, reg] = True
+        write_res.pop(t - 1, None)
+        reserve_write = make_reserver(t)
+
+        # 2) crossbar reads (global ≤1 address per bank)
+        bank_addr: dict[int, int] = {}
+        port_vals: dict[tuple[int, int], np.ndarray] = {}
+        for ti in instr.trees:
+            if ti is None:
+                continue
+            for port, src in ti.reads.items():
+                prev = bank_addr.get(src.bank)
+                if prev is not None and prev != src.reg:
+                    raise SimError(
+                        f"cycle {t}: bank {src.bank} read conflict "
+                        f"(regs {prev} and {src.reg})")
+                bank_addr[src.bank] = src.reg
+                checks["read_conflicts_checked"] += 1
+                if not valid[src.bank, src.reg]:
+                    raise SimError(
+                        f"cycle {t}: read of invalid cell "
+                        f"({src.bank},{src.reg})")
+                port_vals[(ti.tree, port)] = regs[src.bank, src.reg]
+
+        # 3) evaluate trees
+        for ti in instr.trees:
+            if ti is None:
+                continue
+            level_vals: dict[tuple[int, int], np.ndarray] = {}
+            for port in range(cfg.leaf_ports_per_tree):
+                v = port_vals.get((ti.tree, port))
+                level_vals[(0, port)] = v if v is not None else nan
+            for level in range(1, cfg.tree_levels + 1):
+                for pos in range(cfg.level_pes(level)):
+                    code = ti.pe_ops.get((level, pos), isa.PE_NOP)
+                    if code == isa.PE_NOP:
+                        level_vals[(level, pos)] = nan
+                        continue
+                    a = level_vals[(level - 1, 2 * pos)]
+                    b = level_vals[(level - 1, 2 * pos + 1)]
+                    if code == isa.PE_ADD:
+                        v = a + b
+                    elif code == isa.PE_MUL:
+                        v = a * b
+                    elif code == isa.PE_FWD_A:
+                        v = a
+                    else:
+                        v = b
+                    level_vals[(level, pos)] = v
+            useful += ti.num_useful_ops
+            # 4) writebacks
+            for wb in ti.writes:
+                commit = t + wb.level * cfg.pe_latency
+                val = level_vals[(wb.level, wb.pos)]
+                if np.isnan(val).all():
+                    raise SimError(f"cycle {t}: writeback of NOP output")
+                reserve_write(commit, wb.bank)
+                pending.setdefault(commit, []).append((wb.bank, wb.reg, val.copy()))
+
+        # 5) memory op
+        if instr.mem is not None:
+            mi = instr.mem
+            if mi.kind == "load":
+                if mi.addr not in mem:
+                    raise SimError(f"cycle {t}: load of unwritten row {mi.addr}")
+                reserve_write(t + 1, -1)
+                pending.setdefault(t + 1, []).append((-1, mi.reg, mem[mi.addr].copy()))
+            else:
+                row = np.where(valid[:, mi.reg][:, None],
+                               regs[:, mi.reg], 0.0).astype(np.float32)
+                mem[mi.addr] = row
+
+    if pending:
+        raise SimError(f"program ended with pending commits: {sorted(pending)}")
+
+    root_row, root_bank = vprog.root_loc
+    if root_row not in mem:
+        raise SimError("root row never stored")
+    root = mem[root_row][root_bank]
+    cycles = len(vprog.instrs)
+    return SimResult(root_values=root, cycles=cycles, useful_ops=useful,
+                     ops_per_cycle=useful / max(cycles, 1), checks=checks)

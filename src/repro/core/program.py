@@ -1,0 +1,261 @@
+"""Flat binary-op tensor program — the paper's alg. 2 (`O`/`B`/`C` vectors).
+
+Lowering an :class:`~repro.core.spn.SPN` produces a :class:`TensorProgram`:
+
+- slots ``[0, m_ind)``            : indicator-leaf inputs (the `IN` vector),
+- slots ``[m_ind, m)``            : parameter leaves,
+- slots ``[m, m+n)``              : binary op outputs, *level-contiguous*.
+
+Multi-ary sums/products are decomposed into balanced binary trees (depth
+``ceil(log2 k)``) — balanced rather than chains so levelization exposes
+maximal parallelism, which both the GPU baseline and the PE trees exploit.
+Weighted sum edges become ``PROD(w, child)`` ops feeding the sum tree,
+matching the paper's "parameters are leaves" convention.
+
+This IR is consumed by every backend: the numpy/JAX executors, the VLIW
+compiler, the cycle-accurate simulator and the Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import levelize
+from .spn import LEAF_IND, LEAF_PARAM, PROD, SUM, SPN
+
+OP_SUM = 0
+OP_PROD = 1
+
+
+@dataclasses.dataclass(eq=False)  # identity hash: programs are static jit args
+class TensorProgram:
+    m_ind: int                 # number of indicator-leaf slots
+    m_param: int               # number of parameter-leaf slots
+    param_values: np.ndarray   # (m_param,) float64
+    op_is_prod: np.ndarray     # (n,) uint8 — the paper's O vector (0=sum,1=prod)
+    b: np.ndarray              # (n,) int32 — first operand slot
+    c: np.ndarray              # (n,) int32 — second operand slot
+    level_offsets: np.ndarray  # (L+1,) int32 op ranges per level
+    root_slot: int
+    ind_var: np.ndarray        # (m_ind,) int32 variable of each indicator slot
+    ind_value: np.ndarray      # (m_ind,) int32 indicator value
+    # param indices (into param_values) of each weighted sum node's weights —
+    # the unit of normalization for EM / softmax-SGD learning.
+    sum_weight_groups: list[np.ndarray] = dataclasses.field(default_factory=list)
+
+    @property
+    def m(self) -> int:
+        return self.m_ind + self.m_param
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.b)
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.level_offsets) - 1
+
+    @property
+    def num_slots(self) -> int:
+        return self.m + self.n_ops
+
+    @property
+    def num_vars(self) -> int:
+        return int(self.ind_var.max()) + 1 if self.m_ind else 0
+
+    def level_sizes(self) -> np.ndarray:
+        return np.diff(self.level_offsets)
+
+    # ------------------------------------------------------------------ #
+    def leaves_from_evidence(self, x: np.ndarray) -> np.ndarray:
+        """Indicator inputs for evidence rows ``x`` of shape (batch, num_vars).
+
+        ``x[b, v] == -1`` marginalizes variable ``v`` (both indicators 1).
+        """
+        x = np.atleast_2d(x)
+        ev = x[:, self.ind_var]
+        return ((ev == self.ind_value[None, :]) | (ev == -1)).astype(np.float64)
+
+    def full_input(self, leaf_ind: np.ndarray) -> np.ndarray:
+        """Concatenate indicator inputs with (broadcast) parameter leaves."""
+        leaf_ind = np.atleast_2d(leaf_ind)
+        par = np.broadcast_to(self.param_values, (leaf_ind.shape[0], self.m_param))
+        return np.concatenate([leaf_ind, par], axis=1)
+
+    def validate(self) -> None:
+        n, m = self.n_ops, self.m
+        assert self.b.shape == (n,) and self.c.shape == (n,)
+        assert (self.b < m + np.arange(n)).all(), "b must reference earlier slots"
+        assert (self.c < m + np.arange(n)).all(), "c must reference earlier slots"
+        assert (self.b >= 0).all() and (self.c >= 0).all()
+        assert self.level_offsets[0] == 0 and self.level_offsets[-1] == n
+        # level-contiguity: operands of level ℓ come from levels < ℓ
+        for lo, hi in zip(self.level_offsets[:-1], self.level_offsets[1:]):
+            assert (self.b[lo:hi] < m + lo).all() and (self.c[lo:hi] < m + lo).all()
+
+
+def interleave(prog: TensorProgram, k: int) -> TensorProgram:
+    """K independent evaluations of the same SPN as ONE program.
+
+    §Perf-C (software pipelining): the processor's pipelined PE trees
+    leave RAW bubbles when a single evaluation's dependency chains are
+    narrow; the paper's throughput workload (100k executions averaged)
+    lets consecutive evaluations overlap. Interleaving K instances — the
+    indicator leaves are replicated per instance, the *parameter* leaves
+    shared — multiplies the per-level independent work by K so the
+    scheduler fills the bubbles. Throughput is ``useful_ops / cycles``
+    across all K instances.
+    """
+    m_ind, m_par, n = prog.m_ind, prog.m_param, prog.n_ops
+    m_new = k * m_ind + m_par
+
+    def remap(sl: np.ndarray, inst: int) -> np.ndarray:
+        out = np.where(sl < m_ind, sl + inst * m_ind, 0)
+        out = np.where((sl >= m_ind) & (sl < prog.m),
+                       sl + (k - 1) * m_ind, out)
+        return np.where(sl >= prog.m,
+                        m_new + (sl - prog.m) * k + inst, out)
+
+    b_parts, c_parts, o_parts = [], [], []
+    offsets = [0]
+    for lo, hi in zip(prog.level_offsets[:-1], prog.level_offsets[1:]):
+        lo, hi = int(lo), int(hi)
+        for i in range(lo, hi):
+            for inst in range(k):       # instance-minor: op i → slots i*k+inst
+                b_parts.append(remap(prog.b[i: i + 1], inst))
+                c_parts.append(remap(prog.c[i: i + 1], inst))
+                o_parts.append(prog.op_is_prod[i: i + 1])
+        offsets.append(hi * k)
+
+    out = TensorProgram(
+        m_ind=k * m_ind, m_param=m_par,
+        param_values=prog.param_values.copy(),
+        op_is_prod=np.concatenate(o_parts),
+        b=np.concatenate(b_parts).astype(np.int32),
+        c=np.concatenate(c_parts).astype(np.int32),
+        level_offsets=np.asarray(offsets, np.int32),
+        root_slot=int(m_new + (prog.root_slot - prog.m) * k),
+        ind_var=np.tile(prog.ind_var, k),
+        ind_value=np.tile(prog.ind_value, k),
+        sum_weight_groups=list(prog.sum_weight_groups),
+    )
+    out.validate()
+    return out
+
+
+def lower(spn: SPN) -> TensorProgram:
+    """Lower an SPN DAG to a level-sorted binary TensorProgram."""
+    # ---- slot assignment for leaves -------------------------------------
+    ind_nodes = np.flatnonzero(spn.node_type == LEAF_IND)
+    par_nodes = np.flatnonzero(spn.node_type == LEAF_PARAM)
+    m_ind, m_par0 = len(ind_nodes), len(par_nodes)
+    slot_of_node: dict[int, int] = {}
+    for s, nd in enumerate(ind_nodes):
+        slot_of_node[int(nd)] = s
+    param_values: list[float] = [float(spn.param_value[nd]) for nd in par_nodes]
+    for s, nd in enumerate(par_nodes):
+        slot_of_node[int(nd)] = m_ind + s
+
+    # Weight parameters get appended after explicit param leaves.
+    def new_param(v: float) -> int:
+        param_values.append(float(v))
+        return m_ind + len(param_values) - 1
+
+    # Op emission with temporary slot ids (m will be patched after we know
+    # the final param count, so emit with param-relative bookkeeping).
+    ops_is_prod: list[int] = []
+    ops_b: list[int] = []
+    ops_c: list[int] = []
+    weight_groups: list[np.ndarray] = []
+    PARAM_BASE = 1 << 40   # tag so leaf slots survive the later m shift
+    OP_BASE = 1 << 41
+
+    def emit(is_prod: int, bslot: int, cslot: int) -> int:
+        ops_is_prod.append(is_prod)
+        ops_b.append(bslot)
+        ops_c.append(cslot)
+        return OP_BASE + len(ops_is_prod) - 1
+
+    def balanced_reduce(slots: list[int], is_prod: int) -> int:
+        while len(slots) > 1:
+            nxt = []
+            for i in range(0, len(slots) - 1, 2):
+                nxt.append(emit(is_prod, slots[i], slots[i + 1]))
+            if len(slots) % 2:
+                nxt.append(slots[-1])
+            slots = nxt
+        return slots[0]
+
+    for i in range(spn.num_nodes):
+        t = spn.node_type[i]
+        if t in (LEAF_IND, LEAF_PARAM):
+            continue
+        ch = [slot_of_node[c] for c in spn.children[i]]
+        if t == SUM:
+            w = spn.weights[i]
+            if w is not None:
+                pidx = [new_param(wi) - m_ind for wi in w]
+                weight_groups.append(np.asarray(pidx, dtype=np.int32))
+                ch = [emit(OP_PROD, PARAM_BASE + pi, cs)
+                      for pi, cs in zip(pidx, ch)]
+            slot_of_node[i] = ch[0] if len(ch) == 1 else balanced_reduce(ch, OP_SUM)
+        else:  # PROD
+            slot_of_node[i] = ch[0] if len(ch) == 1 else balanced_reduce(ch, OP_PROD)
+
+    m_param = len(param_values)
+    m = m_ind + m_param
+
+    def resolve(s: int) -> int:
+        if s >= OP_BASE:
+            return m + (s - OP_BASE)
+        if s >= PARAM_BASE:
+            return m_ind + (s - PARAM_BASE)
+        if s >= m_ind and s < m_ind + m_par0:
+            return s  # explicit param leaf — already in final position
+        return s      # indicator leaf
+
+    n = len(ops_is_prod)
+    if n == 0:
+        # Degenerate: root is a leaf. Emit a forwarding op (x*1) for uniformity.
+        one = new_param(1.0)
+        m_param = len(param_values)
+        m = m_ind + m_param
+        root_raw = slot_of_node[spn.root]
+        rr = resolve(root_raw) if root_raw < PARAM_BASE else m_ind + (root_raw - PARAM_BASE)
+        ops_is_prod, ops_b, ops_c = [OP_PROD], [rr], [one]
+        n = 1
+        slot_of_node[spn.root] = OP_BASE
+
+    b = np.array([resolve(s) for s in ops_b], dtype=np.int32)
+    c = np.array([resolve(s) for s in ops_c], dtype=np.int32)
+    op = np.array(ops_is_prod, dtype=np.uint8)
+
+    perm, new_b, new_c, offsets = levelize.level_sort(b, c, m)
+    new_op = op[perm]
+    # root slot under the new numbering
+    new_slot_of_old = np.empty(n, dtype=np.int64)
+    new_slot_of_old[perm] = np.arange(n)
+    root_raw = slot_of_node[spn.root]
+    if root_raw >= OP_BASE:
+        root_slot = int(m + new_slot_of_old[root_raw - OP_BASE])
+    elif root_raw >= PARAM_BASE:
+        root_slot = m_ind + (root_raw - PARAM_BASE)
+    else:
+        root_slot = root_raw
+
+    prog = TensorProgram(
+        m_ind=m_ind,
+        m_param=m_param,
+        param_values=np.asarray(param_values, dtype=np.float64),
+        op_is_prod=new_op,
+        b=new_b,
+        c=new_c,
+        level_offsets=offsets,
+        root_slot=root_slot,
+        ind_var=spn.leaf_var[ind_nodes].astype(np.int32),
+        ind_value=spn.leaf_value[ind_nodes].astype(np.int32),
+        sum_weight_groups=weight_groups,
+    )
+    prog.validate()
+    return prog

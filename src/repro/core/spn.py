@@ -1,0 +1,207 @@
+"""Sum-Product Network (arithmetic circuit) graph representation.
+
+An SPN is a rooted DAG whose internal nodes are (weighted) sums and
+products, and whose leaves are either *indicator* inputs (evidence on a
+discrete variable) or *parameter* constants (the paper: "leaf nodes are
+probabilistic parameters or data inputs").
+
+This module holds the high-level graph; :mod:`repro.core.program` lowers it
+to the flat binary-op tensor program of the paper's alg. 2 (vectors O/B/C
+over a value buffer), which every executor / compiler / kernel consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+# Node type codes (kept stable: serialized in .ac files and test fixtures).
+LEAF_IND = 0   # indicator leaf: [var == value]
+LEAF_PARAM = 1 # parameter leaf: a (learnable) constant
+SUM = 2
+PROD = 3
+
+_TYPE_NAMES = {LEAF_IND: "ind", LEAF_PARAM: "param", SUM: "sum", PROD: "prod"}
+
+
+class SPNBuilder:
+    """Incremental builder; node ids are returned in creation order.
+
+    Children must be created before their parents, so creation order is a
+    valid topological order — invariant relied on throughout.
+    """
+
+    def __init__(self) -> None:
+        self.node_type: list[int] = []
+        self.children: list[tuple[int, ...]] = []
+        self.weights: list[tuple[float, ...] | None] = []
+        self.leaf_var: list[int] = []
+        self.leaf_value: list[int] = []
+        self.param_value: list[float] = []
+
+    def _add(self, ntype: int, children=(), weights=None, var=-1, value=-1,
+             param=0.0) -> int:
+        nid = len(self.node_type)
+        for c in children:
+            if not 0 <= c < nid:
+                raise ValueError(f"child {c} of node {nid} not yet defined")
+        self.node_type.append(ntype)
+        self.children.append(tuple(children))
+        self.weights.append(tuple(weights) if weights is not None else None)
+        self.leaf_var.append(var)
+        self.leaf_value.append(value)
+        self.param_value.append(param)
+        return nid
+
+    def indicator(self, var: int, value: int) -> int:
+        return self._add(LEAF_IND, var=var, value=value)
+
+    def param(self, value: float) -> int:
+        return self._add(LEAF_PARAM, param=float(value))
+
+    def sum(self, children: Sequence[int], weights: Sequence[float] | None = None) -> int:
+        if len(children) < 1:
+            raise ValueError("sum needs >=1 child")
+        if weights is not None and len(weights) != len(children):
+            raise ValueError("weights/children length mismatch")
+        return self._add(SUM, children=children, weights=weights)
+
+    def product(self, children: Sequence[int]) -> int:
+        if len(children) < 1:
+            raise ValueError("product needs >=1 child")
+        return self._add(PROD, children=children)
+
+    def build(self, root: int | None = None) -> "SPN":
+        root = len(self.node_type) - 1 if root is None else root
+        return SPN(
+            node_type=np.asarray(self.node_type, dtype=np.int8),
+            children=list(self.children),
+            weights=list(self.weights),
+            leaf_var=np.asarray(self.leaf_var, dtype=np.int32),
+            leaf_value=np.asarray(self.leaf_value, dtype=np.int32),
+            param_value=np.asarray(self.param_value, dtype=np.float64),
+            root=root,
+        )
+
+
+@dataclasses.dataclass
+class SPN:
+    """Frozen SPN DAG in topological (children-first) node order."""
+
+    node_type: np.ndarray            # (N,) int8
+    children: list[tuple[int, ...]]  # per node
+    weights: list[tuple[float, ...] | None]
+    leaf_var: np.ndarray             # (N,) int32, -1 for non-indicator
+    leaf_value: np.ndarray           # (N,) int32
+    param_value: np.ndarray          # (N,) float64
+    root: int
+
+    # ------------------------------------------------------------------ #
+    @property
+    def num_nodes(self) -> int:
+        return len(self.node_type)
+
+    @property
+    def num_vars(self) -> int:
+        lv = self.leaf_var[self.node_type == LEAF_IND]
+        return int(lv.max()) + 1 if lv.size else 0
+
+    def counts(self) -> dict[str, int]:
+        t = self.node_type
+        return {name: int((t == code).sum()) for code, name in _TYPE_NAMES.items()}
+
+    # ------------------------------------------------------------------ #
+    def scopes(self) -> list[int]:
+        """Per-node variable scope as bitmask ints."""
+        sc: list[int] = [0] * self.num_nodes
+        for i in range(self.num_nodes):
+            t = self.node_type[i]
+            if t == LEAF_IND:
+                sc[i] = 1 << int(self.leaf_var[i])
+            elif t == LEAF_PARAM:
+                sc[i] = 0
+            else:
+                m = 0
+                for c in self.children[i]:
+                    m |= sc[c]
+                sc[i] = m
+        return sc
+
+    def check_valid(self) -> list[str]:
+        """Return list of validity violations (empty == smooth+decomposable)."""
+        sc = self.scopes()
+        problems: list[str] = []
+        for i in range(self.num_nodes):
+            t = self.node_type[i]
+            ch = self.children[i]
+            if t == SUM:
+                # smoothness: all children share the sum's scope (parameter
+                # leaves have empty scope and are exempt: they appear as
+                # explicit weight leaves after lowering).
+                scopes = {sc[c] for c in ch if self.node_type[c] != LEAF_PARAM}
+                if len(scopes) > 1:
+                    problems.append(f"sum {i} not smooth: child scopes differ")
+            elif t == PROD:
+                seen = 0
+                for c in ch:
+                    if seen & sc[c]:
+                        problems.append(f"product {i} not decomposable")
+                        break
+                    seen |= sc[c]
+        return problems
+
+    # ------------------------------------------------------------------ #
+    def evaluate(self, leaf_ind_values: np.ndarray) -> float:
+        """Reference (float64, topological) evaluation — the oracle.
+
+        ``leaf_ind_values``: value for every node that is an indicator leaf,
+        indexed by *node id* (non-indicator entries ignored).
+        """
+        vals = np.zeros(self.num_nodes, dtype=np.float64)
+        for i in range(self.num_nodes):
+            t = self.node_type[i]
+            if t == LEAF_IND:
+                vals[i] = leaf_ind_values[i]
+            elif t == LEAF_PARAM:
+                vals[i] = self.param_value[i]
+            elif t == SUM:
+                w = self.weights[i]
+                if w is None:
+                    vals[i] = sum(vals[c] for c in self.children[i])
+                else:
+                    vals[i] = sum(wi * vals[c] for wi, c in zip(w, self.children[i]))
+            else:  # PROD
+                p = 1.0
+                for c in self.children[i]:
+                    p *= vals[c]
+                vals[i] = p
+        return float(vals[self.root])
+
+    def evaluate_evidence(self, x: Sequence[int] | np.ndarray,
+                          marginalized: Iterable[int] = ()) -> float:
+        """Evaluate with evidence vector ``x`` (per variable, -1 == marginalize)."""
+        marg = set(marginalized)
+        vals = np.zeros(self.num_nodes, dtype=np.float64)
+        for i in range(self.num_nodes):
+            if self.node_type[i] == LEAF_IND:
+                v = int(self.leaf_var[i])
+                if v in marg or (v < len(x) and int(x[v]) == -1):
+                    vals[i] = 1.0
+                else:
+                    vals[i] = 1.0 if int(x[v]) == int(self.leaf_value[i]) else 0.0
+        return self.evaluate(vals)
+
+
+def normalize_weights(spn: SPN) -> SPN:
+    """Return a copy with every sum's weights normalized to 1."""
+    new_w: list[tuple[float, ...] | None] = []
+    for i in range(spn.num_nodes):
+        w = spn.weights[i]
+        if spn.node_type[i] == SUM:
+            if w is None:
+                w = tuple(1.0 for _ in spn.children[i])
+            s = sum(w)
+            w = tuple(wi / s for wi in w) if s > 0 else w
+        new_w.append(w)
+    return dataclasses.replace(spn, weights=new_w)

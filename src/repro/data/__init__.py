@@ -1,0 +1,1 @@
+from . import spn_datasets  # noqa: F401

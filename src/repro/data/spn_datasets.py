@@ -1,0 +1,80 @@
+"""Synthetic stand-ins for the Lowd & Davis / UCI binary benchmark suite.
+
+The paper benchmarks SPNs "trained on a suite of standard benchmarks
+[3], [7]" — the 20-datasets density-estimation suite (NLTCS, MSNBC, ...).
+This container has no network access, so we synthesize datasets with the
+*same variable counts* from deterministic teacher distributions (mixtures
+of tree-structured Bernoulli networks), seeded per dataset name. LearnSPN
+on these produces irregular DAGs of realistic shape/size, which is what
+the processor benchmarks need.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+# name -> number of binary variables (faithful to the public suite)
+DATASETS: dict[str, int] = {
+    "nltcs": 16, "msnbc": 17, "kdd": 64, "plants": 69, "baudio": 100,
+    "jester": 100, "bnetflix": 100, "accidents": 111, "tretail": 135,
+    "pumsb_star": 163, "dna": 180, "kosarek": 190, "msweb": 294,
+    "book": 500, "tmovie": 500, "cwebkb": 839, "cr52": 889,
+    "c20ng": 910, "bbc": 1058, "ad": 1556,
+}
+
+# the subset used by the throughput benchmarks (small/medium, fast to learn)
+BENCH_SUITE = ["nltcs", "msnbc", "kdd", "plants", "baudio", "jester", "bnetflix"]
+
+_SPLIT_SALT = {"train": 0, "valid": 1, "test": 2}
+
+
+def _seed(name: str, split: str) -> int:
+    h = hashlib.sha256(f"{name}/{split}".encode()).digest()
+    return int.from_bytes(h[:8], "little") ^ _SPLIT_SALT[split]
+
+
+def _teacher(name: str, num_vars: int):
+    """Deterministic teacher: mixture of tree-structured Bernoulli nets."""
+    rng = np.random.default_rng(_seed(name, "train") & 0x7FFFFFFF)
+    k = int(rng.integers(3, 8))
+    mix = rng.dirichlet(np.ones(k) * 2.0)
+    parents, roots_p, cpts = [], [], []
+    for _ in range(k):
+        par = np.array([-1] + [int(rng.integers(0, i)) for i in range(1, num_vars)])
+        order = rng.permutation(num_vars)              # random var relabeling
+        parents.append((par, order))
+        roots_p.append(float(rng.beta(0.6, 0.6)))
+        cpts.append(rng.beta(0.5, 0.5, size=(num_vars, 2)))
+    return mix, parents, roots_p, cpts
+
+
+def sample(name: str, n: int, split: str = "train") -> np.ndarray:
+    """Sample ``n`` binary rows from the teacher for ``name``/``split``."""
+    num_vars = DATASETS[name]
+    mix, parents, roots_p, cpts = _teacher(name, num_vars)
+    rng = np.random.default_rng(_seed(name, split))
+    comp = rng.choice(len(mix), size=n, p=mix)
+    X = np.zeros((n, num_vars), dtype=np.int8)
+    for c in range(len(mix)):
+        rows = np.flatnonzero(comp == c)
+        if not len(rows):
+            continue
+        par, order = parents[c]
+        vals = np.zeros((len(rows), num_vars), dtype=np.int8)
+        vals[:, 0] = rng.random(len(rows)) < roots_p[c]
+        for i in range(1, num_vars):
+            pv = vals[:, par[i]]
+            pr = cpts[c][i, pv.astype(np.int64)]
+            vals[:, i] = rng.random(len(rows)) < pr
+        X[rows] = vals[:, np.argsort(order)]
+    return X
+
+
+_DEFAULT_N = {"train": 2000, "valid": 500, "test": 500}
+
+
+def load(name: str, split: str = "train", n: int | None = None) -> np.ndarray:
+    if name not in DATASETS:
+        raise KeyError(f"unknown dataset {name!r}; options: {sorted(DATASETS)}")
+    return sample(name, n or _DEFAULT_N[split], split)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel for leveled SPN evaluation.
+
+TPU adaptation of the paper's processor (DESIGN.md §2): the *batch*
+dimension rides the 128 VPU lanes (the paper's node-parallel scalar PEs
+become lane-parallel evaluations), node slots ride sublanes, and the whole
+slot value buffer lives in a **VMEM scratch** — the analogue of the
+paper's banked register file. All levels execute inside one
+``pallas_call``, so intermediates never round-trip through HBM (the
+analogue of PE-tree datapath fusion: "avoiding frequent writebacks to the
+register file").
+
+The per-level operand indices (the paper's B/C vectors) are streamed to
+the kernel as an **instruction tensor** — the Pallas analogue of the
+paper's VLIW instruction stream: op-codes + operand addresses resident
+on-chip, consumed one level ("group", fig. 2a) per step. Levels are
+8-aligned so every slice is tile-friendly; gathers index the sublane axis
+with i32 vectors (Mosaic `dynamic_gather`).
+
+Layout contract (produced by :func:`repro.kernels.spn_eval.ops.pad_program`):
+
+- slots ``[0, m_pad)``: leaf inputs (indicators + parameters), 8-aligned,
+- each level's outputs occupy an 8-aligned contiguous slot range,
+- padded ops compute ``A[0] (op) A[0]`` (finite in both domains).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SUBLANE = 8     # f32 sublane tile
+LANE = 128      # lane tile
+
+
+@dataclasses.dataclass(eq=False)   # identity-hash: used as a static jit arg
+class PaddedProgram:
+    """Level-padded, 8-aligned slot program consumed by the kernel."""
+    m_pad: int                      # leaf slots incl. padding
+    num_slots: int                  # total padded slots (multiple of 8)
+    levels: list                    # [(offset, b, c, is_prod), ...] np arrays
+    root_slot: int
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.levels)
+
+    @property
+    def n_ops_pad(self) -> int:
+        return sum(len(b) for (_, b, _, _) in self.levels)
+
+    def instruction_tensor(self) -> np.ndarray:
+        """(n_ops_pad, 3) int32: columns = B, C, O (the paper's vectors)."""
+        b = np.concatenate([lv[1] for lv in self.levels])
+        c = np.concatenate([lv[2] for lv in self.levels])
+        o = np.concatenate([lv[3] for lv in self.levels]).astype(np.int32)
+        return np.stack([b, c, o], axis=1).astype(np.int32)
+
+
+def _logaddexp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Mosaic-friendly stable logaddexp (handles -inf without NaN)."""
+    mx = jnp.maximum(a, b)
+    mn = jnp.minimum(a, b)
+    safe = jnp.isfinite(mx)
+    diff = jnp.where(safe, mn - mx, 0.0)
+    return jnp.where(safe, mx + jnp.log1p(jnp.exp(diff)), mx)
+
+
+def _kernel_body(pprog: PaddedProgram, log_domain: bool,
+                 in_ref, instr_ref, out_ref, a_ref):
+    """One batch tile: leaves → leveled sweep in VMEM → root row."""
+    a_ref[0: pprog.m_pad, :] = in_ref[...]
+    ip = 0                                          # instruction pointer
+    for (off, b, c, isp) in pprog.levels:
+        width = len(b)
+        bi = instr_ref[ip: ip + width, 0]
+        ci = instr_ref[ip: ip + width, 1]
+        oi = instr_ref[ip: ip + width, 2]
+        ip += width
+        prefix = a_ref[0: off, :]                   # aligned static slice
+        vb = jnp.take(prefix, bi, axis=0)           # sublane gather
+        vc = jnp.take(prefix, ci, axis=0)
+        sel = (oi == 1)[:, None]
+        if log_domain:
+            new = jnp.where(sel, vb + vc, _logaddexp(vb, vc))
+        else:
+            new = jnp.where(sel, vb * vc, vb + vc)
+        a_ref[off: off + width, :] = new
+    root = a_ref[pprog.root_slot, :]
+    out_ref[...] = jnp.broadcast_to(root[None, :], out_ref.shape)
+
+
+def build_spn_kernel(pprog: PaddedProgram, *, batch_tile: int = LANE,
+                     log_domain: bool = False, interpret: bool = True):
+    """Compile a pallas_call evaluating ``pprog`` over a batch.
+
+    Returns ``fn(full_leaves, instr)`` mapping an ``(m_pad, B)`` leaf
+    buffer (domain-transformed, B a multiple of ``batch_tile``) plus the
+    ``(n_ops_pad, 3)`` instruction tensor to ``(B,)`` root values.
+    """
+    if batch_tile % LANE:
+        raise ValueError(f"batch_tile must be a multiple of {LANE}")
+    n_instr = pprog.n_ops_pad
+    vmem_bytes = ((pprog.num_slots + pprog.m_pad + SUBLANE) * batch_tile * 4
+                  + n_instr * 3 * 4)
+    if vmem_bytes > 14 * 2 ** 20:
+        raise ValueError(
+            f"value buffer needs {vmem_bytes / 2**20:.1f} MiB VMEM "
+            f"({pprog.num_slots} slots x {batch_tile} lanes); reduce "
+            f"batch_tile or split the SPN")
+
+    body = functools.partial(_kernel_body, pprog, log_domain)
+
+    def fn(full_leaves: jnp.ndarray, instr: jnp.ndarray) -> jnp.ndarray:
+        m_pad, B = full_leaves.shape
+        assert m_pad == pprog.m_pad and B % batch_tile == 0
+        grid = (B // batch_tile,)
+        out = pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((m_pad, batch_tile), lambda i: (0, i)),
+                pl.BlockSpec((n_instr, 3), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((SUBLANE, batch_tile), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((SUBLANE, B), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((pprog.num_slots, batch_tile),
+                                       jnp.float32)],
+            interpret=interpret,
+        )(full_leaves, instr)
+        return out[0]
+
+    return fn

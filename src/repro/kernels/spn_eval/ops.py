@@ -1,0 +1,98 @@
+"""jit'd public wrapper around the spn_eval Pallas kernel.
+
+Handles everything the kernel contract demands: level padding/slot
+remapping to 8-aligned ranges, parameter splicing (for learned weights),
+domain transform, batch padding to the lane tile, and interpret-mode
+selection (interpret on CPU hosts, compiled on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.program import TensorProgram
+from . import kernel as K
+
+
+def _round_up(x: int, k: int) -> int:
+    return (x + k - 1) // k * k
+
+
+@functools.cache
+def pad_program(prog: TensorProgram) -> K.PaddedProgram:
+    """Remap a level-contiguous program to 8-aligned padded slot ranges.
+
+    The slot permutation is order-preserving within leaves and within each
+    level, so ``new_slot = old_slot + shift(level)`` with a per-region
+    shift — cheap to apply to the B/C index vectors.
+    """
+    m_pad = _round_up(prog.m, K.SUBLANE)
+    # old-slot -> new-slot lookup (leaves first, then per level)
+    new_of_old = np.zeros(prog.num_slots, np.int64)
+    new_of_old[: prog.m] = np.arange(prog.m)
+    levels = []
+    off = m_pad
+    for lo, hi in zip(prog.level_offsets[:-1], prog.level_offsets[1:]):
+        lo, hi = int(lo), int(hi)
+        width = hi - lo
+        width_pad = _round_up(max(width, 1), K.SUBLANE)
+        new_of_old[prog.m + lo: prog.m + hi] = off + np.arange(width)
+        b = new_of_old[prog.b[lo:hi]].astype(np.int32)
+        c = new_of_old[prog.c[lo:hi]].astype(np.int32)
+        isp = prog.op_is_prod[lo:hi].astype(np.uint8)
+        pad = width_pad - width
+        if pad:  # padded ops: A[0] (prod) A[0] — finite in both domains
+            b = np.concatenate([b, np.zeros(pad, np.int32)])
+            c = np.concatenate([c, np.zeros(pad, np.int32)])
+            isp = np.concatenate([isp, np.ones(pad, np.uint8)])
+        levels.append((off, b, c, isp))
+        off += width_pad
+    return K.PaddedProgram(
+        m_pad=m_pad, num_slots=off, levels=levels,
+        root_slot=int(new_of_old[prog.root_slot]))
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.cache
+def _build(prog: TensorProgram, batch_tile: int, log_domain: bool,
+           interpret: bool):
+    pprog = pad_program(prog)
+    fn = K.build_spn_kernel(pprog, batch_tile=batch_tile,
+                            log_domain=log_domain, interpret=interpret)
+    m_ind, m, m_pad = prog.m_ind, prog.m, pprog.m_pad
+    stored = jnp.asarray(prog.param_values, jnp.float32)
+    instr = jnp.asarray(pprog.instruction_tensor())
+
+    @jax.jit
+    def run(leaf_ind: jnp.ndarray, params: jnp.ndarray | None) -> jnp.ndarray:
+        leaf_ind = jnp.atleast_2d(leaf_ind).astype(jnp.float32)
+        B = leaf_ind.shape[0]
+        B_pad = _round_up(max(B, 1), batch_tile)
+        p = stored if params is None else params.astype(jnp.float32)
+        full = jnp.ones((B_pad, m_pad), jnp.float32)       # pad rows = 1.0
+        full = full.at[:B, :m_ind].set(leaf_ind)
+        full = full.at[:, m_ind: m].set(p[None, :])
+        if log_domain:
+            full = jnp.log(full)
+        return fn(full.T, instr)[:B]
+
+    return run
+
+
+def spn_eval(prog: TensorProgram, leaf_ind, params=None, *,
+             log_domain: bool = False, batch_tile: int = K.LANE,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """Evaluate ``prog`` for a batch of leaf inputs via the Pallas kernel.
+
+    ``leaf_ind``: (batch, m_ind) indicator values → (batch,) root values
+    (root log-probabilities when ``log_domain``).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    run = _build(prog, int(batch_tile), bool(log_domain), bool(interpret))
+    return run(jnp.asarray(leaf_ind), params)

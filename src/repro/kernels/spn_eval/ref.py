@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the spn_eval Pallas kernel.
+
+Implements exactly the computation the kernel performs — a leveled pass
+over the slot value buffer with static per-level operand gathers — in
+plain ``jnp`` with no Pallas, no padding tricks, float32 throughout
+(kernels compute in f32; float64 reference lives in
+``repro.core.executors.eval_ops_numpy``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.program import TensorProgram
+
+
+def spn_eval_ref(prog: TensorProgram, leaf_ind: jnp.ndarray,
+                 params: jnp.ndarray | None = None,
+                 log_domain: bool = False) -> jnp.ndarray:
+    """Evaluate ``prog`` for a batch. ``leaf_ind``: (batch, m_ind) → (batch,).
+
+    Value-buffer layout identical to the kernel: slots [0, m) leaves,
+    [m, m+n) op outputs, level-contiguous.
+    """
+    leaf_ind = jnp.atleast_2d(leaf_ind).astype(jnp.float32)
+    batch = leaf_ind.shape[0]
+    p = jnp.asarray(prog.param_values, jnp.float32) if params is None else params
+    p = jnp.broadcast_to(p.astype(jnp.float32), (batch, prog.m_param))
+    A = jnp.concatenate([leaf_ind, p], axis=1).T          # (m, batch)
+    if log_domain:
+        A = jnp.log(A)
+    for lo, hi in zip(prog.level_offsets[:-1], prog.level_offsets[1:]):
+        lo, hi = int(lo), int(hi)
+        b = np.asarray(prog.b[lo:hi])                      # static gather
+        c = np.asarray(prog.c[lo:hi])
+        is_prod = np.asarray(prog.op_is_prod[lo:hi], bool)[:, None]
+        vb, vc = A[b], A[c]
+        if log_domain:
+            new = jnp.where(is_prod, vb + vc, jnp.logaddexp(vb, vc))
+        else:
+            new = jnp.where(is_prod, vb * vc, vb + vc)
+        A = jnp.concatenate([A, new], axis=0)
+    return A[prog.root_slot]

@@ -1,0 +1,253 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh (16×16 single-pod or
+2×16×16 multi-pod), the sharding plan, ShapeDtypeStruct stand-ins for
+params / optimizer / inputs (no allocation), jits the step function with
+explicit in/out shardings, and runs ``.lower().compile()``. Success
+proves the distribution config is coherent; the compiled artifact yields
+``memory_analysis`` / ``cost_analysis`` / collective bytes for §Roofline.
+
+CLI:
+    python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+# The VERY FIRST executable lines (before any jax import, which locks the
+# device count): 512 placeholder host devices for the production meshes.
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig,
+                            applicable_shapes, get_config)
+from ..models import api
+from ..models.common import reset_act_rules, set_act_rules
+from ..optim import adamw
+from ..parallel.plan import Planner
+from . import hlo_analysis, step_fns
+from .mesh import make_production_mesh
+
+
+# ---------------------------------------------------------------------------
+# model-FLOPs estimators (6·N·D / 2·N·D with MoE active-param correction)
+# ---------------------------------------------------------------------------
+def param_counts(cfg: ArchConfig) -> tuple[float, float]:
+    """(total, active) parameter counts from the shape-only param tree."""
+    tree = api.param_specs(cfg)
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    total = active = 0.0
+    for kp, leaf in paths:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        n = float(np.prod(leaf.shape))
+        total += n
+        if "moe/" in path and any(s in path for s in ("gate", "up", "down")):
+            active += n * cfg.top_k / max(cfg.n_experts, 1)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    _, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return hlo_analysis.model_flops_train(active, tokens)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return hlo_analysis.model_flops_infer(active, tokens)
+    tokens = shape.global_batch * 1          # decode: one token per seq
+    return hlo_analysis.model_flops_infer(active, tokens)
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+def _replicated_like(mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+               opt_cfg: adamw.AdamWConfig | None = None):
+    """Returns (jitted_fn, arg_specs tuple) ready to lower."""
+    planner = Planner(cfg, mesh)
+    param_sds = api.param_specs(cfg)
+    p_sh = planner.params_sharding(param_sds)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        opt_sds = jax.eval_shape(adamw.init_state, param_sds)
+        o_sh = {"m": p_sh, "v": p_sh,
+                "step": NamedSharding(mesh, P())}
+        batch_sds = api.train_batch_specs(cfg, shape)
+        b_sh = planner.batch_sharding(batch_sds)
+        fn = step_fns.make_train_step(cfg, opt_cfg)
+        out_sds = jax.eval_shape(fn, param_sds, opt_sds, batch_sds)
+        out_sh = (p_sh, o_sh, _replicated_like(mesh, out_sds[2]))
+        jf = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=out_sh, donate_argnums=(0, 1))
+        return jf, (param_sds, opt_sds, batch_sds), planner
+
+    if shape.kind == "prefill":
+        specs = api.prefill_specs(cfg, shape)
+        cache_sds = specs.pop("cache")
+        tokens_sds = specs.pop("tokens")
+        extras_sds = specs                      # frames / patch_embeds
+        c_sh = planner.cache_sharding(cache_sds)
+        t_sh = planner.batch_sharding(tokens_sds)
+        e_sh = planner.batch_sharding(extras_sds)
+
+        def fn(params, tokens, cache, extras):
+            return api.prefill(cfg, params, tokens, cache, **extras)
+
+        out_sds = jax.eval_shape(fn, param_sds, tokens_sds, cache_sds,
+                                 extras_sds)
+        out_sh = (planner.batch_sharding(out_sds[0]), c_sh)
+        jf = jax.jit(fn, in_shardings=(p_sh, t_sh, c_sh, e_sh),
+                     out_shardings=out_sh, donate_argnums=(2,))
+        return jf, (param_sds, tokens_sds, cache_sds, extras_sds), planner
+
+    # decode
+    specs = api.decode_specs(cfg, shape)
+    cache_sds, tokens_sds = specs["cache"], specs["tokens"]
+    c_sh = planner.cache_sharding(cache_sds)
+    t_sh = planner.batch_sharding(tokens_sds)
+    fn = step_fns.make_decode_step(cfg)
+    out_sds = jax.eval_shape(fn, param_sds, cache_sds, tokens_sds)
+    out_sh = (planner.batch_sharding(out_sds[0]), c_sh)
+    jf = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh),
+                 out_shardings=out_sh, donate_argnums=(1,))
+    return jf, (param_sds, cache_sds, tokens_sds), planner
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True) -> dict:
+    """Lower + compile one cell; return the roofline record."""
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict[str, Any] = {"arch": arch_id, "shape": shape_name,
+                           "mesh": mesh_name, "status": "ok"}
+    if shape_name not in applicable_shapes(cfg):
+        rec["status"] = "skipped"
+        rec["reason"] = ("full-attention arch skips long_500k"
+                         if shape_name == "long_500k" else "not applicable")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    jf, arg_sds, planner = build_cell(cfg, shape, mesh)
+    token = set_act_rules(planner.act_rules())
+    try:
+        with mesh:
+            lowered = jf.lower(*arg_sds)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    finally:
+        reset_act_rules(token)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    acc = hlo_analysis.analyze_hlo(hlo)
+    chips = int(np.prod(list(mesh.shape.values())))
+    flops_total = float(acc["flops"])
+    bytes_total = float(acc["hbm_bytes"])
+    coll_total = float(sum(acc["collective_bytes"].values()))
+    roof = hlo_analysis.Roofline(
+        flops=flops_total, hbm_bytes=bytes_total,
+        collective_bytes=coll_total, chips=chips)
+    mf = model_flops(cfg, shape)
+    rec.update(
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=_mem_dict(mem),
+        cost_analysis_flops=float(cost.get("flops", 0.0)),
+        hlo_dot_flops=float(acc["dot_flops"]),
+        transcendentals=float(acc["transcendentals"]),
+        collectives={"bytes": acc["collective_bytes"],
+                     "count": acc["collective_count"]},
+        roofline=roof.as_dict(),
+        model_flops=mf,
+        useful_flops_ratio=(mf / (flops_total * chips)
+                            if flops_total else None),
+    )
+    if verbose:
+        m = rec["memory"]
+        print(f"[{arch_id} × {shape_name} × {mesh_name}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"args {m.get('argument_size_gib', 0):.2f} GiB "
+              f"temp {m.get('temp_size_gib', 0):.2f} GiB | "
+              f"t_comp {roof.t_compute:.4f}s t_mem {roof.t_memory:.4f}s "
+              f"t_coll {roof.t_collective:.4f}s → {roof.bottleneck}")
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, name, None)
+        if v is not None:
+            out[name] = int(v)
+            out[name.replace("_in_bytes", "_gib")] = round(v / 2 ** 30, 3)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shp in cells:
+        for mp in meshes:
+            name = f"{arch}_{shp}_{'multi' if mp else 'single'}"
+            try:
+                rec = run_cell(arch, shp, multi_pod=mp)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shp,
+                       "mesh": "pod2x16x16" if mp else "pod16x16",
+                       "status": "error", "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            with open(os.path.join(args.out, name + ".json"), "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init to make the 256/512-chip shapes constructible on a CPU host.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over the actually-present devices (tests/examples)."""
+    n = jax.device_count()
+    data = n // model if data is None else data
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,129 @@
+"""Serving driver.
+
+Two workloads:
+
+- ``spn``: the paper's workload — batched SPN inference. Learns (or
+  loads) an SPN, compiles it three ways (leveled JAX executor, Pallas
+  kernel, VLIW processor program) and serves batched requests, reporting
+  throughput per backend plus the processor's ops/cycle (the paper's
+  metric).
+- ``lm``: batched LM serving — prefill a prompt batch then decode N
+  tokens with the KV cache, on the smoke config (CPU-sized).
+
+    PYTHONPATH=src python -m repro.launch.serve --mode spn --dataset nltcs
+    PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen2-0.5b
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def serve_spn(dataset: str, batch: int, n_batches: int,
+              use_kernel: bool = True) -> dict:
+    from ..core import executors, learn, program
+    from ..core.compiler.pipeline import compile_program
+    from ..core.processor import sim
+    from ..core.processor.config import PTREE
+    from ..data import spn_datasets
+    from ..kernels.spn_eval import spn_eval
+
+    X = spn_datasets.load(dataset, "train", 400)
+    net = learn.learn_spn(X, min_instances=64)
+    prog = program.lower(net)
+    vprog = compile_program(prog, PTREE)
+    print(f"SPN[{dataset}]: {prog.n_ops} ops, {prog.num_levels} levels; "
+          f"Ptree {vprog.ops_per_cycle:.2f} ops/cycle")
+
+    Xq = spn_datasets.load(dataset, "test", batch)
+    leaves = jnp.asarray(prog.leaves_from_evidence(Xq), jnp.float32)
+
+    # warmup + timed loops
+    out = {}
+    def bench(name, fn):
+        fn()  # compile
+        t0 = time.time()
+        for _ in range(n_batches):
+            r = fn()
+        jax.block_until_ready(r)
+        dt = time.time() - t0
+        out[name] = {"us_per_batch": dt / n_batches * 1e6,
+                     "evals_per_s": batch * n_batches / dt}
+        print(f"  {name:18s} {out[name]['us_per_batch']:10.1f} us/batch "
+              f"({out[name]['evals_per_s']:12.0f} evals/s)")
+        return r
+
+    r_lvl = bench("leveled-jax", lambda: executors.eval_leveled(prog, leaves, None, True))
+    if use_kernel:
+        r_ker = bench("pallas-kernel", lambda: spn_eval(prog, leaves, log_domain=True))
+        err = float(jnp.abs(r_ker - r_lvl).max())
+        print(f"  kernel vs leveled max |Δ|: {err:.2e}")
+    res = sim.simulate(vprog, prog, Xq[:8], PTREE)
+    ref = executors.eval_ops_numpy(prog, np.asarray(prog.leaves_from_evidence(Xq[:8])))
+    assert np.allclose(res.root_values, ref, rtol=1e-4), "processor mismatch"
+    out["processor_sim"] = {"ops_per_cycle": res.ops_per_cycle,
+                            "cycles": res.cycles}
+    print(f"  processor-sim      {res.ops_per_cycle:.2f} ops/cycle "
+          f"({res.cycles} cycles/eval-batch)")
+    return out
+
+
+def serve_lm(arch: str, batch: int, prompt_len: int, gen_len: int) -> dict:
+    from ..configs.base import get_smoke_config
+    from ..models import api
+
+    cfg = get_smoke_config(arch)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
+                          jnp.int32)
+    cache = api.init_cache(cfg, batch, prompt_len + gen_len)
+
+    prefill = jax.jit(lambda p, t, c: api.prefill(cfg, p, t, c))
+    decode = jax.jit(lambda p, c, t: api.decode_step(cfg, p, c, t))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts, cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    outs = [toks]
+    for _ in range(gen_len - 1):
+        logits, cache = decode(params, cache, toks)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs.append(toks)
+    jax.block_until_ready(toks)
+    t_decode = time.time() - t0
+    text = jnp.concatenate(outs, axis=1)
+    tok_s = batch * (gen_len - 1) / max(t_decode, 1e-9)
+    print(f"LM[{arch}] prefill {batch}x{prompt_len} in {t_prefill*1e3:.1f} ms; "
+          f"decode {gen_len-1} steps @ {tok_s:.0f} tok/s")
+    return {"prefill_s": t_prefill, "decode_s": t_decode,
+            "tokens": np.asarray(text)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["spn", "lm"], default="spn")
+    ap.add_argument("--dataset", default="nltcs")
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--batches", type=int, default=20)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+    if args.mode == "spn":
+        serve_spn(args.dataset, args.batch, args.batches)
+    else:
+        serve_lm(args.arch, min(args.batch, 8), args.prompt_len,
+                 args.gen_len)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Step functions: train / prefill / decode, shared by dry-run + drivers."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import api
+from ..optim import adamw
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    *, remat: bool = True):
+    def train_step(params, opt_state, batch):
+        def lossf(p):
+            return api.loss_fn(cfg, p, batch, remat=remat)
+        (loss, metrics), grads = jax.value_and_grad(
+            lossf, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw.apply_gradients(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, dict(metrics, loss=loss, **opt_metrics)
+    return train_step
+
+
+def make_grad_accum_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                         n_micro: int, *, remat: bool = True):
+    """Gradient accumulation: batch's leading dim is split into n_micro."""
+    def train_step(params, opt_state, batch):
+        def lossf(p, mb):
+            return api.loss_fn(cfg, p, mb, remat=remat)
+
+        def micro(carry, mb):
+            gsum, lsum = carry
+            (loss, _), g = jax.value_and_grad(lossf, has_aux=True)(params, mb)
+            return (jax.tree.map(jnp.add, gsum, g), lsum + loss), None
+
+        micro_batches = jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                + x.shape[1:]), batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), micro_batches)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        params, opt_state, om = adamw.apply_gradients(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, dict(loss=lsum / n_micro, **om)
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, tokens, cache, **extras):
+        return api.prefill(cfg, params, tokens, cache, **extras)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, tokens):
+        return api.decode_step(cfg, params, cache, tokens)
+    return decode_step

@@ -1,0 +1,157 @@
+"""Training driver — the full production loop at laptop scale.
+
+Wires every substrate together: config → sharding plan → jit'd train step
+(AdamW + optional grad accumulation + optional int8 error-feedback
+compression) → deterministic data pipeline → async checkpointing →
+heartbeat/watchdog → restart-from-last-good on failure.
+
+CPU-host note: runs the SMOKE config of the chosen arch by default (the
+full configs are exercised via the dry-run); pass ``--full`` only on real
+hardware.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --steps 50 --ckpt /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import AsyncCheckpointer, latest_step, restore
+from ..configs.base import get_config, get_smoke_config
+from ..data.lm_pipeline import PipelineConfig, TokenPipeline
+from ..models import api
+from ..models.common import reset_act_rules, set_act_rules
+from ..optim import AdamWConfig, adamw
+from ..optim import compress as C
+from ..parallel.plan import Planner
+from ..runtime import FailureInjector, Heartbeat, Watchdog
+from . import step_fns
+from .mesh import make_local_mesh
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    arch: str = "qwen2-0.5b"
+    arch_config: Any = None        # explicit ArchConfig overrides ``arch``
+    full: bool = False
+    steps: int = 50
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_dir: str | None = None
+    ckpt_every: int = 10
+    seed: int = 0
+    accum: int = 1
+    compress_grads: bool = False
+    opt: AdamWConfig = dataclasses.field(default_factory=lambda: AdamWConfig(
+        lr=1e-3, warmup_steps=10, total_steps=1000))
+
+
+class Trainer:
+    def __init__(self, tc: TrainConfig, *, mesh=None,
+                 injector: FailureInjector | None = None):
+        self.tc = tc
+        self.cfg = (tc.arch_config if tc.arch_config is not None else
+                    get_config(tc.arch) if tc.full
+                    else get_smoke_config(tc.arch))
+        self.mesh = mesh if mesh is not None else make_local_mesh()
+        self.planner = Planner(self.cfg, self.mesh)
+        self.pipe = TokenPipeline(PipelineConfig(
+            vocab=self.cfg.vocab, seq_len=tc.seq_len,
+            global_batch=tc.global_batch, seed=tc.seed))
+        self.injector = injector
+        if tc.accum > 1:
+            fn = step_fns.make_grad_accum_step(self.cfg, tc.opt, tc.accum,
+                                               remat=False)
+        else:
+            fn = step_fns.make_train_step(self.cfg, tc.opt, remat=False)
+        self.step_fn = jax.jit(fn, donate_argnums=(0, 1))
+        self.ckpt = (AsyncCheckpointer(tc.ckpt_dir)
+                     if tc.ckpt_dir else None)
+        self.hb = (Heartbeat(tc.ckpt_dir + "/hb", 0) if tc.ckpt_dir else None)
+        self.watchdog = Watchdog(tc.ckpt_dir + "/hb") if tc.ckpt_dir else None
+        self.residuals = None
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> dict:
+        params = api.init_params(self.cfg, jax.random.PRNGKey(self.tc.seed))
+        return {"params": params, "opt": adamw.init_state(params), "step": 0}
+
+    def resume_state(self) -> dict | None:
+        if not self.tc.ckpt_dir or latest_step(self.tc.ckpt_dir) is None:
+            return None
+        target = jax.eval_shape(self.init_state)
+        state, extras = restore(self.tc.ckpt_dir, target)
+        state["step"] = int(extras["step"])
+        return state
+
+    # ------------------------------------------------------------------
+    def run(self, state: dict) -> dict:
+        tc = self.tc
+        token = set_act_rules(self.planner.act_rules())
+        losses = []
+        try:
+            params, opt = state["params"], state["opt"]
+            if tc.compress_grads and self.residuals is None:
+                self.residuals = C.init_residuals(params)
+            for step in range(state["step"], tc.steps):
+                t0 = time.time()
+                if self.injector is not None:
+                    self.injector.maybe_fail(step)
+                batch = jax.tree.map(jnp.asarray,
+                                     self.pipe.batch_for_step(step))
+                params, opt, metrics = self.step_fn(params, opt, batch)
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                dt = time.time() - t0
+                if self.hb:
+                    self.hb.beat(step)
+                    self.watchdog.record_step_time(0, dt)
+                if self.ckpt and (step + 1) % tc.ckpt_every == 0:
+                    self.ckpt.save(step + 1,
+                                   {"params": params, "opt": opt,
+                                    "step": jnp.asarray(step + 1)},
+                                   extras={"step": step + 1,
+                                           "data": self.pipe.state_dict(step + 1)})
+            if self.ckpt:
+                self.ckpt.save(tc.steps, {"params": params, "opt": opt,
+                                          "step": jnp.asarray(tc.steps)},
+                               extras={"step": tc.steps,
+                                       "data": self.pipe.state_dict(tc.steps)})
+                self.ckpt.close()
+            return {"params": params, "opt": opt, "step": tc.steps,
+                    "losses": losses}
+        finally:
+            reset_act_rules(token)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+    tc = TrainConfig(arch=args.arch, full=args.full, steps=args.steps,
+                     global_batch=args.batch, seq_len=args.seq,
+                     ckpt_dir=args.ckpt, accum=args.accum,
+                     compress_grads=args.compress_grads)
+    tr = Trainer(tc)
+    state = tr.resume_state() or tr.init_state()
+    out = tr.run(state)
+    l = out["losses"]
+    print(f"steps {len(l)}  first loss {l[0]:.4f}  last loss {l[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import api, attention, common, encdec, hybrid, mlp, moe, spn_head, ssm, transformer, vlm  # noqa: F401

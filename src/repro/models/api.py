@@ -1,0 +1,130 @@
+"""Unified model API — family dispatch + per-shape input specs.
+
+Everything downstream (launcher, dry-run, trainer, server, tests) talks
+to models through this module:
+
+- ``init_params(cfg, key)`` / ``param_specs(cfg)``
+- ``loss_fn(cfg, params, batch)``           (train shapes)
+- ``prefill(cfg, params, tokens, cache, **extras)``
+- ``decode_step(cfg, params, cache, tokens)``
+- ``cache_specs(cfg, batch, max_len)``
+- ``input_specs(cfg, shape)``               ShapeDtypeStruct stand-ins
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import encdec, hybrid, ssm, transformer, vlm
+from .common import Params
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": vlm,
+    "encdec": encdec,
+    "ssm": ssm,
+    "hybrid": hybrid,
+}
+
+
+def family_module(cfg: ArchConfig):
+    return _FAMILIES[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_params(cfg: ArchConfig, key) -> Params:
+    return family_module(cfg).init_params(cfg, key)
+
+
+def param_specs(cfg: ArchConfig) -> Params:
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+def loss_fn(cfg: ArchConfig, params: Params, batch: dict, **kw):
+    return family_module(cfg).loss_fn(cfg, params, batch, **kw)
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens, cache, **extras):
+    return family_module(cfg).prefill(cfg, params, tokens, cache, **extras)
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache, tokens):
+    return family_module(cfg).decode_step(cfg, params, cache, tokens)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    if cfg.family == "ssm":
+        return ssm.mamba_cache_specs(cfg, batch)
+    return family_module(cfg).cache_specs(cfg, batch, max_len, dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    if cfg.family == "ssm":
+        return ssm.init_mamba_cache(cfg, batch)
+    return family_module(cfg).init_cache(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# input specs per assigned shape (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _bf16(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"frames": _bf16((B, cfg.enc_ctx, cfg.d_model)),
+                "tokens": _i32((B, S)), "labels": _i32((B, S))}
+    if cfg.family == "vlm":
+        St = S - cfg.n_img_tokens
+        return {"patch_embeds": _bf16((B, cfg.n_img_tokens, cfg.d_model)),
+                "tokens": _i32((B, St)), "labels": _i32((B, St))}
+    return {"tokens": _i32((B, S)), "labels": _i32((B, S))}
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """kwargs specs for ``prefill`` (tokens + cache + modality extras)."""
+    B, S = shape.global_batch, shape.seq_len
+    out: dict[str, Any] = {"cache": cache_specs(cfg, B, S)}
+    if cfg.family == "encdec":
+        out["tokens"] = _i32((B, S))
+        out["frames"] = _bf16((B, cfg.enc_ctx, cfg.d_model))
+    elif cfg.family == "vlm":
+        out["tokens"] = _i32((B, S - cfg.n_img_tokens))
+        out["patch_embeds"] = _bf16((B, cfg.n_img_tokens, cfg.d_model))
+    else:
+        out["tokens"] = _i32((B, S))
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """kwargs specs for ``decode_step``: one new token, cache of seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    return {"cache": cache_specs(cfg, B, S), "tokens": _i32((B, 1))}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)

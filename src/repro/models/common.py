@@ -1,0 +1,151 @@
+"""Shared building blocks for the architecture zoo.
+
+Pure-functional JAX: parameters are plain dict pytrees, every module is a
+pair of ``init_*`` (shape-only, usable under ``jax.eval_shape``) and apply
+functions. Compute dtype is bf16 with f32 accumulation (``preferred_element_type``
+on matmuls); parameters are bf16 with f32 norms.
+"""
+from __future__ import annotations
+
+import contextvars
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict  # nested dict pytree of jnp arrays
+
+# ---------------------------------------------------------------------------
+# activation-sharding hook: parallel/plan.py installs a rule table; models
+# call shard(x, "logical_name") at block boundaries. No mesh → no-op.
+# ---------------------------------------------------------------------------
+_ACT_RULES: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "act_rules", default=None)
+
+
+def set_act_rules(rules: dict | None):
+    return _ACT_RULES.set(rules)
+
+
+def reset_act_rules(token) -> None:
+    _ACT_RULES.reset(token)
+
+
+def shard(x: jnp.ndarray, name: str) -> jnp.ndarray:
+    rules = _ACT_RULES.get()
+    if rules is None or rules.get(name) is None:
+        return x            # no rule → leave it to GSPMD propagation
+    return jax.lax.with_sharding_constraint(x, rules[name])
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
+               scale: float | None = None) -> jnp.ndarray:
+    scale = (1.0 / np.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """Rotate ``x`` (..., seq, heads, head_dim) by per-position angles.
+
+    ``positions``: (..., seq) int32 (broadcastable against x's batch dims).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                   # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul with f32 accumulation
+# ---------------------------------------------------------------------------
+def mm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = mm(x, p["w"])
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.bfloat16) -> Params:
+    p = {"w": dense_init(key, d_in, d_out, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token cross-entropy. logits (..., V) f32, labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def count_params(params: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

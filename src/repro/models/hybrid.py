@@ -1,0 +1,246 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block.
+
+Structure (simplification of Zamba2 noted in DESIGN.md §4): ``n_layers``
+mamba2 blocks; ONE transformer block (attention + SwiGLU MLP, single set
+of weights) is applied after every ``attn_every`` mamba blocks. With 81
+layers and attn_every=6 that is 13 shared-block applications; the 3
+trailing mamba layers close the stack.
+
+Layout: mamba params are stacked ``(n_groups, attn_every, ...)`` for a
+nested scan, plus a ``(n_tail, ...)`` stack. Each shared-block
+*application* has its own KV cache at decode time (weights shared, state
+not).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as A
+from . import ssm as S
+from .common import (Params, embed_init, init_linear, init_rmsnorm, linear,
+                     rmsnorm, shard, softmax_xent, split_keys)
+from .mlp import init_swiglu, swiglu
+
+
+def group_shape(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(n_groups, group_size, n_tail)."""
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    return n_groups, g, cfg.n_layers - n_groups * g
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_shared_block(cfg: ArchConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model),
+        "attn": A.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim),
+        "ln2": init_rmsnorm(cfg.d_model),
+        "mlp": init_swiglu(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    n_groups, g, n_tail = group_shape(cfg)
+    k_e, k_m, k_t, k_s, k_h = jax.random.split(key, 5)
+    mkeys = jnp.stack(split_keys(k_m, n_groups * g))
+    mkeys = mkeys.reshape((n_groups, g) + mkeys.shape[1:])   # typed-key safe
+    groups = jax.vmap(jax.vmap(lambda k: S.init_mamba_block(cfg, k)))(mkeys)
+    p: Params = {
+        "embed": embed_init(k_e, cfg.vocab, cfg.d_model),
+        "mamba_groups": groups,
+        "shared": init_shared_block(cfg, k_s),
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "lm_head": init_linear(k_h, cfg.d_model, cfg.vocab),
+    }
+    if n_tail:
+        tkeys = jnp.stack(split_keys(k_t, n_tail))
+        p["mamba_tail"] = jax.vmap(lambda k: S.init_mamba_block(cfg, k))(tkeys)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _apply_shared(cfg: ArchConfig, p: Params, x: jnp.ndarray,
+                  flash: bool | None = None) -> jnp.ndarray:
+    h = rmsnorm(p["ln1"], x)
+    attn_out = A.attention_block(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, flash=flash)
+    x = x + attn_out
+    x = x + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+    return shard(x, "act_resid")
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            *, remat: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "act_resid")
+    n_groups, g, n_tail = group_shape(cfg)
+
+    mamba = functools.partial(S.apply_mamba_block, cfg)
+    shared = functools.partial(_apply_shared, cfg, params["shared"])
+    if remat:
+        mamba = jax.checkpoint(mamba,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+        shared = jax.checkpoint(shared,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+
+    def inner(h, layer_p):
+        h2, _ = mamba(layer_p, h)
+        return h2, None
+
+    def outer(h, group_p):
+        h, _ = jax.lax.scan(inner, h, group_p)
+        return shared(h), None
+
+    x, _ = jax.lax.scan(outer, x, params["mamba_groups"])
+    if n_tail:
+        x, _ = jax.lax.scan(inner, x, params["mamba_tail"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: dict, *,
+            remat: bool = True):
+    from .transformer import logits_from_hidden
+    hidden, aux = forward(cfg, params, batch["tokens"], remat=remat)
+    logits = logits_from_hidden(cfg, params, hidden)
+    xent = softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return xent, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Params:
+    n_groups, g, n_tail = group_shape(cfg)
+    mamba = S.mamba_cache_specs(cfg, batch)
+    def regroup(s, lead):
+        return jax.ShapeDtypeStruct((lead,) + s.shape[1:], s.dtype)
+    specs = {
+        "ssm_groups": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_groups, g) + s.shape[1:], s.dtype),
+            {"ssm": regroup(mamba["ssm"], 1), "conv": regroup(mamba["conv"], 1)}),
+        "kv": {
+            "k": jax.ShapeDtypeStruct(
+                (n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jax.ShapeDtypeStruct(
+                (n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        },
+        "length": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if n_tail:
+        specs["ssm_tail"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_tail,) + s.shape[1:], s.dtype),
+            {"ssm": regroup(mamba["ssm"], 1), "conv": regroup(mamba["conv"], 1)})
+    return specs
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_len, dtype))
+
+
+def _shared_decode(cfg: ArchConfig, p: Params, h: jnp.ndarray,
+                   k_c, v_c, length):
+    B = h.shape[0]
+    positions = jnp.full((B, 1), length, jnp.int32)
+    q, k, v = A.qkv(p["attn"], rmsnorm(p["ln1"], h), cfg.n_heads,
+                    cfg.n_kv_heads, cfg.head_dim, positions, cfg.rope_theta)
+    k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype),
+                                       (0, length, 0, 0))
+    v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype),
+                                       (0, length, 0, 0))
+    o = A.decode_attention(q, k_c, v_c, length + 1)
+    h = h + linear(p["attn"]["o"], o.reshape(B, 1, -1))
+    h = h + swiglu(p["mlp"], rmsnorm(p["ln2"], h))
+    return h, k_c, v_c
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jnp.ndarray):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    n_groups, g, n_tail = group_shape(cfg)
+    length = cache["length"]
+
+    def inner(h, xs):
+        layer_p, s_ssm, s_conv = xs
+        h2, s_ssm, s_conv = S.mamba_block_step(cfg, layer_p, h, s_ssm, s_conv)
+        return h2, (s_ssm, s_conv)
+
+    def outer(h, xs):
+        group_p, states, k_c, v_c = xs
+        h, new_states = jax.lax.scan(
+            inner, h, (group_p, states["ssm"], states["conv"]))
+        h, k_c, v_c = _shared_decode(cfg, params["shared"], h, k_c, v_c, length)
+        return h, ({"ssm": new_states[0], "conv": new_states[1]}, k_c, v_c)
+
+    x, (gstates, k_new, v_new) = jax.lax.scan(
+        outer, x, (params["mamba_groups"], cache["ssm_groups"],
+                   cache["kv"]["k"], cache["kv"]["v"]))
+    new_cache = dict(cache, ssm_groups=gstates,
+                     kv={"k": k_new, "v": v_new}, length=length + 1)
+    if n_tail:
+        x, tstates = jax.lax.scan(
+            inner, x, (params["mamba_tail"], cache["ssm_tail"]["ssm"],
+                       cache["ssm_tail"]["conv"]))
+        new_cache["ssm_tail"] = {"ssm": tstates[0], "conv": tstates[1]}
+    from .transformer import logits_from_hidden
+    return logits_from_hidden(cfg, params, x), new_cache
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            cache: Params):
+    """Prefill: chunked SSD for mamba, flash attention for shared blocks."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, Sq = tokens.shape
+    n_groups, g, n_tail = group_shape(cfg)
+
+    def inner(h, layer_p):
+        h2, state = S.apply_mamba_block(cfg, layer_p, h, return_state=True)
+        return h2, state
+
+    def outer(h, xs):
+        group_p, k_c, v_c = xs
+        h, states = jax.lax.scan(inner, h, group_p)
+        # shared attn over the full prefix, cache K/V
+        hn = rmsnorm(params["shared"]["ln1"], h)
+        q, k, v = A.qkv(params["shared"]["attn"], hn, cfg.n_heads,
+                        cfg.n_kv_heads, cfg.head_dim, None, cfg.rope_theta)
+        o = A.flash_attention(q, k, v, causal=True,
+                              q_block=min(2048, Sq), kv_block=min(1024, Sq))
+        h = h + linear(params["shared"]["attn"]["o"], o.reshape(B, Sq, -1))
+        h = h + swiglu(params["shared"]["mlp"],
+                       rmsnorm(params["shared"]["ln2"], h))
+        k_c = jax.lax.dynamic_update_slice(
+            k_c, k.astype(k_c.dtype), (0, 0, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(
+            v_c, v.astype(v_c.dtype), (0, 0, 0, 0))
+        return h, (states, k_c, v_c)
+
+    x, (gstates, k_new, v_new) = jax.lax.scan(
+        outer, x, (params["mamba_groups"], cache["kv"]["k"],
+                   cache["kv"]["v"]))
+    new_cache = dict(cache)
+    new_cache["ssm_groups"] = {
+        "ssm": gstates.astype(cache["ssm_groups"]["ssm"].dtype),
+        "conv": jnp.zeros_like(cache["ssm_groups"]["conv"])}
+    new_cache["kv"] = {"k": k_new, "v": v_new}
+    new_cache["length"] = jnp.asarray(Sq, jnp.int32)
+    if n_tail:
+        x, tstates = jax.lax.scan(inner, x, params["mamba_tail"])
+        new_cache["ssm_tail"] = {
+            "ssm": tstates.astype(cache["ssm_tail"]["ssm"].dtype),
+            "conv": jnp.zeros_like(cache["ssm_tail"]["conv"])}
+    from .transformer import logits_from_hidden
+    return logits_from_hidden(cfg, params, x[:, -1:]), new_cache

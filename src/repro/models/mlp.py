@@ -1,0 +1,38 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (whisper/GPT-family)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, init_linear, linear, shard
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, dtype=dtype),
+        "up": init_linear(k2, d_model, d_ff, dtype=dtype),
+        "down": init_linear(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(linear(p["gate"], x).astype(jnp.float32)).astype(x.dtype)
+    h = h * linear(p["up"], x)
+    h = shard(h, "act_ff")
+    return linear(p["down"], h)
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, *, bias: bool = True,
+                  dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "up": init_linear(k1, d_model, d_ff, bias=bias, dtype=dtype),
+        "down": init_linear(k2, d_ff, d_model, bias=bias, dtype=dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(linear(p["up"], x).astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "act_ff")
+    return linear(p["down"], h)

@@ -1,0 +1,79 @@
+"""SPN reasoning head — the paper's fig. 1 hybrid integration point.
+
+"Deep Learning for perception and probabilistic models for reasoning":
+any backbone in the zoo can attach this head. The backbone's pooled
+features are mapped to *soft evidence* on the SPN's indicator leaves
+(per-variable Bernoulli probabilities), and the SPN — executed by the
+Pallas kernel (deploy) or the leveled executor (train, differentiable) —
+returns the log-probability of the query under the probabilistic model.
+
+The SPN parameters can be trained jointly (gradients flow through the
+log-domain leveled executor into both SPN weights and the projection).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import executors
+from ..core.program import TensorProgram
+from .common import Params, init_linear, linear
+
+
+def init_spn_head(key, d_model: int, prog: TensorProgram) -> Params:
+    """Trainable head. SPN sum-weights live as per-sum softmax logits so
+    training keeps the circuit a NORMALIZED distribution (log P ≤ 0)."""
+    return {
+        "proj": init_linear(key, d_model, prog.num_vars, dtype=jnp.float32),
+        "spn_logits": jnp.log(jnp.clip(
+            jnp.asarray(prog.param_values, jnp.float32), 1e-6, None)),
+    }
+
+
+def _group_info(prog: TensorProgram):
+    gidx = np.full(prog.m_param, -1, np.int32)
+    for g, idx in enumerate(prog.sum_weight_groups):
+        gidx[idx] = g
+    return jnp.asarray(gidx), len(prog.sum_weight_groups)
+
+
+def spn_params_from_logits(prog: TensorProgram, logits: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """Per-sum softmax; frozen (non-weight) params pass through exp∘log."""
+    gidx, ng = _group_info(prog)
+    p = jnp.exp(logits)
+    grp = jnp.where(gidx < 0, ng, gidx)
+    totals = jnp.zeros(ng + 1, p.dtype).at[grp].add(p)
+    denom = jnp.where(gidx < 0, 1.0, totals[grp])
+    return p / jnp.maximum(denom, 1e-30)
+
+
+def evidence_from_features(prog: TensorProgram, probs: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """Per-variable Bernoulli probs (B, num_vars) → leaf inputs (B, m_ind).
+
+    Soft evidence: indicator [var==1] gets p, [var==0] gets 1-p — the SPN
+    then computes the expected likelihood under independent leaf beliefs.
+    """
+    var = jnp.asarray(prog.ind_var)
+    val = jnp.asarray(prog.ind_value)
+    pv = probs[:, var]                                 # (B, m_ind)
+    return jnp.where(val[None, :] == 1, pv, 1.0 - pv)
+
+
+def apply_spn_head(prog: TensorProgram, p: Params, features: jnp.ndarray,
+                   *, use_kernel: bool = False) -> jnp.ndarray:
+    """features (B, D) → (B,) log-probability of the soft evidence."""
+    probs = jax.nn.sigmoid(linear(p["proj"], features.astype(jnp.float32)))
+    leaves = evidence_from_features(prog, probs)
+    params = spn_params_from_logits(prog, p["spn_logits"])
+    if use_kernel:
+        from ..kernels.spn_eval import spn_eval
+        return spn_eval(prog, leaves, params, log_domain=True)
+    return executors.eval_leveled(prog, leaves, params, True)
+
+
+def nll_loss(prog: TensorProgram, p: Params, features: jnp.ndarray
+             ) -> jnp.ndarray:
+    return -jnp.mean(apply_spn_head(prog, p, features))

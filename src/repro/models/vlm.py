@@ -1,0 +1,48 @@
+"""InternVL2-style VLM: InternLM2 text backbone + stubbed ViT frontend.
+
+Per the assignment the modality frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings (B, n_img_tokens, d_model) — the
+InternViT-300M tower + pixel-shuffle + MLP projector that produce them
+are outside scope. The backbone (24L/2048d GQA transformer) is the full
+implementation from :mod:`transformer`; image tokens are prepended to the
+text sequence and excluded from the LM loss.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import transformer as T
+from .common import Params
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    return T.init_params(cfg, key)
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: dict, *,
+            remat: bool = True):
+    """batch: patch_embeds (B,P,D), tokens (B,S), labels (B,S)."""
+    return T.loss_fn(cfg, params,
+                     dict(batch, prefix_embeds=batch["patch_embeds"]),
+                     remat=remat)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Params:
+    return T.cache_specs(cfg, batch, max_len, dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    return T.init_cache(cfg, batch, max_len, dtype)
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            cache: Params, *, patch_embeds: jnp.ndarray):
+    return T.prefill(cfg, params, tokens, cache, prefix_embeds=patch_embeds)
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jnp.ndarray):
+    return T.decode_step(cfg, params, cache, tokens)

@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, apply_gradients, global_norm, init_state, schedule
+from . import compress
+
+__all__ = ["AdamWConfig", "apply_gradients", "global_norm", "init_state",
+           "schedule", "compress"]

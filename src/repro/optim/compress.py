@@ -1,0 +1,83 @@
+"""int8 error-feedback gradient compression for the DP all-reduce.
+
+The classic distributed-optimization trick: before the data-parallel
+gradient reduction, each shard quantizes its gradient to int8 with a
+per-tensor scale; the quantization residual is kept locally and added
+back the next step (error feedback keeps the scheme unbiased over time).
+The reduction then moves 1/4 of the bytes.
+
+Two entry points:
+
+- :func:`compress_tree` — pure per-leaf quantize→dequantize with residual
+  carry. The trainer applies it to local gradients before the (implicit)
+  DP mean; GSPMD still reduces f32, but the *information content* matches
+  the compressed scheme, so convergence behaviour is faithful and testable.
+- :func:`compressed_mean_shardmap` — the explicit-collective variant: a
+  ``shard_map`` over the DP axes whose psum operands are the dequantized
+  int8 values; use when the mesh is real and the collective bytes matter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_roundtrip(x: jnp.ndarray, residual: jnp.ndarray
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize (x + residual); return (dequantized, new residual)."""
+    t = x.astype(jnp.float32) + residual
+    q, s = quantize(t)
+    d = dequantize(q, s)
+    return d, t - d
+
+
+def init_residuals(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads: Any, residuals: Any) -> tuple[Any, Any]:
+    """Error-feedback int8 roundtrip over a whole gradient pytree."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out = [compress_roundtrip(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def compressed_mean_shardmap(mesh: Mesh, axes, grad_leaf: jnp.ndarray,
+                             residual_leaf: jnp.ndarray):
+    """Explicit compressed DP-mean of one leaf.
+
+    ``grad_leaf`` has a leading DP-shard axis of size = prod(axes sizes)
+    (per-replica partial gradients); returns (mean (unsharded), residual').
+    """
+    axes_t = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in axes_t:
+        n *= mesh.shape[a]
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(axes_t if len(axes_t) > 1 else axes_t[0]),
+                  P(axes_t if len(axes_t) > 1 else axes_t[0])),
+        out_specs=(P(), P(axes_t if len(axes_t) > 1 else axes_t[0])))
+    def body(g, r):
+        d, r_new = compress_roundtrip(g[0], r[0])
+        total = jax.lax.psum(d, axes_t) / n
+        return total, r_new[None]
+
+    return body(grad_leaf, residual_leaf)

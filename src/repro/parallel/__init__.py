@@ -1,0 +1,3 @@
+from .plan import Planner, dp_axes
+
+__all__ = ["Planner", "dp_axes"]

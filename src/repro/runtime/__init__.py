@@ -1,0 +1,5 @@
+from .fault import (FailureInjector, Heartbeat, RestartPolicy,
+                    TrainingAborted, Watchdog, run_with_restarts)
+
+__all__ = ["FailureInjector", "Heartbeat", "RestartPolicy", "TrainingAborted",
+           "Watchdog", "run_with_restarts"]

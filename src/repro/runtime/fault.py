@@ -1,0 +1,140 @@
+"""Fault tolerance: watchdog, straggler detection, restart-from-checkpoint.
+
+At 1000+ nodes the failure model is: (a) a worker dies (process exit /
+network partition) — detected by missed heartbeats; (b) a worker limps
+(thermal throttle, flaky HBM, slow NIC) — detected as a step-time outlier
+vs. the fleet median; (c) the job process itself crashes — handled by the
+restart harness re-entering from the last committed checkpoint.
+
+Single-host notes: heartbeats are files (one per simulated worker) so the
+mechanism is testable here; on a real cluster the same Watchdog consumes
+per-host heartbeat RPCs. The restart harness is topology-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from collections import deque
+from typing import Any, Callable
+
+
+# ---------------------------------------------------------------------------
+# heartbeats
+# ---------------------------------------------------------------------------
+class Heartbeat:
+    """Worker side: touch a heartbeat file with step/timestamp."""
+
+    def __init__(self, dirpath: str, worker: int):
+        self.path = os.path.join(dirpath, f"worker_{worker:05d}.hb")
+        os.makedirs(dirpath, exist_ok=True)
+
+    def beat(self, step: int) -> None:
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "t": time.time()}, f)
+        os.rename(tmp, self.path)
+
+
+class Watchdog:
+    """Coordinator side: flag dead (stale heartbeat) and straggler workers."""
+
+    def __init__(self, dirpath: str, *, timeout_s: float = 60.0,
+                 straggler_factor: float = 2.0, window: int = 32):
+        self.dir = dirpath
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.step_times: dict[int, deque] = {}
+        self.window = window
+
+    def _workers(self) -> list[tuple[int, dict]]:
+        out = []
+        if not os.path.isdir(self.dir):
+            return out
+        for f in os.listdir(self.dir):
+            if f.endswith(".hb"):
+                wid = int(f.split("_")[1].split(".")[0])
+                try:
+                    with open(os.path.join(self.dir, f)) as fh:
+                        out.append((wid, json.load(fh)))
+                except (json.JSONDecodeError, OSError):
+                    continue
+        return out
+
+    def dead_workers(self, now: float | None = None) -> list[int]:
+        now = time.time() if now is None else now
+        return [wid for wid, hb in self._workers()
+                if now - hb["t"] > self.timeout_s]
+
+    def record_step_time(self, worker: int, seconds: float) -> None:
+        self.step_times.setdefault(worker, deque(maxlen=self.window)).append(
+            seconds)
+
+    def stragglers(self) -> list[int]:
+        """Workers whose median step time exceeds fleet median × factor."""
+        med = {w: sorted(t)[len(t) // 2] for w, t in self.step_times.items()
+               if len(t) >= 4}
+        if len(med) < 2:
+            return []
+        fleet = sorted(med.values())[len(med) // 2]
+        return [w for w, m in med.items() if m > fleet * self.straggler_factor]
+
+
+# ---------------------------------------------------------------------------
+# restart harness
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RestartPolicy:
+    max_failures: int = 3
+    backoff_s: float = 0.0          # 0 for tests; seconds on real clusters
+
+
+class TrainingAborted(RuntimeError):
+    pass
+
+
+def run_with_restarts(make_state: Callable[[], Any],
+                      resume_state: Callable[[], Any | None],
+                      run: Callable[[Any], Any],
+                      policy: RestartPolicy = RestartPolicy()) -> Any:
+    """Drive ``run(state)`` to completion with restart-on-failure.
+
+    - ``resume_state()`` returns state restored from the last committed
+      checkpoint, or None on a cold start (then ``make_state()`` is used);
+    - ``run`` either returns the finished result or raises. On raise, we
+      restore and retry (the raised step's work is lost back to the last
+      checkpoint — exactly the paper-scale deployment contract).
+    """
+    failures = 0
+    while True:
+        state = resume_state()
+        if state is None:
+            state = make_state()
+        try:
+            return run(state)
+        except TrainingAborted:
+            raise
+        except Exception:
+            failures += 1
+            if failures > policy.max_failures:
+                raise TrainingAborted(
+                    f"exceeded {policy.max_failures} restarts") from None
+            if policy.backoff_s:
+                time.sleep(policy.backoff_s)
+
+
+# ---------------------------------------------------------------------------
+# failure injection (tests / chaos drills)
+# ---------------------------------------------------------------------------
+class FailureInjector:
+    """Deterministically raise at given steps — chaos-test the harness."""
+
+    def __init__(self, fail_at_steps: set[int]):
+        self.fail_at = set(fail_at_steps)
+        self.tripped: set[int] = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.tripped:
+            self.tripped.add(step)
+            raise RuntimeError(f"injected failure at step {step}")

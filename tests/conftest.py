@@ -1,0 +1,32 @@
+import numpy as np
+import pytest
+
+from repro.core import program
+from repro.core.learn import learn_spn, random_spn
+from repro.data import spn_datasets
+
+
+@pytest.fixture(scope="session")
+def small_spn():
+    return random_spn(8, depth=2, num_sums=2, repetitions=2, seed=1)
+
+
+@pytest.fixture(scope="session")
+def small_prog(small_spn):
+    return program.lower(small_spn)
+
+
+@pytest.fixture(scope="session")
+def nltcs_spn():
+    X = spn_datasets.load("nltcs", "train", 300)
+    return learn_spn(X, min_instances=80)
+
+
+@pytest.fixture(scope="session")
+def nltcs_prog(nltcs_spn):
+    return program.lower(nltcs_spn)
+
+
+@pytest.fixture(scope="session")
+def nltcs_data():
+    return spn_datasets.load("nltcs", "test", 64)

@@ -1,0 +1,60 @@
+"""Integrity of the committed dry-run artifacts (experiments/dryrun).
+
+These JSONs are the §Dry-run/§Roofline deliverable — every applicable
+(arch × shape × mesh) cell must exist with status ok (or a policy skip),
+with coherent roofline terms. Skipped automatically if the artifacts
+haven't been generated in this checkout.
+"""
+import json
+import os
+
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, applicable_shapes, get_config
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(DIR), reason="dry-run artifacts not generated")
+
+
+def _load(arch, shape, mesh):
+    p = os.path.join(DIR, f"{arch}_{shape}_{mesh}.json")
+    assert os.path.exists(p), f"missing cell artifact {p}"
+    with open(p) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_all_cells_present_and_ok(arch, mesh):
+    cfg = get_config(arch)
+    for shape in SHAPES:
+        rec = _load(arch, shape, mesh)
+        if shape in applicable_shapes(cfg):
+            assert rec["status"] == "ok", (arch, shape, mesh, rec.get("error"))
+            roof = rec["roofline"]
+            assert roof["flops"] > 0 and roof["hbm_bytes"] > 0
+            assert roof["bottleneck"] in ("compute", "memory", "collective")
+            assert rec["model_flops"] > 0
+        else:
+            assert rec["status"] == "skipped"
+
+
+def test_long_context_only_subquadratic():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        rec = _load(arch, "long_500k", "single")
+        if cfg.sub_quadratic and cfg.has_decoder:
+            assert rec["status"] == "ok", arch
+        else:
+            assert rec["status"] == "skipped", arch
+
+
+def test_multi_pod_scales_terms():
+    """Pure-DP pod axis: per-chip compute term should not grow 2× when
+    doubling chips (it should shrink or stay equal for train cells)."""
+    for arch in ("qwen2-0.5b", "glm4-9b"):
+        s = _load(arch, "train_4k", "single")["roofline"]
+        m = _load(arch, "train_4k", "multi")["roofline"]
+        assert m["t_compute_s"] <= s["t_compute_s"] * 1.1

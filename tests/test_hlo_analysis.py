@@ -1,0 +1,88 @@
+"""HLO analyzer: shape parsing, trip-weighted walking, dot FLOPs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import (HLOModule, Roofline, analyze_hlo,
+                                       shape_bytes, shape_elems)
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,8]") == 128
+    assert shape_bytes("bf16[10]{0}") == 20
+    assert shape_bytes("pred[2,2]") == 4
+    assert shape_bytes("(s32[], f32[4], /*index=5*/bf16[2,2])") == 4 + 16 + 8
+    assert shape_elems("f32[3,3]") == 9
+
+
+def test_analyze_simple_matmul():
+    """FLOPs of a plain jit'd matmul ≈ 2·M·N·K."""
+    M = N = K = 128
+    f = jax.jit(lambda a, b: a @ b)
+    a = jax.ShapeDtypeStruct((M, K), jnp.float32)
+    b = jax.ShapeDtypeStruct((K, N), jnp.float32)
+    hlo = f.lower(a, b).compile().as_text()
+    acc = analyze_hlo(hlo)
+    expect = 2 * M * N * K
+    assert 0.9 * expect <= acc["dot_flops"] <= 1.2 * expect
+
+
+def test_analyze_scan_trip_weighting():
+    """A scanned matmul must count once per iteration."""
+    T, D = 8, 64
+
+    def f(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((T, D, D), jnp.float32)
+    hlo = jax.jit(f).lower(x, ws).compile().as_text()
+    acc = analyze_hlo(hlo)
+    expect = T * 2 * D * D * D
+    assert 0.9 * expect <= acc["dot_flops"] <= 1.3 * expect, acc["dot_flops"]
+
+
+def test_roofline_bottleneck_logic():
+    r = Roofline(flops=197e12, hbm_bytes=0, collective_bytes=0, chips=1)
+    assert abs(r.t_compute - 1.0) < 1e-9 and r.bottleneck == "compute"
+    r = Roofline(flops=0, hbm_bytes=819e9, collective_bytes=0, chips=1)
+    assert abs(r.t_memory - 1.0) < 1e-9 and r.bottleneck == "memory"
+    r = Roofline(flops=0, hbm_bytes=0, collective_bytes=200e9, chips=1)
+    assert abs(r.t_collective - 1.0) < 1e-9 and r.bottleneck == "collective"
+
+
+def test_module_parse_tuple_types():
+    text = """
+HloModule test
+
+%body.1 (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %y = f32[4,4]{1,0} add(%x, %x)
+  ROOT %t = (s32[], f32[4,4]) tuple(%i, %y)
+}
+
+%cond.1 (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4,4]) tuple(%z, %a)
+  %w = (s32[], f32[4,4]) while(%t0), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[4,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    m = HLOModule(text)
+    assert m.entry == "main"
+    acc = m.analyze()
+    # add of 16 elems × 5 trips
+    assert acc["flops"] >= 5 * 16

@@ -1,0 +1,93 @@
+"""Pallas spn_eval kernel vs oracles: shape/dtype/batch sweeps + hypothesis."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import executors, program
+from repro.core.learn import random_spn
+from repro.kernels.spn_eval import pad_program, spn_eval, spn_eval_ref
+
+
+def _leaves(prog, n, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, 2, size=(n, max(prog.num_vars, 1)))
+    return prog.leaves_from_evidence(X).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# padding layout invariants
+# ---------------------------------------------------------------------------
+def test_pad_program_layout(nltcs_prog):
+    pp = pad_program(nltcs_prog)
+    assert pp.m_pad % 8 == 0 and pp.num_slots % 8 == 0
+    off = pp.m_pad
+    for (o, b, c, isp) in pp.levels:
+        assert o == off and len(b) % 8 == 0
+        assert (b < o).all() and (c < o).all()      # operands from the past
+        off += len(b)
+    assert off == pp.num_slots
+    assert 0 <= pp.root_slot < pp.num_slots
+
+
+# ---------------------------------------------------------------------------
+# kernel vs ref vs float64 oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("batch", [1, 7, 128, 300])
+@pytest.mark.parametrize("log_domain", [False, True])
+def test_kernel_matches_oracle(nltcs_prog, batch, log_domain):
+    leaf = _leaves(nltcs_prog, batch)
+    ref64 = executors.eval_ops_numpy(nltcs_prog, leaf, log_domain)
+    got = np.asarray(spn_eval(nltcs_prog, leaf, log_domain=log_domain))
+    np.testing.assert_allclose(got, ref64, rtol=5e-4, atol=5e-5)
+
+
+def test_kernel_matches_ref_exactly(nltcs_prog):
+    """Kernel and pure-jnp ref share dtype/layout → bitwise equal (linear)."""
+    leaf = _leaves(nltcs_prog, 64)
+    r = np.asarray(spn_eval_ref(nltcs_prog, leaf))
+    k = np.asarray(spn_eval(nltcs_prog, leaf))
+    np.testing.assert_array_equal(k, r)
+
+
+def test_kernel_batch_tile_sweep(small_prog):
+    leaf = _leaves(small_prog, 200)
+    ref = executors.eval_ops_numpy(small_prog, leaf)
+    for bt in (128, 256):
+        got = np.asarray(spn_eval(small_prog, leaf, batch_tile=bt))
+        np.testing.assert_allclose(got, ref, rtol=5e-4)
+
+
+def test_kernel_learned_params(nltcs_prog):
+    """Kernel honours overridden parameters (the differentiable path)."""
+    rng = np.random.default_rng(1)
+    params = jnp.asarray(
+        np.clip(nltcs_prog.param_values
+                * rng.uniform(0.5, 1.5, nltcs_prog.m_param), 1e-4, 1.0),
+        jnp.float32)
+    leaf = _leaves(nltcs_prog, 32)
+    ref = np.asarray(executors.eval_leveled(
+        nltcs_prog, leaf, params, False))
+    got = np.asarray(spn_eval(nltcs_prog, leaf, params))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), nvars=st.integers(2, 10),
+       depth=st.integers(1, 3), batch=st.integers(1, 40),
+       log_domain=st.booleans())
+def test_kernel_random_spns(seed, nvars, depth, batch, log_domain):
+    spn = random_spn(nvars, depth=depth, num_sums=2, repetitions=1, seed=seed)
+    prog = program.lower(spn)
+    leaf = _leaves(prog, batch, seed)
+    ref64 = executors.eval_ops_numpy(prog, leaf, log_domain)
+    got = np.asarray(spn_eval(prog, leaf, log_domain=log_domain))
+    np.testing.assert_allclose(got, ref64, rtol=1e-3, atol=1e-4)
+
+
+def test_kernel_vmem_guard():
+    """Oversized value buffers are rejected with a clear error."""
+    from repro.kernels.spn_eval import kernel as K
+    big = K.PaddedProgram(m_pad=8, num_slots=40_000, levels=[], root_slot=0)
+    with pytest.raises(ValueError, match="VMEM"):
+        K.build_spn_kernel(big, batch_tile=128)

@@ -1,0 +1,41 @@
+"""Parameter learning: EM and SGD improve likelihood; structures valid."""
+import numpy as np
+
+from repro.core import executors, learn, program
+from repro.data import spn_datasets
+
+
+def test_em_increases_ll(nltcs_prog):
+    X = spn_datasets.load("nltcs", "train", 400)
+    state, hist = learn.fit_em(nltcs_prog, X, iters=8)
+    assert hist[-1] > hist[0]
+    # monotone up to small float noise
+    assert all(b - a > -1e-3 for a, b in zip(hist, hist[1:]))
+
+
+def test_em_weights_normalized(nltcs_prog):
+    X = spn_datasets.load("nltcs", "train", 200)
+    state, _ = learn.fit_em(nltcs_prog, X, iters=3)
+    p = np.asarray(state.params)
+    gi = np.asarray(state.group_idx)
+    for g in range(state.num_groups):
+        s = p[gi == g].sum()
+        assert abs(s - 1.0) < 1e-4
+
+
+def test_sgd_improves_ll(nltcs_prog):
+    X = spn_datasets.load("nltcs", "train", 300)
+    state, hist = learn.fit_sgd(nltcs_prog, X, steps=60, lr=3e-2,
+                                batch_size=128, seed=0)
+    assert np.mean(hist[-10:]) > np.mean(hist[:10])
+
+
+def test_learned_params_valid_distribution(nltcs_prog):
+    """After EM, the SPN still normalizes (partition function == 1)."""
+    X = spn_datasets.load("nltcs", "train", 200)
+    state, _ = learn.fit_em(nltcs_prog, X, iters=4)
+    marg = -np.ones((1, nltcs_prog.num_vars), np.int64)
+    leaf = nltcs_prog.leaves_from_evidence(marg).astype(np.float32)
+    z = float(np.asarray(executors.eval_leveled(
+        nltcs_prog, leaf, state.params, False))[0])
+    assert abs(z - 1.0) < 1e-3

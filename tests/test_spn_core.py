@@ -1,0 +1,140 @@
+"""SPN graph / program lowering / executor equivalence tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import executors, io, program
+from repro.core.learn import learn_spn, random_spn
+from repro.core.spn import SPNBuilder
+from repro.data import spn_datasets
+
+
+def _random_evidence(prog, n, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, 2, size=(n, max(prog.num_vars, 1)))
+    return prog.leaves_from_evidence(X)
+
+
+# ---------------------------------------------------------------------------
+# builder / validity
+# ---------------------------------------------------------------------------
+def test_builder_rejects_forward_refs():
+    b = SPNBuilder()
+    with pytest.raises(ValueError):
+        b.sum([5])
+
+
+def test_random_spn_valid(small_spn):
+    assert small_spn.check_valid() == []
+
+
+def test_learned_spn_valid(nltcs_spn):
+    assert nltcs_spn.check_valid() == []
+
+
+def test_spn_is_distribution(small_spn):
+    """Normalized SPN sums to 1 over all evidence (8 vars → 256 states)."""
+    from repro.core.spn import normalize_weights
+    spn = normalize_weights(small_spn)
+    total = 0.0
+    for x in range(2 ** 8):
+        bits = [(x >> i) & 1 for i in range(8)]
+        total += spn.evaluate_evidence(bits)
+    assert abs(total - 1.0) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# program lowering invariants
+# ---------------------------------------------------------------------------
+def test_lowering_invariants(nltcs_prog):
+    nltcs_prog.validate()          # asserts level-contiguity etc.
+    assert nltcs_prog.n_ops > 0
+    assert nltcs_prog.num_levels >= 1
+
+
+def test_lowered_matches_graph_eval(small_spn, small_prog):
+    rng = np.random.default_rng(3)
+    for _ in range(16):
+        x = rng.integers(0, 2, size=8)
+        direct = small_spn.evaluate_evidence(x)
+        leaf = small_prog.leaves_from_evidence(x[None])
+        lowered = executors.eval_ops_numpy(small_prog, leaf)[0]
+        assert abs(direct - lowered) < 1e-9 * max(1.0, abs(direct))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), nvars=st.integers(2, 12),
+       depth=st.integers(1, 3))
+def test_lowering_matches_oracle_random(seed, nvars, depth):
+    spn = random_spn(nvars, depth=depth, num_sums=2, repetitions=1, seed=seed)
+    prog = program.lower(spn)
+    prog.validate()
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2, size=nvars)
+    direct = spn.evaluate_evidence(x)
+    lowered = executors.eval_ops_numpy(
+        prog, prog.leaves_from_evidence(x[None]))[0]
+    assert abs(direct - lowered) < 1e-9 * max(1.0, abs(direct))
+
+
+# ---------------------------------------------------------------------------
+# executor equivalence (alg.1 == alg.2 == leveled, linear & log domain)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("log_domain", [False, True])
+def test_executors_agree(nltcs_prog, nltcs_data, log_domain):
+    leaf = nltcs_prog.leaves_from_evidence(nltcs_data)
+    ref = executors.eval_ops_numpy(nltcs_prog, leaf, log_domain)
+    scan = np.asarray(executors.eval_scan(nltcs_prog, leaf.astype(np.float32),
+                                          None, log_domain))
+    lvl = np.asarray(executors.eval_leveled(nltcs_prog,
+                                            leaf.astype(np.float32),
+                                            None, log_domain))
+    np.testing.assert_allclose(scan, ref, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(lvl, ref, rtol=2e-4, atol=2e-5)
+
+
+def test_log_equals_linear(nltcs_prog, nltcs_data):
+    leaf = nltcs_prog.leaves_from_evidence(nltcs_data)
+    lin = executors.eval_ops_numpy(nltcs_prog, leaf, False)
+    log = executors.eval_ops_numpy(nltcs_prog, leaf, True)
+    np.testing.assert_allclose(np.exp(log), lin, rtol=1e-9)
+
+
+def test_marginalization(nltcs_prog):
+    """Marginalizing every variable gives the partition function (~1)."""
+    from repro.core.spn import normalize_weights
+    x = -np.ones((1, nltcs_prog.num_vars), dtype=np.int64)
+    leaf = nltcs_prog.leaves_from_evidence(x)
+    z = executors.eval_ops_numpy(nltcs_prog, leaf)[0]
+    assert abs(z - 1.0) < 1e-6      # learn_spn emits normalized weights
+
+
+# ---------------------------------------------------------------------------
+# io roundtrip
+# ---------------------------------------------------------------------------
+def test_ac_roundtrip(small_spn):
+    text = io.dumps(small_spn)
+    back = io.loads(text)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        x = rng.integers(0, 2, size=8)
+        assert abs(small_spn.evaluate_evidence(x)
+                   - back.evaluate_evidence(x)) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# datasets
+# ---------------------------------------------------------------------------
+def test_dataset_determinism():
+    a = spn_datasets.load("nltcs", "train", 50)
+    b = spn_datasets.load("nltcs", "train", 50)
+    np.testing.assert_array_equal(a, b)
+    c = spn_datasets.load("nltcs", "valid", 50)
+    assert not np.array_equal(a, c)
+
+
+def test_dataset_shapes():
+    for name in ["nltcs", "msnbc", "kdd"]:
+        X = spn_datasets.load(name, "test", 10)
+        assert X.shape == (10, spn_datasets.DATASETS[name])
+        assert set(np.unique(X)) <= {0, 1}

@@ -1,0 +1,285 @@
+"""Substrate tests: sharding plan, optimizer, compression, checkpoint,
+fault-tolerance runtime, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.checkpoint import AsyncCheckpointer, gc_old, latest_step, restore, save
+from repro.configs import get_config, get_smoke_config
+from repro.data.lm_pipeline import PipelineConfig, TokenPipeline
+from repro.models import api
+from repro.optim import AdamWConfig, adamw
+from repro.optim import compress as C
+from repro.parallel.plan import Planner
+from repro.runtime import (FailureInjector, Heartbeat, RestartPolicy,
+                           TrainingAborted, Watchdog, run_with_restarts)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _abstract_mesh(multi_pod=False):
+    if multi_pod:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# sharding plan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "qwen3-moe-235b-a22b",
+                                  "zamba2-7b", "whisper-medium"])
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisibility(arch, multi_pod):
+    """Every sharded dim must be divisible by its mesh axes product."""
+    cfg = get_config(arch)
+    mesh = _abstract_mesh(multi_pod)
+    planner = Planner(cfg, mesh)
+    tree = api.param_specs(cfg)
+    sh = planner.params_sharding(tree)
+    for leaf, s in zip(jax.tree.leaves(tree), jax.tree.leaves(sh)):
+        for dim, axis in zip(leaf.shape, s.spec):
+            if axis is None:
+                continue
+            size = (np.prod([mesh.shape[a] for a in axis])
+                    if isinstance(axis, tuple) else mesh.shape[axis])
+            assert dim % size == 0, (leaf.shape, s.spec)
+
+
+def test_plan_shards_big_weights():
+    """Large matmul weights must actually be 2D-sharded (FSDP+TP)."""
+    cfg = get_config("command-r-plus-104b")
+    planner = Planner(cfg, _abstract_mesh())
+    tree = api.param_specs(cfg)
+    paths_sh = planner.params_sharding(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(paths_sh)
+    flat_t = jax.tree.leaves(tree)
+    n_big = n_2d = 0
+    for (kp, s), leaf in zip(flat, flat_t):
+        if np.prod(leaf.shape) > 10_000_000:
+            n_big += 1
+            sharded_dims = sum(1 for a in s.spec if a is not None)
+            assert sharded_dims >= 1
+            if sharded_dims == 2:
+                n_2d += 1
+    assert n_big > 0 and n_2d / n_big > 0.8
+
+
+def test_cache_specs_long_context():
+    """long_500k (batch=1): KV cache must shard sequence, not batch."""
+    cfg = get_config("zamba2-7b")
+    planner = Planner(cfg, _abstract_mesh())
+    cache = api.cache_specs(cfg, 1, 524_288)
+    sh = planner.cache_sharding(cache)
+    kv_spec = sh["kv"]["k"].spec
+    assert kv_spec[2] == "data"       # sequence sharded
+    assert kv_spec[3] == "model"      # kv heads sharded
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0, clip_norm=100.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init_state(params)
+    for _ in range(150):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, m = adamw.apply_gradients(cfg, params, g, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_adamw_clips():
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init_state(params)
+    _, _, m = adamw.apply_gradients(cfg, params, {"w": jnp.full(4, 100.0)},
+                                    state)
+    assert float(m["grad_norm"]) > 100.0     # reported raw norm
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0            # warmup rises
+    assert abs(lrs[99] - 0.1) < 0.05         # decays to min ratio
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+def test_compression_error_feedback_unbiased():
+    """Sum of dequantized values over steps tracks the true sum (EF)."""
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(64)
+    sent_sum = np.zeros(64)
+    r = jnp.zeros(64)
+    for _ in range(50):
+        g = jnp.asarray(rng.normal(size=64) * rng.uniform(0.1, 10))
+        d, r = C.compress_roundtrip(g, r)
+        true_sum += np.asarray(g)
+        sent_sum += np.asarray(d)
+    # residual bounded → cumulative error bounded by one quantization step
+    err = np.abs(true_sum - sent_sum).max()
+    assert err < 1.0
+
+
+def test_compression_quantize_range():
+    x = jnp.asarray([-3.0, 0.0, 5.0])
+    q, s = C.quantize(x)
+    assert q.dtype == jnp.int8
+    assert int(jnp.abs(q).max()) <= 127
+    np.testing.assert_allclose(np.asarray(C.dequantize(q, s)),
+                               np.asarray(x), atol=float(s) + 1e-6)
+
+
+def test_compress_tree_roundtrip_structure():
+    g = {"a": jnp.ones((4, 4)), "b": {"c": jnp.zeros(3)}}
+    r = C.init_residuals(g)
+    d, r2 = C.compress_tree(g, r)
+    assert jax.tree.structure(d) == jax.tree.structure(g)
+    assert jax.tree.structure(r2) == jax.tree.structure(g)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.ones(3, jnp.bfloat16)},
+            "step": jnp.asarray(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    root = str(tmp_path / "ck")
+    save(root, 7, _tree(), extras={"step": 7})
+    assert latest_step(root) == 7
+    target = jax.eval_shape(_tree)
+    back, extras = restore(root, target)
+    assert extras["step"] == 7
+    np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                  np.asarray(_tree()["params"]["w"]))
+    assert back["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    root = str(tmp_path / "ck")
+    save(root, 1, _tree())
+    # a stale .tmp dir must be invisible to latest_step
+    os.makedirs(os.path.join(root, "step_00000009.tmp"))
+    assert latest_step(root) == 1
+
+
+def test_checkpoint_gc(tmp_path):
+    root = str(tmp_path / "ck")
+    for s in range(5):
+        save(root, s, _tree())
+    removed = gc_old(root, keep=2)
+    assert len(removed) == 3
+    assert latest_step(root) == 4
+
+
+def test_async_checkpointer(tmp_path):
+    root = str(tmp_path / "ck")
+    ck = AsyncCheckpointer(root, keep=2)
+    for s in (1, 2, 3):
+        ck.save(s, _tree(), extras={"step": s})
+    ck.close()
+    assert latest_step(root) == 3
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    root = str(tmp_path / "ck")
+    save(root, 1, _tree())
+    bad = {"params": {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32),
+                      "b": jax.ShapeDtypeStruct((3,), jnp.bfloat16)},
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.raises(ValueError, match="saved"):
+        restore(root, bad)
+
+
+# ---------------------------------------------------------------------------
+# runtime: watchdog + restart harness
+# ---------------------------------------------------------------------------
+def test_watchdog_dead_worker(tmp_path):
+    hb_dir = str(tmp_path / "hb")
+    hb = Heartbeat(hb_dir, 0)
+    hb.beat(5)
+    wd = Watchdog(hb_dir, timeout_s=60)
+    assert wd.dead_workers() == []
+    import time
+    assert wd.dead_workers(now=time.time() + 120) == [0]
+
+
+def test_watchdog_straggler(tmp_path):
+    wd = Watchdog(str(tmp_path), straggler_factor=2.0)
+    for _ in range(8):
+        wd.record_step_time(0, 1.0)
+        wd.record_step_time(1, 1.1)
+        wd.record_step_time(2, 5.0)      # limping node
+    assert wd.stragglers() == [2]
+
+
+def test_restart_harness_recovers():
+    calls = {"n": 0}
+    saved = {"state": None}
+
+    def make_state():
+        return {"i": 0}
+
+    def resume_state():
+        return saved["state"]
+
+    def run(state):
+        calls["n"] += 1
+        for i in range(state["i"], 10):
+            state = {"i": i + 1}
+            saved["state"] = state        # "checkpoint"
+            if i == 4 and calls["n"] == 1:
+                raise RuntimeError("injected")
+        return state
+
+    out = run_with_restarts(make_state, resume_state, run)
+    assert out["i"] == 10 and calls["n"] == 2
+
+
+def test_restart_harness_gives_up():
+    def run(_):
+        raise RuntimeError("always")
+    with pytest.raises(TrainingAborted):
+        run_with_restarts(lambda: {}, lambda: None, run,
+                          RestartPolicy(max_failures=2))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_pipeline_deterministic():
+    pc = PipelineConfig(vocab=97, seq_len=16, global_batch=4, seed=3)
+    a = TokenPipeline(pc).batch_for_step(11)
+    b = TokenPipeline(pc).batch_for_step(11)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = TokenPipeline(pc).batch_for_step(12)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_pipeline_labels_shifted():
+    pc = PipelineConfig(vocab=97, seq_len=16, global_batch=2, seed=0)
+    b = TokenPipeline(pc).batch_for_step(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_local_slice():
+    pc = PipelineConfig(vocab=97, seq_len=8, global_batch=8, seed=0)
+    pipe = TokenPipeline(pc)
+    full = pipe.batch_for_step(0)
+    parts = [pipe.local_slice(full, i, 4) for i in range(4)]
+    stitched = np.concatenate([p["tokens"] for p in parts])
+    np.testing.assert_array_equal(stitched, full["tokens"])
