@@ -1,0 +1,69 @@
+"""Tour of the probabilistic query engine — one SPN, four query types,
+four execution substrates.
+
+Learns an SPN on nltcs, then answers:
+
+1. joint likelihood p(x)               (the seed repo's only query),
+2. marginals p(e) with half the variables summed out,
+3. conditionals p(q | e),
+4. MPE: the most probable completion of partial evidence (max-product
+   sweep + argmax decode),
+5. ancestral samples, cross-checked against exact marginals.
+
+Every query is answered on all applicable substrates and the answers are
+compared — the engine's core contract.
+
+    PYTHONPATH=src python examples/query_engine.py
+"""
+import numpy as np
+
+from repro.core.learn import learn_spn
+from repro.data import spn_datasets
+from repro.queries import QueryEngine, evidence_array, random_mask
+
+BACKENDS = ("numpy", "leveled", "kernel", "sim")
+
+
+def main() -> None:
+    X = spn_datasets.load("nltcs", "train", 400)
+    eng = QueryEngine(learn_spn(X, min_instances=64))
+    V = eng.num_vars
+    print(f"engine over {V} vars, {eng.prog.n_ops} ops\n")
+
+    Xq = spn_datasets.load("nltcs", "test", 8)
+
+    print("— joint: log p(x) on all four substrates —")
+    for b in BACKENDS:
+        print(f"  {b:8s} {np.round(eng.joint(Xq[:3], b), 4)}")
+
+    print("\n— marginal: half the variables summed out —")
+    Xm = random_mask(Xq, 0.5, seed=1)
+    for b in BACKENDS:
+        print(f"  {b:8s} {np.round(eng.marginal(Xm[:3], b), 4)}")
+
+    print("\n— conditional: P(x0=1 | x1, ..., x4) —")
+    q = evidence_array(V, {0: 1}, batch=3)
+    e = np.full((3, V), -1, np.int64)
+    e[:, 1:5] = Xq[:3, 1:5]
+    print(f"  {np.round(np.exp(eng.conditional(q, e, 'leveled')), 4)}")
+
+    print("\n— MPE: most probable completion of masked evidence —")
+    res = eng.mpe(Xm[:3], backend="leveled")     # batched grad decode
+    for row, (ev_row, a, lv) in enumerate(
+            zip(Xm[:3], res.assignment, res.log_value)):
+        print(f"  row {row}: {ev_row.tolist()}")
+        print(f"       -> {a.tolist()}  (log p* = {lv:.4f})")
+
+    print("\n— sampling: empirical vs exact marginals —")
+    s = eng.sample(4000, seed=0, backend="kernel")
+    emp = s.samples.mean(0)
+    exact = np.array([float(np.exp(eng.marginal(
+        evidence_array(V, {v: 1}), "numpy"))[0]) for v in range(V)])
+    print(f"  empirical P(x_v=1): {np.round(emp[:8], 3)}")
+    print(f"  exact     P(x_v=1): {np.round(exact[:8], 3)}")
+    print(f"  max |err| over {V} vars: {np.abs(emp - exact).max():.4f}")
+    print(f"  mean log p of draws (kernel-scored): {s.log_prob.mean():.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,10 @@ One :class:`VLIWInstr` configures the whole machine for one clock cycle:
 
 PE opcodes follow the paper: sum, product, or *forward* of either input
 (forwarding is what lets a crossbar operand ride up the tree to meet a
-deeper op, and is not counted as a useful arithmetic op).
+deeper op, and is not counted as a useful arithmetic op). ``PE_MAX``
+extends the paper's ALU with a comparator-select — the one-gate delta
+that upgrades the processor from a likelihood engine to an MPE engine
+(max-product sweeps for :mod:`repro.queries`).
 """
 from __future__ import annotations
 
@@ -21,9 +24,10 @@ PE_ADD = 1
 PE_MUL = 2
 PE_FWD_A = 3   # forward left input
 PE_FWD_B = 4   # forward right input
+PE_MAX = 5     # comparator-select: max-product (MPE/Viterbi) sweeps
 
 OP_NAMES = {PE_NOP: "nop", PE_ADD: "add", PE_MUL: "mul",
-            PE_FWD_A: "fwda", PE_FWD_B: "fwdb"}
+            PE_FWD_A: "fwda", PE_FWD_B: "fwdb", PE_MAX: "max"}
 
 
 @dataclasses.dataclass

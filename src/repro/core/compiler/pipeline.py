@@ -28,11 +28,15 @@ from collections import defaultdict
 import numpy as np
 
 from ..processor.config import ProcessorConfig
-from ..program import TensorProgram
+from ..program import OP_MAX, OP_PROD, OP_SUM, TensorProgram
 from . import isa, regalloc, treepack
 
 _NOWHERE, _MEM, _REG, _PENDING = 0, 1, 2, 3
 _ALL_BANKS = -1  # write_res sentinel: vector load occupies every bank
+
+# TensorProgram opcode -> PE opcode (the compiler is semiring-agnostic:
+# scheduling only looks at the dependence structure, not the op identity)
+_PE_OF_OPCODE = {OP_SUM: isa.PE_ADD, OP_PROD: isa.PE_MUL, OP_MAX: isa.PE_MAX}
 
 
 class _Scheduler:
@@ -44,7 +48,7 @@ class _Scheduler:
         self.max_cycles = max_cycles
         m, n = prog.m, prog.n_ops
         self.m, self.n = m, n
-        self.b, self.c, self.is_prod = prog.b, prog.c, prog.op_is_prod
+        self.b, self.c, self.opcode = prog.b, prog.c, prog.opcode
 
         # static analysis ------------------------------------------------
         self.consumers: list[list[int]] = [[] for _ in range(m + n)]
@@ -462,8 +466,7 @@ class _Scheduler:
             if reg < self.load_region:
                 self.row_last_use[reg] = self.t
         for (lvlpos, opid) in bundle.nodes.items():
-            ti.pe_ops[lvlpos] = (isa.PE_MUL if self.is_prod[opid]
-                                 else isa.PE_ADD)
+            ti.pe_ops[lvlpos] = _PE_OF_OPCODE[int(self.opcode[opid])]
         for lvlpos, code in bundle.fwds.items():
             ti.pe_ops[lvlpos] = code
         for (level, pos, bk, reg, j) in wb_alloc:

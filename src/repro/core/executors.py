@@ -11,7 +11,10 @@ Three execution strategies, mirroring the paper:
   Pallas kernel in :mod:`repro.kernels.spn_eval` implements the same
   schedule with an explicitly VMEM-resident value buffer.
 
-All executors support linear and log domain ((+,×) → (logaddexp,+)).
+All executors support linear and log domain ((+,×) → (logaddexp,+)) and
+all three opcodes — SUM, PROD and MAX (the tropical semiring used by
+max-product/MPE programs; ``max`` is the same in both domains since log
+is monotone).
 """
 from __future__ import annotations
 
@@ -21,15 +24,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .program import TensorProgram
+from .program import OP_MAX, OP_PROD, TensorProgram
+
+
+def _combine(op: jnp.ndarray, vb: jnp.ndarray, vc: jnp.ndarray,
+             log_domain: bool) -> jnp.ndarray:
+    """Elementwise semiring op select: 0=sum, 1=prod, 2=max (jnp)."""
+    prod = vb + vc if log_domain else vb * vc
+    add = jnp.logaddexp(vb, vc) if log_domain else vb + vc
+    return jnp.where(op == OP_PROD, prod,
+                     jnp.where(op == OP_MAX, jnp.maximum(vb, vc), add))
 
 
 # --------------------------------------------------------------------------- #
 # alg. 1 — list of operations (numpy oracle, float64)
 # --------------------------------------------------------------------------- #
 def eval_ops_numpy(prog: TensorProgram, leaf_ind: np.ndarray,
-                   log_domain: bool = False) -> np.ndarray:
-    """Reference evaluation; ``leaf_ind``: (batch, m_ind). Returns (batch,)."""
+                   log_domain: bool = False,
+                   return_buffer: bool = False) -> np.ndarray:
+    """Reference evaluation; ``leaf_ind``: (batch, m_ind). Returns (batch,).
+
+    With ``return_buffer`` the whole ``(num_slots, batch)`` value buffer is
+    returned instead of the root row — the MPE backtrace
+    (:mod:`repro.queries.mpe`) walks it to recover argmax choices.
+    """
     leaf_ind = np.atleast_2d(np.asarray(leaf_ind, dtype=np.float64))
     batch = leaf_ind.shape[0]
     A = np.zeros((prog.num_slots, batch), dtype=np.float64)
@@ -40,11 +58,14 @@ def eval_ops_numpy(prog: TensorProgram, leaf_ind: np.ndarray,
             A[: prog.m] = np.log(A[: prog.m])
     for i in range(prog.n_ops):
         vb, vc = A[prog.b[i]], A[prog.c[i]]
-        if log_domain:
-            A[prog.m + i] = vb + vc if prog.op_is_prod[i] else np.logaddexp(vb, vc)
+        o = prog.opcode[i]
+        if o == OP_PROD:
+            A[prog.m + i] = vb + vc if log_domain else vb * vc
+        elif o == OP_MAX:
+            A[prog.m + i] = np.maximum(vb, vc)
         else:
-            A[prog.m + i] = vb * vc if prog.op_is_prod[i] else vb + vc
-    return A[prog.root_slot]
+            A[prog.m + i] = np.logaddexp(vb, vc) if log_domain else vb + vc
+    return A if return_buffer else A[prog.root_slot]
 
 
 # --------------------------------------------------------------------------- #
@@ -68,16 +89,12 @@ def eval_scan(prog: TensorProgram, leaf_ind: jnp.ndarray,
     full = _full_input(prog, leaf_ind, params, log_domain)     # (batch, m)
     batch = full.shape[0]
     A0 = jnp.zeros((prog.num_slots, batch), full.dtype).at[: prog.m].set(full.T)
-    xs = (jnp.asarray(prog.op_is_prod), jnp.asarray(prog.b), jnp.asarray(prog.c),
+    xs = (jnp.asarray(prog.opcode), jnp.asarray(prog.b), jnp.asarray(prog.c),
           jnp.arange(prog.n_ops, dtype=jnp.int32))
 
     def step(A, x):
         o, bi, ci, i = x
-        vb, vc = A[bi], A[ci]
-        if log_domain:
-            val = jnp.where(o, vb + vc, jnp.logaddexp(vb, vc))
-        else:
-            val = jnp.where(o, vb * vc, vb + vc)
+        val = _combine(o, A[bi], A[ci], log_domain)
         return jax.lax.dynamic_update_index_in_dim(A, val, prog.m + i, 0), None
 
     A, _ = jax.lax.scan(step, A0, xs)
@@ -97,13 +114,10 @@ def _leveled_impl(prog: TensorProgram, full_T: jnp.ndarray,
         lo, hi = int(lo), int(hi)
         bi = jnp.asarray(prog.b[lo:hi])
         ci = jnp.asarray(prog.c[lo:hi])
-        op = jnp.asarray(prog.op_is_prod[lo:hi])[:, None]
+        op = jnp.asarray(prog.opcode[lo:hi])[:, None]
         vb = jnp.take(A, bi, axis=0)
         vc = jnp.take(A, ci, axis=0)
-        if log_domain:
-            new = jnp.where(op, vb + vc, jnp.logaddexp(vb, vc))
-        else:
-            new = jnp.where(op, vb * vc, vb + vc)
+        new = _combine(op, vb, vc, log_domain)
         A = jax.lax.dynamic_update_slice(A, new, (prog.m + lo, 0))
     return A[prog.root_slot]
 

@@ -104,7 +104,7 @@ def analyze(prog: TensorProgram, threads: int,
                 ser = (serialization(prog.b[ws:we])
                        + serialization(prog.c[ws:we])
                        + serialization(np.arange(prog.m + ws, prog.m + we)))
-                ops = prog.op_is_prod[ws:we]
+                ops = prog.opcode[ws:we]
                 div = 2.0 if int(ops.min()) != int(ops.max()) else 1.0
                 # arithmetic (x divergence) issues on the warp schedulers;
                 # the 3 shared-memory accesses per op (2 ld + 1 st, plus

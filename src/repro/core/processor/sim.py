@@ -10,7 +10,7 @@ the hardware imposes:
 - ≤ 1 write per bank per cycle, including pipelined writebacks landing
   ``level`` cycles after issue and vector loads occupying every bank,
 - PEs compute strictly from their two children in the tree (level 0 =
-  crossbar ports), with sum/product/forward opcodes,
+  crossbar ports), with sum/product/max/forward opcodes,
 - data memory moves whole 32-wide vector rows.
 
 Values carry a batch dimension, so one simulation validates a whole batch
@@ -141,6 +141,8 @@ def simulate(vprog: isa.VLIWProgram, prog: TensorProgram, X: np.ndarray,
                         v = a + b
                     elif code == isa.PE_MUL:
                         v = a * b
+                    elif code == isa.PE_MAX:
+                        v = np.maximum(a, b)
                     elif code == isa.PE_FWD_A:
                         v = a
                     else:

@@ -14,6 +14,12 @@ matching the paper's "parameters are leaves" convention.
 
 This IR is consumed by every backend: the numpy/JAX executors, the VLIW
 compiler, the cycle-accurate simulator and the Pallas kernel.
+
+Opcodes form the *semiring axis* of the query engine
+(:mod:`repro.queries`): a sum-product program answers likelihood /
+marginal queries, and :func:`to_max_product` rewrites every ``OP_SUM``
+into ``OP_MAX`` (the tropical / Viterbi semiring) so the same program
+skeleton answers MPE/MAP queries on every substrate.
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ from .spn import LEAF_IND, LEAF_PARAM, PROD, SUM, SPN
 
 OP_SUM = 0
 OP_PROD = 1
+OP_MAX = 2   # tropical semiring: MPE / Viterbi sweeps (max in both domains)
 
 
 @dataclasses.dataclass(eq=False)  # identity hash: programs are static jit args
@@ -33,7 +40,7 @@ class TensorProgram:
     m_ind: int                 # number of indicator-leaf slots
     m_param: int               # number of parameter-leaf slots
     param_values: np.ndarray   # (m_param,) float64
-    op_is_prod: np.ndarray     # (n,) uint8 — the paper's O vector (0=sum,1=prod)
+    opcode: np.ndarray         # (n,) uint8 — the paper's O vector (0=sum,1=prod,2=max)
     b: np.ndarray              # (n,) int32 — first operand slot
     c: np.ndarray              # (n,) int32 — second operand slot
     level_offsets: np.ndarray  # (L+1,) int32 op ranges per level
@@ -43,6 +50,11 @@ class TensorProgram:
     # param indices (into param_values) of each weighted sum node's weights —
     # the unit of normalization for EM / softmax-SGD learning.
     sum_weight_groups: list[np.ndarray] = dataclasses.field(default_factory=list)
+
+    @property
+    def op_is_prod(self) -> np.ndarray:
+        """Boolean PROD mask (back-compat view of :attr:`opcode`)."""
+        return self.opcode == OP_PROD
 
     @property
     def m(self) -> int:
@@ -125,13 +137,13 @@ def interleave(prog: TensorProgram, k: int) -> TensorProgram:
             for inst in range(k):       # instance-minor: op i → slots i*k+inst
                 b_parts.append(remap(prog.b[i: i + 1], inst))
                 c_parts.append(remap(prog.c[i: i + 1], inst))
-                o_parts.append(prog.op_is_prod[i: i + 1])
+                o_parts.append(prog.opcode[i: i + 1])
         offsets.append(hi * k)
 
     out = TensorProgram(
         m_ind=k * m_ind, m_param=m_par,
         param_values=prog.param_values.copy(),
-        op_is_prod=np.concatenate(o_parts),
+        opcode=np.concatenate(o_parts),
         b=np.concatenate(b_parts).astype(np.int32),
         c=np.concatenate(c_parts).astype(np.int32),
         level_offsets=np.asarray(offsets, np.int32),
@@ -142,6 +154,31 @@ def interleave(prog: TensorProgram, k: int) -> TensorProgram:
     )
     out.validate()
     return out
+
+
+def to_max_product(prog: TensorProgram) -> TensorProgram:
+    """Rewrite a sum-product program into its max-product (Viterbi) twin.
+
+    Every ``OP_SUM`` becomes ``OP_MAX``; ``OP_PROD`` (including the
+    weight-times-child ops that weighted sum edges lower into) is
+    unchanged, so the max tree maximizes ``w_k * child_k`` exactly as the
+    MPE semiring prescribes. The program skeleton (slots, levels, B/C
+    vectors, root) is shared with the sum-product twin, which is what lets
+    every substrate — numpy oracle, leveled JAX, Pallas kernel, VLIW
+    processor — run MPE sweeps with the machinery it already has.
+
+    Note the returned program is a *new object*: substrate-level caches
+    (kernel builds, VLIW compiles) key on program identity, so hold on to
+    the result (as :class:`repro.queries.QueryEngine` does) instead of
+    re-deriving it per call.
+    """
+    return dataclasses.replace(
+        prog,
+        opcode=np.where(prog.opcode == OP_SUM, OP_MAX,
+                        prog.opcode).astype(np.uint8),
+        param_values=prog.param_values.copy(),
+        sum_weight_groups=list(prog.sum_weight_groups),
+    )
 
 
 def lower(spn: SPN) -> TensorProgram:
@@ -248,7 +285,7 @@ def lower(spn: SPN) -> TensorProgram:
         m_ind=m_ind,
         m_param=m_param,
         param_values=np.asarray(param_values, dtype=np.float64),
-        op_is_prod=new_op,
+        opcode=new_op,
         b=new_b,
         c=new_c,
         level_offsets=offsets,

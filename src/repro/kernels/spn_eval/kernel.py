@@ -16,6 +16,11 @@ on-chip, consumed one level ("group", fig. 2a) per step. Levels are
 8-aligned so every slice is tile-friendly; gathers index the sublane axis
 with i32 vectors (Mosaic `dynamic_gather`).
 
+The O column of the instruction tensor carries the full opcode alphabet
+(0=sum, 1=prod, 2=max), so the same kernel executes sum-product
+(likelihood/marginal) and max-product (MPE) programs — the query engine
+just streams a different instruction tensor.
+
 Layout contract (produced by :func:`repro.kernels.spn_eval.ops.pad_program`):
 
 - slots ``[0, m_pad)``: leaf inputs (indicators + parameters), 8-aligned,
@@ -84,11 +89,15 @@ def _kernel_body(pprog: PaddedProgram, log_domain: bool,
         prefix = a_ref[0: off, :]                   # aligned static slice
         vb = jnp.take(prefix, bi, axis=0)           # sublane gather
         vc = jnp.take(prefix, ci, axis=0)
-        sel = (oi == 1)[:, None]
+        is_prod = (oi == 1)[:, None]
+        is_max = (oi == 2)[:, None]
+        mx = jnp.maximum(vb, vc)                    # max: same in both domains
         if log_domain:
-            new = jnp.where(sel, vb + vc, _logaddexp(vb, vc))
+            new = jnp.where(is_prod, vb + vc,
+                            jnp.where(is_max, mx, _logaddexp(vb, vc)))
         else:
-            new = jnp.where(sel, vb * vc, vb + vc)
+            new = jnp.where(is_prod, vb * vc,
+                            jnp.where(is_max, mx, vb + vc))
         a_ref[off: off + width, :] = new
     root = a_ref[pprog.root_slot, :]
     out_ref[...] = jnp.broadcast_to(root[None, :], out_ref.shape)

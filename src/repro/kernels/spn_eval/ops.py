@@ -42,7 +42,7 @@ def pad_program(prog: TensorProgram) -> K.PaddedProgram:
         new_of_old[prog.m + lo: prog.m + hi] = off + np.arange(width)
         b = new_of_old[prog.b[lo:hi]].astype(np.int32)
         c = new_of_old[prog.c[lo:hi]].astype(np.int32)
-        isp = prog.op_is_prod[lo:hi].astype(np.uint8)
+        isp = prog.opcode[lo:hi].astype(np.uint8)
         pad = width_pad - width
         if pad:  # padded ops: A[0] (prod) A[0] — finite in both domains
             b = np.concatenate([b, np.zeros(pad, np.int32)])

@@ -33,11 +33,11 @@ def spn_eval_ref(prog: TensorProgram, leaf_ind: jnp.ndarray,
         lo, hi = int(lo), int(hi)
         b = np.asarray(prog.b[lo:hi])                      # static gather
         c = np.asarray(prog.c[lo:hi])
-        is_prod = np.asarray(prog.op_is_prod[lo:hi], bool)[:, None]
+        op = np.asarray(prog.opcode[lo:hi])[:, None]
         vb, vc = A[b], A[c]
-        if log_domain:
-            new = jnp.where(is_prod, vb + vc, jnp.logaddexp(vb, vc))
-        else:
-            new = jnp.where(is_prod, vb * vc, vb + vc)
+        prod = vb + vc if log_domain else vb * vc
+        add = jnp.logaddexp(vb, vc) if log_domain else vb + vc
+        new = jnp.where(op == 1, prod,
+                        jnp.where(op == 2, jnp.maximum(vb, vc), add))
         A = jnp.concatenate([A, new], axis=0)
     return A[prog.root_slot]

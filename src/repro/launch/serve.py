@@ -2,15 +2,26 @@
 
 Two workloads:
 
-- ``spn``: the paper's workload — batched SPN inference. Learns (or
-  loads) an SPN, compiles it three ways (leveled JAX executor, Pallas
-  kernel, VLIW processor program) and serves batched requests, reporting
-  throughput per backend plus the processor's ops/cycle (the paper's
-  metric).
+- ``spn``: the paper's workload — batched SPN inference, now with a
+  **query axis**. Learns an SPN, wraps it in the
+  :class:`repro.queries.QueryEngine` and serves batched requests of the
+  selected query type on every substrate (leveled JAX executor, Pallas
+  kernel, VLIW processor sim), reporting throughput per backend plus the
+  processor's ops/cycle (the paper's metric):
+
+  - ``--query joint``     — full-evidence likelihood (the seed workload),
+  - ``--query marginal``  — partial evidence, ``--mask-frac`` of the
+    variables marginalized per row,
+  - ``--query mpe``       — max-product sweep on the same masked evidence
+    (the ``PE_MAX`` instruction stream on the processor) + argmax decode,
+  - ``--query sample``    — ancestral sampling (numpy vs lax.scan
+    samplers) + on-substrate scoring of the draws.
+
 - ``lm``: batched LM serving — prefill a prompt batch then decode N
   tokens with the KV cache, on the smoke config (CPU-sized).
 
     PYTHONPATH=src python -m repro.launch.serve --mode spn --dataset nltcs
+    PYTHONPATH=src python -m repro.launch.serve --mode spn --query mpe
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen2-0.5b
 """
 from __future__ import annotations
@@ -24,23 +35,21 @@ import numpy as np
 
 
 def serve_spn(dataset: str, batch: int, n_batches: int,
-              use_kernel: bool = True) -> dict:
-    from ..core import executors, learn, program
-    from ..core.compiler.pipeline import compile_program
+              use_kernel: bool = True, query: str = "joint",
+              mask_frac: float = 0.3) -> dict:
+    from ..core import executors, learn
     from ..core.processor import sim
-    from ..core.processor.config import PTREE
     from ..data import spn_datasets
     from ..kernels.spn_eval import spn_eval
+    from ..queries import QueryEngine, random_mask, sample_ancestral_jax, \
+        sample_ancestral_numpy
 
     X = spn_datasets.load(dataset, "train", 400)
-    net = learn.learn_spn(X, min_instances=64)
-    prog = program.lower(net)
-    vprog = compile_program(prog, PTREE)
-    print(f"SPN[{dataset}]: {prog.n_ops} ops, {prog.num_levels} levels; "
-          f"Ptree {vprog.ops_per_cycle:.2f} ops/cycle")
-
-    Xq = spn_datasets.load(dataset, "test", batch)
-    leaves = jnp.asarray(prog.leaves_from_evidence(Xq), jnp.float32)
+    eng = QueryEngine(learn.learn_spn(X, min_instances=64))
+    # MPE rides the max-product twin; every other query the sum-product one
+    prog = eng.max_prog if query == "mpe" else eng.prog
+    print(f"SPN[{dataset}] query={query}: {prog.n_ops} ops, "
+          f"{prog.num_levels} levels")
 
     # warmup + timed loops
     out = {}
@@ -57,18 +66,56 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
               f"({out[name]['evals_per_s']:12.0f} evals/s)")
         return r
 
-    r_lvl = bench("leveled-jax", lambda: executors.eval_leveled(prog, leaves, None, True))
+    if query == "sample":
+        bench("sampler-numpy",
+              lambda: sample_ancestral_numpy(eng.spn, batch, seed=0))
+        samples = bench("sampler-lax-scan",
+                        lambda: sample_ancestral_jax(eng.spn, batch, seed=0))
+        assert np.array_equal(
+            samples, sample_ancestral_numpy(eng.spn, batch, seed=0)), \
+            "sampler substrate mismatch"
+        leaves = jnp.asarray(prog.leaves_from_evidence(samples), jnp.float32)
+    else:
+        Xq = spn_datasets.load(dataset, "test", batch)
+        if query in ("marginal", "mpe"):
+            Xq = random_mask(Xq, mask_frac, seed=0)
+        leaves = jnp.asarray(prog.leaves_from_evidence(Xq), jnp.float32)
+
+    score = "score-" if query == "sample" else ""
+    r_lvl = bench(f"{score}leveled-jax",
+                  lambda: executors.eval_leveled(prog, leaves, None, True))
     if use_kernel:
-        r_ker = bench("pallas-kernel", lambda: spn_eval(prog, leaves, log_domain=True))
+        r_ker = bench(f"{score}pallas-kernel",
+                      lambda: spn_eval(prog, leaves, log_domain=True))
         err = float(jnp.abs(r_ker - r_lvl).max())
         print(f"  kernel vs leveled max |Δ|: {err:.2e}")
-    res = sim.simulate(vprog, prog, Xq[:8], PTREE)
-    ref = executors.eval_ops_numpy(prog, np.asarray(prog.leaves_from_evidence(Xq[:8])))
+
+    # VLIW processor: compile once (cached on the engine), simulate a slice
+    Xs = (np.asarray(samples[:8]) if query == "sample" else Xq[:8])
+    vprog = eng.vliw_program(prog)
+    res = sim.simulate(vprog, prog, Xs, eng.processor)
+    ref = executors.eval_ops_numpy(prog, np.asarray(
+        prog.leaves_from_evidence(Xs)))
     assert np.allclose(res.root_values, ref, rtol=1e-4), "processor mismatch"
     out["processor_sim"] = {"ops_per_cycle": res.ops_per_cycle,
                             "cycles": res.cycles}
     print(f"  processor-sim      {res.ops_per_cycle:.2f} ops/cycle "
           f"({res.cycles} cycles/eval-batch)")
+
+    if query == "mpe":
+        r = eng.mpe(Xq[:4], backend="numpy")
+        # tie-robust self-check: the decoded assignment must reproduce the
+        # sweep's root value under the max program (argmax identity may
+        # legitimately differ between decoders on exact ties)
+        dec = executors.eval_ops_numpy(
+            prog, prog.leaves_from_evidence(r.assignment), log_domain=True)
+        assert np.allclose(dec, r.log_value, atol=1e-6), "decode mismatch"
+        out["mpe_example"] = {"evidence": Xq[:4].tolist(),
+                              "assignment": r.assignment.tolist(),
+                              "log_value": r.log_value.tolist()}
+        print(f"  MPE decode self-check ok, e.g. row 0: "
+              f"{Xq[0].tolist()} -> {r.assignment[0].tolist()} "
+              f"(log p* = {r.log_value[0]:.4f})")
     return out
 
 
@@ -111,6 +158,12 @@ def serve_lm(arch: str, batch: int, prompt_len: int, gen_len: int) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["spn", "lm"], default="spn")
+    ap.add_argument("--query", choices=["joint", "marginal", "mpe", "sample"],
+                    default="joint",
+                    help="SPN query type served (see repro.queries)")
+    ap.add_argument("--mask-frac", type=float, default=0.3,
+                    help="fraction of variables marginalized for "
+                         "marginal/mpe queries")
     ap.add_argument("--dataset", default="nltcs")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=256)
@@ -119,7 +172,8 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=16)
     args = ap.parse_args()
     if args.mode == "spn":
-        serve_spn(args.dataset, args.batch, args.batches)
+        serve_spn(args.dataset, args.batch, args.batches,
+                  query=args.query, mask_frac=args.mask_frac)
     else:
         serve_lm(args.arch, min(args.batch, 8), args.prompt_len,
                  args.gen_len)

@@ -1,0 +1,33 @@
+"""Probabilistic query engine: marginal / conditional / MPE / sampling.
+
+The seed stack answered exactly one query — the joint likelihood p(x) via
+the sum-product sweep. This package turns it into a multi-query inference
+engine, the reason SPNs are worth accelerating in the first place: the
+same circuit answers *many* tractable queries, each a different sweep
+over the same :class:`~repro.core.program.TensorProgram` skeleton:
+
+- **marginal / conditional** — evidence masks (-1 entries) set the
+  marginalized indicators to 1; ``p(q|e) = p(q,e) / p(e)`` on top,
+- **MPE / MAP** — the max-product (tropical) semiring: ``OP_SUM →
+  OP_MAX`` at the IR level, ``PE_MAX`` on the VLIW processor, plus an
+  argmax backtrace / gradient decode for the maximizing assignment,
+- **ancestral sampling** — top-down induced-tree draws, numpy oracle and
+  a batched ``lax.scan`` implementation.
+
+:class:`QueryEngine` dispatches every query across the four execution
+substrates (numpy oracle, leveled JAX, Pallas kernel, VLIW processor
+sim); see its docstring for the query × backend matrix.
+"""
+from .engine import BACKENDS, MPEResult, QueryEngine, SampleResult
+from .evidence import (evidence_array, mask_vars, merge_evidence,
+                       random_mask)
+from .mpe import mpe_backtrace, mpe_decode_grad
+from .sampling import (draw_uniforms, sample_ancestral_jax,
+                       sample_ancestral_numpy)
+
+__all__ = [
+    "BACKENDS", "MPEResult", "QueryEngine", "SampleResult",
+    "evidence_array", "mask_vars", "merge_evidence", "random_mask",
+    "mpe_backtrace", "mpe_decode_grad",
+    "draw_uniforms", "sample_ancestral_jax", "sample_ancestral_numpy",
+]

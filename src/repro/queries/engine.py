@@ -1,0 +1,161 @@
+"""Multi-query inference engine over all four execution substrates.
+
+:class:`QueryEngine` turns one SPN into a query server. It lowers the
+circuit once into its sum-product :class:`~repro.core.program.TensorProgram`
+and the max-product twin, holds both alive (substrate caches — Pallas
+kernel builds, VLIW compiles — key on program identity), and dispatches
+each query to the requested backend:
+
+====================  ========  =========  ========  ========
+query \\ backend       numpy     leveled    kernel    sim
+====================  ========  =========  ========  ========
+``joint``             ✓         ✓          ✓         ✓
+``marginal``          ✓         ✓          ✓         ✓
+``conditional``       ✓         ✓          ✓         ✓
+``mpe`` (value)       ✓         ✓          ✓         ✓
+``mpe`` (decode)      backtrace grad-AD    backtrace backtrace
+``sample`` (draw)     numpy     lax.scan   lax.scan  lax.scan
+``sample`` (score)    ✓         ✓          ✓         ✓
+====================  ========  =========  ========  ========
+
+Backends: ``numpy`` — float64 alg.-1 oracle; ``leveled`` — group-decomposed
+jit'd JAX; ``kernel`` — the Pallas TPU kernel (interpret-mode off-TPU);
+``sim`` — VLIW compile + cycle-accurate processor simulation (linear f32;
+the engine logs the root afterwards). Sampling draws never run *on* the
+kernel/sim substrates (a fixed op stream cannot flip coins), so those
+backends draw with the JAX sampler and score the draws on-substrate.
+
+All log values are base e.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import executors, program
+from ..core.processor import sim as processor_sim
+from ..core.processor.config import PTREE, ProcessorConfig
+from ..core.spn import SPN
+from ..kernels.spn_eval import spn_eval
+from . import evidence as ev
+from . import mpe as mpe_mod
+from . import sampling
+
+BACKENDS = ("numpy", "leveled", "kernel", "sim")
+
+
+@dataclasses.dataclass
+class MPEResult:
+    assignment: np.ndarray   # (batch, num_vars) evidence completed w/ argmax
+    log_value: np.ndarray    # (batch,) max-product log value on the backend
+
+
+@dataclasses.dataclass
+class SampleResult:
+    samples: np.ndarray      # (n, num_vars)
+    log_prob: np.ndarray     # (n,) joint log-likelihood scored on the backend
+
+
+class QueryEngine:
+    """Marginal / conditional / MPE / sampling over one SPN.
+
+    Evidence arrays follow the mask convention of
+    :mod:`repro.queries.evidence`: ``-1`` marginalizes (or maximizes over)
+    a variable, ``>= 0`` observes it.
+    """
+
+    def __init__(self, spn: SPN, *, processor: ProcessorConfig = PTREE,
+                 interpret: bool | None = None):
+        self.spn = spn
+        self.prog = program.lower(spn)
+        self.max_prog = program.to_max_product(self.prog)
+        self.processor = processor
+        self.interpret = interpret
+        self._vliw: dict[int, object] = {}    # id(prog) -> VLIWProgram
+
+    @property
+    def num_vars(self) -> int:
+        return self.prog.num_vars
+
+    # ---------------- substrate dispatch ---------------------------------- #
+    def vliw_program(self, prog: program.TensorProgram):
+        """Compiled VLIW program for ``prog`` (cached on the engine)."""
+        key = id(prog)
+        if key not in self._vliw:
+            from ..core.compiler.pipeline import compile_program
+            self._vliw[key] = compile_program(prog, self.processor)
+        return self._vliw[key]
+
+    def _eval_log(self, prog: program.TensorProgram, x: np.ndarray,
+                  backend: str) -> np.ndarray:
+        """Root log value of ``prog`` under evidence ``x`` on ``backend``."""
+        x = np.atleast_2d(x)
+        if backend == "sim":       # the simulator expands evidence itself
+            res = processor_sim.simulate(self.vliw_program(prog), prog, x,
+                                         self.processor)
+            with np.errstate(divide="ignore"):
+                return np.log(res.root_values.astype(np.float64))
+        leaf = prog.leaves_from_evidence(x)
+        if backend == "numpy":
+            return executors.eval_ops_numpy(prog, leaf, log_domain=True)
+        if backend == "leveled":
+            out = executors.eval_leveled(prog, jnp.asarray(leaf, jnp.float32),
+                                         None, True)
+            return np.asarray(out, np.float64)
+        if backend == "kernel":
+            out = spn_eval(prog, leaf.astype(np.float32), log_domain=True,
+                           interpret=self.interpret)
+            return np.asarray(out, np.float64)
+        raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
+
+    # ---------------- queries --------------------------------------------- #
+    def joint(self, x: np.ndarray, backend: str = "leveled") -> np.ndarray:
+        """log p(x) for fully observed rows ``x`` (batch, num_vars)."""
+        x = np.atleast_2d(x)
+        if (x < 0).any():
+            raise ValueError("joint() needs full evidence; use marginal() "
+                             "for rows containing -1")
+        return self._eval_log(self.prog, x, backend)
+
+    def marginal(self, x: np.ndarray, backend: str = "leveled") -> np.ndarray:
+        """log p(evidence): -1 entries are summed out by the indicator mask."""
+        return self._eval_log(self.prog, x, backend)
+
+    def conditional(self, query: np.ndarray, evidence: np.ndarray,
+                    backend: str = "leveled") -> np.ndarray:
+        """log p(query | evidence) = log p(q, e) - log p(e)."""
+        merged = ev.merge_evidence(np.atleast_2d(query),
+                                  np.atleast_2d(evidence))
+        return (self.marginal(merged, backend)
+                - self.marginal(evidence, backend))
+
+    def mpe(self, x: np.ndarray, backend: str = "leveled") -> MPEResult:
+        """Most probable explanation of the -1 entries given the rest.
+
+        The max-product *value* is computed on ``backend``; the argmax
+        *decode* uses reverse-mode AD on the leveled substrate
+        (``backend="leveled"``) and the float64 backtrace elsewhere.
+        """
+        x = np.atleast_2d(x)
+        if backend == "leveled":
+            log_value = self._eval_log(self.max_prog, x, backend)
+            assignment = mpe_mod.mpe_decode_grad(self.max_prog, x)
+        elif backend == "numpy":
+            # one sweep: the backtrace's buffer root IS the numpy value
+            assignment, log_value = mpe_mod.mpe_backtrace(self.max_prog, x)
+        else:
+            log_value = self._eval_log(self.max_prog, x, backend)
+            assignment, _ = mpe_mod.mpe_backtrace(self.max_prog, x)
+        return MPEResult(assignment=assignment, log_value=log_value)
+
+    def sample(self, n: int, seed: int = 0,
+               backend: str = "leveled") -> SampleResult:
+        """Draw ``n`` ancestral samples and score them on ``backend``."""
+        if backend == "numpy":
+            samples = sampling.sample_ancestral_numpy(self.spn, n, seed)
+        else:
+            samples = sampling.sample_ancestral_jax(self.spn, n, seed)
+        return SampleResult(samples=samples,
+                            log_prob=self.joint(samples, backend))

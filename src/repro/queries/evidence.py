@@ -1,0 +1,64 @@
+"""Evidence / query-mask conventions for the query engine.
+
+Every query in :mod:`repro.queries` takes evidence as an integer array of
+shape ``(batch, num_vars)`` in the **evidence-mask convention**:
+
+- ``x[b, v] >= 0`` — variable ``v`` is *observed* with that value,
+- ``x[b, v] == -1`` — variable ``v`` is *marginalized* (sum queries) or
+  *free/maximized-over* (MPE queries).
+
+The convention maps onto the circuit exactly as the SPN literature
+prescribes: a marginalized variable sets **all** of its indicator leaves
+to 1 (log 0), which makes the sum-product sweep integrate it out and the
+max-product sweep maximize over it — no program rewrite, just a different
+leaf vector. ``TensorProgram.leaves_from_evidence`` implements the
+indicator fill, so all four substrates inherit the convention for free.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import numpy as np
+
+
+def evidence_array(num_vars: int, observed: Mapping[int, int] | None = None,
+                   batch: int = 1) -> np.ndarray:
+    """Build a ``(batch, num_vars)`` evidence array, -1 everywhere except
+    the ``observed`` ``{var: value}`` entries (broadcast across the batch).
+    """
+    x = np.full((batch, num_vars), -1, dtype=np.int64)
+    for v, val in (observed or {}).items():
+        if not 0 <= v < num_vars:
+            raise ValueError(f"variable {v} out of range [0, {num_vars})")
+        x[:, v] = int(val)
+    return x
+
+
+def merge_evidence(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Union of two evidence arrays; raises on conflicting observations."""
+    a, b = np.atleast_2d(a), np.atleast_2d(b)
+    if a.shape != b.shape:
+        raise ValueError(f"evidence shapes differ: {a.shape} vs {b.shape}")
+    clash = (a >= 0) & (b >= 0) & (a != b)
+    if clash.any():
+        rows, cols = np.nonzero(clash)
+        raise ValueError(f"conflicting evidence at (row, var) "
+                         f"{list(zip(rows.tolist(), cols.tolist()))[:5]}")
+    return np.where(a >= 0, a, b)
+
+
+def mask_vars(x: np.ndarray, vars_to_mask, *, copy: bool = True) -> np.ndarray:
+    """Return ``x`` with the given variables set to -1 (marginalized)."""
+    out = np.atleast_2d(x).astype(np.int64, copy=copy)
+    out[:, np.asarray(list(vars_to_mask), dtype=np.int64)] = -1
+    return out
+
+
+def random_mask(x: np.ndarray, frac: float, seed: int = 0) -> np.ndarray:
+    """Marginalize a random ``frac`` of each row's variables (the standard
+    marginal/MPE benchmark workload: partial observations)."""
+    x = np.atleast_2d(x).astype(np.int64, copy=True)
+    rng = np.random.default_rng(seed)
+    mask = rng.random(x.shape) < frac
+    x[mask] = -1
+    return x

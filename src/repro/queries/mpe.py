@@ -1,0 +1,159 @@
+"""MPE / MAP queries: max-product sweeps + argmax decoding.
+
+The max-product semiring
+------------------------
+Swapping the circuit's semiring from sum-product ``(+, ×)`` to
+**max-product** ``(max, ×)`` — in log domain ``(max, +)``, the tropical
+semiring — turns the marginalization sweep into a Viterbi sweep: the root
+no longer holds ``Σ_T ∏ w·leaf`` over induced trees ``T`` but
+``max_T ∏ w·leaf``, the probability of the single best explanation
+consistent with the evidence. :func:`repro.core.program.to_max_product`
+performs the swap at the IR level (``OP_SUM → OP_MAX``), so the identical
+program skeleton runs on every substrate; only the PE/ALU op changes
+(``PE_MAX`` on the VLIW processor, ``jnp.maximum`` in the Pallas kernel).
+
+For *selective* circuits (at most one sum child non-zero per complete
+state — e.g. fully factorized models) the sweep computes the exact MPE
+probability; for general SPNs it is the standard Poon–Domingos
+max-product approximation: the returned assignment maximizes the best
+single-tree explanation, and its true probability upper-bounds the
+reported max-product value (``p(x*) ≥ max_T``, verified in the tests).
+
+Decoding the argmax
+-------------------
+Two independent decoders, used to cross-check each other:
+
+- :func:`mpe_backtrace` — the oracle: fill the float64 value buffer
+  bottom-up, then walk top-down from the root taking the argmax operand of
+  every MAX op and both operands of every PROD op; indicator leaves
+  reached by the walk spell out the assignment.
+- :func:`mpe_decode_grad` — batched JAX decode: the gradient of the
+  max-product root w.r.t. the *log* leaf inputs is 1 exactly on the leaves
+  the backtrace would visit (``max`` routes the cotangent to its argmax,
+  log-products pass it through), so one reverse-mode sweep decodes the
+  whole batch with no host loop.
+
+Zero leaves are represented by the finite ``NEG_INF`` stand-in for
+``log 0`` so reverse-mode AD never materializes ``0 · ∞ = NaN``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import executors
+from ..core.program import OP_MAX, OP_PROD, TensorProgram
+
+NEG_INF = -1e30    # finite log(0): keeps max/plus arithmetic & grads NaN-free
+
+
+def log_leaves(leaf_ind: np.ndarray) -> np.ndarray:
+    """Log-domain leaf vector with the finite ``NEG_INF`` zero."""
+    leaf_ind = np.atleast_2d(np.asarray(leaf_ind, dtype=np.float64))
+    return np.where(leaf_ind > 0.0,
+                    np.log(np.maximum(leaf_ind, 1e-300)), NEG_INF)
+
+
+def _log_params(prog: TensorProgram) -> np.ndarray:
+    pv = np.asarray(prog.param_values, np.float64)
+    return np.where(pv > 0.0, np.log(np.maximum(pv, 1e-300)),
+                    NEG_INF).astype(np.float32)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def max_root_from_log_leaves(prog: TensorProgram,
+                             log_leaf: jnp.ndarray) -> jnp.ndarray:
+    """Leveled max-product sweep over *already-logged* leaves (batched).
+
+    ``prog`` must be a max-product program. Differentiable w.r.t.
+    ``log_leaf`` — the gradient is the argmax-path indicator used by
+    :func:`mpe_decode_grad`.
+    """
+    log_leaf = jnp.atleast_2d(log_leaf).astype(jnp.float32)
+    batch = log_leaf.shape[0]
+    lp = jnp.broadcast_to(jnp.asarray(_log_params(prog)),
+                          (batch, prog.m_param))
+    full = jnp.concatenate([log_leaf, lp], axis=1)
+    return executors._leveled_impl(prog, full.T, log_domain=True)
+
+
+def _decode_from_scores(prog: TensorProgram, scores: np.ndarray,
+                        evidence: np.ndarray) -> np.ndarray:
+    """Per-variable argmax over indicator-slot scores → assignment.
+
+    Evidence entries pass through untouched; free variables take the value
+    of their highest-scoring indicator.
+    """
+    batch = scores.shape[0]
+    x = np.atleast_2d(evidence).astype(np.int64, copy=True)
+    free = x < 0                                     # frozen before updates
+    best = np.full((batch, prog.num_vars), -np.inf)
+    for s in range(prog.m_ind):                      # m_ind ~ 2·num_vars
+        v = int(prog.ind_var[s])
+        upd = free[:, v] & (scores[:, s] > best[:, v])
+        best[upd, v] = scores[upd, s]
+        x[upd, v] = int(prog.ind_value[s])
+    return x
+
+
+def mpe_decode_grad(prog: TensorProgram, evidence: np.ndarray) -> np.ndarray:
+    """Batched MPE decode via reverse-mode AD through the max sweep.
+
+    Caveat: on an *exact* max tie JAX splits the cotangent 0.5/0.5
+    between the tied operands, so the per-variable argmax can mix two
+    equally-good explanations (whereas :func:`mpe_backtrace` commits to
+    one deterministically). With learned float weights exact ties are
+    measure-zero; callers that must be tie-robust should compare decoded
+    assignments by their max-product *value*, not identity.
+    """
+    evidence = np.atleast_2d(evidence)
+    ll = jnp.asarray(log_leaves(prog.leaves_from_evidence(evidence)),
+                     jnp.float32)
+    grad_fn = jax.grad(lambda L: max_root_from_log_leaves(prog, L).sum())
+    g = np.asarray(grad_fn(ll), np.float64)          # (batch, m_ind)
+    return _decode_from_scores(prog, g, evidence)
+
+
+def mpe_backtrace(prog: TensorProgram,
+                  evidence: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Oracle MPE: float64 sweep + top-down argmax walk.
+
+    Returns ``(assignment, root_log)`` where ``assignment`` is the
+    evidence completed with the maximizing values and ``root_log`` the
+    max-product log value (base e).
+    """
+    evidence = np.atleast_2d(evidence)
+    leaf = prog.leaves_from_evidence(evidence)
+    # float64 log buffer from the oracle (true -inf is fine outside AD)
+    A = executors.eval_ops_numpy(prog, leaf, log_domain=True,
+                                 return_buffer=True)
+    m = prog.m
+    batch = leaf.shape[0]
+    x = evidence.astype(np.int64, copy=True)
+    for r in range(batch):
+        stack = [int(prog.root_slot)]
+        while stack:
+            s = stack.pop()
+            if s < prog.m_ind:
+                v = int(prog.ind_var[s])
+                if x[r, v] < 0:
+                    x[r, v] = int(prog.ind_value[s])
+            elif s < m:
+                continue                              # parameter leaf
+            else:
+                i = s - m
+                o = int(prog.opcode[i])
+                bs, cs = int(prog.b[i]), int(prog.c[i])
+                if o == OP_PROD:
+                    stack.append(bs)
+                    stack.append(cs)
+                elif o == OP_MAX:
+                    stack.append(bs if A[bs, r] >= A[cs, r] else cs)
+                else:
+                    raise ValueError(
+                        "mpe_backtrace needs a max-product program "
+                        "(run program.to_max_product first)")
+    return x, A[prog.root_slot].copy()

@@ -1,0 +1,142 @@
+"""Ancestral sampling from an SPN — the AIA discrete-sampling workload.
+
+Sampling runs **top-down on the SPN graph** (not the lowered program):
+starting from the root, a sum node draws one child from its (locally
+normalized) weights, a product node activates all children, and the
+indicator leaves reached by the walk spell out the sample. Smoothness +
+decomposability guarantee the activated nodes form an *induced tree* in
+which every variable's distribution appears exactly once, so each node
+needs at most one categorical draw per sample — which is what makes the
+whole batch vectorizable.
+
+Two implementations that consume the **same uniform-draw tensor** ``U``
+of shape ``(num_nodes, n)`` and therefore produce bit-identical samples
+(the cross-substrate agreement contract for the ``sample`` query):
+
+- :func:`sample_ancestral_numpy` — reverse-topological python loop over
+  nodes, batch-vectorized per node (the oracle),
+- :func:`sample_ancestral_jax` — one ``lax.scan`` over nodes carrying the
+  ``(num_nodes+1, n)`` active-flag matrix; sum choices are computed as
+  ``count(cdf <= u)`` against per-node padded CDF tables and scattered
+  with ``.at[children].max``. Jit-compiled; recompiles only when the
+  node-table shapes change.
+
+Both use the identical float32 CDF tables and float32 comparisons so the
+categorical boundaries agree exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.spn import LEAF_IND, SUM, SPN
+
+
+def _tables(spn: SPN) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Padded per-node ``(children, cdf, is_sum)`` tables.
+
+    ``children``: (N, Cmax) int32, padded with the sentinel ``N`` (a dummy
+    row in the active matrix); ``cdf``: (N, Cmax) float32 cumulative
+    locally-normalized sum weights, padded with 2.0 (never selected).
+    """
+    N = spn.num_nodes
+    cmax = max((len(ch) for ch in spn.children), default=0) or 1
+    children = np.full((N, cmax), N, dtype=np.int32)
+    cdf = np.full((N, cmax), 2.0, dtype=np.float32)
+    is_sum = spn.node_type == SUM
+    for i in range(N):
+        ch = spn.children[i]
+        if not ch:
+            continue
+        children[i, : len(ch)] = ch
+        if is_sum[i]:
+            w = spn.weights[i]
+            w = (np.ones(len(ch)) if w is None
+                 else np.asarray(w, dtype=np.float64))
+            tot = w.sum()
+            w = w / tot if tot > 0 else np.ones(len(ch)) / len(ch)
+            cdf[i, : len(ch)] = np.cumsum(w).astype(np.float32)
+    return children, cdf, is_sum
+
+
+def _assignments(spn: SPN, active: np.ndarray) -> np.ndarray:
+    """Decode the active indicator leaves into ``(n, num_vars)`` samples."""
+    n = active.shape[1]
+    x = np.full((n, spn.num_vars), -1, dtype=np.int64)
+    for i in np.flatnonzero(spn.node_type == LEAF_IND):
+        x[active[i], int(spn.leaf_var[i])] = int(spn.leaf_value[i])
+    return x
+
+
+def draw_uniforms(spn: SPN, n: int, seed: int = 0) -> np.ndarray:
+    """The ``(num_nodes, n)`` uniform tensor both samplers consume."""
+    return np.random.default_rng(seed).random((spn.num_nodes, n))
+
+
+def sample_ancestral_numpy(spn: SPN, n: int, seed: int = 0,
+                           uniforms: np.ndarray | None = None) -> np.ndarray:
+    """Ancestral sampling, numpy oracle. Returns ``(n, num_vars)`` int64."""
+    children, cdf, is_sum = _tables(spn)
+    N, cmax = children.shape
+    U = (draw_uniforms(spn, n, seed) if uniforms is None
+         else np.asarray(uniforms)).astype(np.float32)
+    active = np.zeros((N + 1, n), dtype=bool)
+    active[spn.root] = True
+    for i in range(N - 1, -1, -1):
+        row = active[i]
+        if not row.any():
+            continue
+        ch = children[i]
+        valid = ch < N
+        if not valid.any():
+            continue                                   # leaf
+        if is_sum[i]:
+            choice = np.minimum((cdf[i][:, None] <= U[i][None, :]).sum(0),
+                                cmax - 1)
+            sel = (np.arange(cmax)[:, None] == choice[None, :])
+        else:                                          # product: all children
+            sel = np.ones((cmax, n), dtype=bool)
+        sel = sel & valid[:, None] & row[None, :]
+        for j in np.flatnonzero(valid):
+            active[ch[j]] |= sel[j]
+    return _assignments(spn, active[:N])
+
+
+@jax.jit
+def _scan_sample(children: jnp.ndarray, cdf: jnp.ndarray,
+                 is_sum: jnp.ndarray, U: jnp.ndarray,
+                 root: jnp.ndarray) -> jnp.ndarray:
+    """Top-down activation pass as one lax.scan over nodes (descending)."""
+    N, cmax = children.shape
+    n = U.shape[1]
+    active0 = jnp.zeros((N + 1, n), dtype=bool).at[root].set(True)
+
+    def step(active, i):
+        row = active[i]                                # (n,)
+        ch = children[i]                               # (cmax,)
+        valid = (ch < N)[:, None]
+        choice = jnp.minimum(jnp.sum(cdf[i][:, None] <= U[i][None, :],
+                                     axis=0), cmax - 1)
+        sel_sum = jnp.arange(cmax)[:, None] == choice[None, :]
+        sel = jnp.where(is_sum[i], sel_sum, True) & valid & row[None, :]
+        return active.at[ch].max(sel), None
+
+    active, _ = jax.lax.scan(step, active0, jnp.arange(N - 1, -1, -1))
+    return active[:N]
+
+
+def sample_ancestral_jax(spn: SPN, n: int, seed: int = 0,
+                         uniforms: np.ndarray | None = None) -> np.ndarray:
+    """Ancestral sampling via the batched lax.scan pass.
+
+    Bit-identical to :func:`sample_ancestral_numpy` for the same
+    ``uniforms`` (or the same ``seed``).
+    """
+    children, cdf, is_sum = _tables(spn)
+    U = (draw_uniforms(spn, n, seed) if uniforms is None
+         else np.asarray(uniforms)).astype(np.float32)
+    active = np.asarray(_scan_sample(
+        jnp.asarray(children), jnp.asarray(cdf), jnp.asarray(is_sum),
+        jnp.asarray(U), jnp.asarray(spn.root, jnp.int32)))
+    return _assignments(spn, active)

@@ -1,0 +1,73 @@
+"""Degrade property tests to fixed examples when hypothesis is absent.
+
+The tier-1 suite must collect on a minimal environment (jax + numpy +
+pytest only). Importing ``given``/``settings``/``st`` from here instead of
+``hypothesis`` keeps the real property-based behavior whenever hypothesis
+is installed, and otherwise substitutes a lightweight shim that runs each
+property against a deterministic set of representative draws (endpoints +
+midpoints of every strategy, zipped cyclically so runtime stays linear in
+the widest strategy, not the cartesian product).
+"""
+from __future__ import annotations
+
+try:                                          # pragma: no cover - env-dependent
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A fixed, deterministic set of representative values."""
+
+        def __init__(self, values):
+            self.values = list(values)
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = (min_value + max_value) // 2
+            vals = {min_value, mid, max_value, min_value + 1}
+            return _Strategy(sorted(v for v in vals
+                                    if min_value <= v <= max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy([min_value, (min_value + max_value) / 2,
+                              max_value])
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(elements)
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        names = list(strategies)
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                vals = [strategies[n].values for n in names]
+                for i in range(max(len(v) for v in vals)):
+                    drawn = {n: v[i % len(v)] for n, v in zip(names, vals)}
+                    fn(*args, **drawn, **kwargs)
+
+            # hide the drawn parameters from pytest's fixture resolution
+            # (__signature__ wins over __wrapped__ in inspect.signature)
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for p in sig.parameters.values() if p.name not in names])
+            return wrapper
+
+        return deco

@@ -1,7 +1,7 @@
 """program.interleave — the §Perf-C software-pipelining transform."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import executors, program
 from repro.core.compiler.pipeline import compile_program

@@ -1,0 +1,229 @@
+"""Query engine: cross-substrate agreement for marginal / MPE / sampling,
+decoder equivalence, sampler statistics, and evidence-mask helpers."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import executors, program
+from repro.core.learn import random_spn
+from repro.core.spn import SPNBuilder, normalize_weights
+from repro.queries import (QueryEngine, evidence_array, mask_vars,
+                           merge_evidence, mpe_backtrace, mpe_decode_grad,
+                           random_mask, sample_ancestral_jax,
+                           sample_ancestral_numpy)
+
+BACKENDS = ("numpy", "leveled", "kernel", "sim")
+
+
+@pytest.fixture(scope="module")
+def engine(nltcs_spn):
+    return QueryEngine(nltcs_spn)
+
+
+@pytest.fixture(scope="module")
+def small_engine(small_spn):
+    return QueryEngine(normalize_weights(small_spn))
+
+
+@pytest.fixture(scope="module")
+def bernoulli_engine():
+    """Fully factorized (selective) SPN: max-product MPE is exact."""
+    b = SPNBuilder()
+    probs = [0.9, 0.2, 0.6, 0.35, 0.55]   # no 0.5: exact argmax ties would
+    # make the brute-force comparison ambiguous
+    leaves = [b.sum([b.indicator(v, 1), b.indicator(v, 0)], [p, 1.0 - p])
+              for v, p in enumerate(probs)]
+    return QueryEngine(b.build(b.product(leaves))), probs
+
+
+def _masked_evidence(num_vars, n=6, seed=0, frac=0.5):
+    rng = np.random.default_rng(seed)
+    return random_mask(rng.integers(0, 2, (n, num_vars)), frac, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# max-product program structure
+# ---------------------------------------------------------------------------
+def test_to_max_product_structure(nltcs_prog):
+    mp = program.to_max_product(nltcs_prog)
+    mp.validate()
+    assert (mp.opcode != program.OP_SUM).all()
+    assert ((mp.opcode == program.OP_MAX).sum()
+            == (nltcs_prog.opcode == program.OP_SUM).sum())
+    assert (mp.opcode[nltcs_prog.opcode == program.OP_PROD]
+            == program.OP_PROD).all()
+    # skeleton shared: same slots, levels, operands
+    np.testing.assert_array_equal(mp.b, nltcs_prog.b)
+    np.testing.assert_array_equal(mp.c, nltcs_prog.c)
+    np.testing.assert_array_equal(mp.level_offsets, nltcs_prog.level_offsets)
+
+
+# ---------------------------------------------------------------------------
+# marginal queries
+# ---------------------------------------------------------------------------
+def test_marginal_cross_substrate(engine):
+    X = _masked_evidence(engine.num_vars)
+    ref = engine.marginal(X, "numpy")
+    for b in BACKENDS[1:]:
+        np.testing.assert_allclose(engine.marginal(X, b), ref, atol=1e-4,
+                                   err_msg=b)
+
+
+def test_full_evidence_marginal_equals_joint(engine, nltcs_data):
+    """Regression: with no -1 entries, marginal degenerates to the joint."""
+    X = nltcs_data[:16]
+    np.testing.assert_allclose(engine.marginal(X, "leveled"),
+                               engine.joint(X, "leveled"), rtol=0)
+
+
+def test_marginal_sums_over_hidden_var(small_engine):
+    """p(e) == Σ_v p(e, q=v) — the defining property of marginalization."""
+    rng = np.random.default_rng(5)
+    X = rng.integers(0, 2, (4, 8))
+    Xm = mask_vars(X, [2])
+    pe = np.exp(small_engine.marginal(Xm, "numpy"))
+    total = sum(np.exp(small_engine.marginal(
+        merge_evidence(Xm, evidence_array(8, {2: v}, batch=4)), "numpy"))
+        for v in (0, 1))
+    np.testing.assert_allclose(pe, total, rtol=1e-9)
+
+
+def test_all_marginalized_is_partition_function(engine):
+    x = np.full((1, engine.num_vars), -1, np.int64)
+    for b in BACKENDS:
+        assert abs(float(engine.marginal(x, b)[0])) < 1e-4, b
+
+
+def test_conditional_bayes_consistency(small_engine):
+    """p(q|e)·p(e) == p(q,e) and conditionals normalize over q."""
+    e = evidence_array(8, {1: 1, 4: 0}, batch=1)
+    probs = [float(np.exp(small_engine.conditional(
+        evidence_array(8, {0: v}), e, "leveled"))[0]) for v in (0, 1)]
+    assert abs(sum(probs) - 1.0) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# MPE queries
+# ---------------------------------------------------------------------------
+def test_mpe_cross_substrate(engine):
+    X = _masked_evidence(engine.num_vars)
+    ref = engine.mpe(X, "numpy")
+    for b in BACKENDS[1:]:
+        r = engine.mpe(X, b)
+        np.testing.assert_allclose(r.log_value, ref.log_value, atol=1e-4,
+                                   err_msg=b)
+        np.testing.assert_array_equal(r.assignment, ref.assignment, err_msg=b)
+
+
+def test_mpe_decoders_agree(engine):
+    X = _masked_evidence(engine.num_vars, n=12, seed=3)
+    bt, _ = mpe_backtrace(engine.max_prog, X)
+    gd = mpe_decode_grad(engine.max_prog, X)
+    np.testing.assert_array_equal(bt, gd)
+
+
+def test_mpe_invariants(engine):
+    """Decoded assignment respects evidence; its true probability
+    upper-bounds the max-product value (best-tree ≤ full sum)."""
+    X = _masked_evidence(engine.num_vars, seed=9)
+    r = engine.mpe(X, "numpy")
+    assert np.all((r.assignment == X) | (X < 0))
+    assert np.all((r.assignment >= 0) & (r.assignment <= 1))
+    joint = engine.joint(r.assignment, "numpy")
+    assert np.all(joint >= r.log_value - 1e-9)
+
+
+def test_mpe_exact_on_selective_spn(bernoulli_engine):
+    """Fully factorized SPN: MPE == per-variable argmax, verified by
+    brute force over all 2^5 states on every substrate."""
+    eng, probs = bernoulli_engine
+    V = len(probs)
+    states = np.array(list(itertools.product([0, 1], repeat=V)))
+    joints = eng.joint(states, "numpy")
+    best = states[int(np.argmax(joints))]
+    free = np.full((1, V), -1, np.int64)
+    for b in BACKENDS:
+        r = eng.mpe(free, b)
+        np.testing.assert_array_equal(r.assignment[0], best, err_msg=b)
+        np.testing.assert_allclose(r.log_value[0], joints.max(), atol=1e-5,
+                                   err_msg=b)
+
+
+def test_mpe_with_evidence_flips_argmax(bernoulli_engine):
+    """Observing a variable overrides its unconstrained argmax."""
+    eng, probs = bernoulli_engine
+    anti = {v: int(p < 0.5) for v, p in enumerate(probs)}  # least likely
+    x = evidence_array(len(probs), anti)
+    r = eng.mpe(x, "numpy")
+    np.testing.assert_array_equal(r.assignment[0],
+                                  [anti[v] for v in range(len(probs))])
+
+
+# ---------------------------------------------------------------------------
+# sampling queries
+# ---------------------------------------------------------------------------
+def test_sampler_substrates_bit_identical(engine):
+    a = sample_ancestral_numpy(engine.spn, 257, seed=11)
+    b = sample_ancestral_jax(engine.spn, 257, seed=11)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_samples_are_complete_binary(engine):
+    s = engine.sample(64, seed=2, backend="leveled")
+    assert s.samples.shape == (64, engine.num_vars)
+    assert set(np.unique(s.samples)) <= {0, 1}       # every var assigned
+    assert np.all(np.isfinite(s.log_prob))
+
+
+def test_sampler_statistics_match_marginals(small_engine):
+    """Empirical univariate marginals of 4000 draws track exact ones."""
+    n = 4000
+    s = small_engine.sample(n, seed=0, backend="numpy")
+    emp = s.samples.mean(0)
+    exact = np.array([float(np.exp(small_engine.marginal(
+        evidence_array(8, {v: 1}), "numpy"))[0]) for v in range(8)])
+    # ~4 sigma of a Bernoulli mean at n=4000
+    assert np.abs(emp - exact).max() < 4.0 * 0.5 / np.sqrt(n) + 1e-3
+
+
+def test_sample_scoring_cross_substrate(engine):
+    draws = {b: engine.sample(50, seed=4, backend=b) for b in BACKENDS}
+    ref = draws["numpy"]
+    for b in BACKENDS[1:]:
+        np.testing.assert_array_equal(draws[b].samples, ref.samples,
+                                      err_msg=b)
+        np.testing.assert_allclose(draws[b].log_prob, ref.log_prob,
+                                   atol=1e-4, err_msg=b)
+
+
+def test_sampler_respects_degenerate_weights():
+    """A (1.0, 0.0) mixture must never pick the zero branch."""
+    b = SPNBuilder()
+    i1, i0 = b.indicator(0, 1), b.indicator(0, 0)
+    spn = b.build(b.sum([i1, i0], [1.0, 0.0]))
+    s = sample_ancestral_numpy(spn, 500, seed=0)
+    assert (s == 1).all()
+    np.testing.assert_array_equal(sample_ancestral_jax(spn, 500, seed=0), s)
+
+
+# ---------------------------------------------------------------------------
+# evidence helpers
+# ---------------------------------------------------------------------------
+def test_evidence_helpers():
+    e = evidence_array(6, {0: 1, 3: 0}, batch=2)
+    assert e.shape == (2, 6) and e[0, 0] == 1 and e[1, 3] == 0
+    assert (e[:, [1, 2, 4, 5]] == -1).all()
+    with pytest.raises(ValueError):
+        evidence_array(6, {7: 1})
+    with pytest.raises(ValueError):
+        merge_evidence(evidence_array(6, {0: 1}), evidence_array(6, {0: 0}))
+    m = merge_evidence(evidence_array(6, {0: 1}), evidence_array(6, {5: 0}))
+    assert m[0, 0] == 1 and m[0, 5] == 0
+    masked = mask_vars(e, [0])
+    assert (masked[:, 0] == -1).all() and e[0, 0] == 1  # copy semantics
+
+
+def test_joint_rejects_partial_evidence(engine):
+    with pytest.raises(ValueError):
+        engine.joint(np.full((1, engine.num_vars), -1), "numpy")

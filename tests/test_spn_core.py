@@ -1,7 +1,7 @@
 """SPN graph / program lowering / executor equivalence tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import executors, io, program
 from repro.core.learn import learn_spn, random_spn
