@@ -1,19 +1,25 @@
 """Benchmark harness — one entry per paper table/figure.
 
 ``python -m benchmarks.run`` prints a ``name,us_per_call,derived`` CSV row
-per benchmark (plus the human-readable tables above them).
+per benchmark (plus the human-readable tables above them). ``--only``
+restricts to a substring-matched subset, e.g. ``--only serve`` runs just
+the substrate-serving benchmark (the CI bench-smoke step).
 """
 from __future__ import annotations
 
-import sys
+import argparse
 
 
-def main() -> None:
-    from . import fig2c_gpu_scaling, fig4_throughput, kernel_microbench, table1_resources
+def main(only: str | None = None) -> None:
+    from . import (fig2c_gpu_scaling, fig4_throughput, kernel_microbench,
+                   serve_bench, table1_resources)
     rows: list[str] = []
     for mod in (table1_resources, fig2c_gpu_scaling, fig4_throughput,
-                kernel_microbench):
-        print(f"\n=== {mod.__name__.split('.')[-1]} ===")
+                kernel_microbench, serve_bench):
+        name = mod.__name__.split(".")[-1]
+        if only and only not in name:
+            continue
+        print(f"\n=== {name} ===")
         rows.extend(mod.main())
     print("\nname,us_per_call,derived")
     for r in rows:
@@ -21,4 +27,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only benchmarks whose name contains this")
+    args = ap.parse_args()
+    main(args.only)

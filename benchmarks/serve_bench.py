@@ -1,0 +1,96 @@
+"""Serving throughput across substrates + VLIW fast-sim speedup.
+
+Runs batched queries through :class:`repro.runtime.Server` on one suite
+SPN and records per-substrate evals/s, plus the vectorized fast-sim vs
+cycle-accurate checked-sim comparison (bit-identity asserted, speedup
+measured). Results are printed as CSV rows and persisted to
+``BENCH_serve.json`` so the throughput trajectory accumulates across
+commits (the CI bench-smoke step runs this on the smallest dataset).
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--dataset nltcs]
+        [--batch 256] [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.processor import fastsim, sim
+from repro.queries import random_mask
+from repro.runtime import DEFAULT_SUBSTRATES, Server, verify_parity
+
+from .common import bench_spn, csv_row, timeit
+
+
+def _median_ms(fn, n_iter: int, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e3
+
+
+def main(dataset: str = "nltcs", batch: int = 256,
+         out_path: str = "BENCH_serve.json") -> list[str]:
+    spn, prog = bench_spn(dataset)
+    server = Server(spn)
+    Xq = random_mask(
+        np.random.default_rng(0).integers(0, 2, (batch, prog.num_vars)),
+        0.3, seed=0)
+    record: dict = {"dataset": dataset, "batch": batch, "query": "marginal",
+                    "n_ops": prog.n_ops, "substrates": {}}
+    rows: list[str] = []
+
+    for name in DEFAULT_SUBSTRATES:
+        us = timeit(lambda n=name: server.query(Xq, "marginal", n), n_iter=9)
+        evals_s = batch / (us / 1e6)
+        record["substrates"][name] = {"us_per_batch": us,
+                                      "evals_per_s": evals_s}
+        rows.append(csv_row(f"serve_{name}_b{batch}", us,
+                            f"evals/s={evals_s:.0f}"))
+        print(f"  {name:12s} {us:10.1f} us/batch ({evals_s:12.0f} evals/s)")
+
+    devs = verify_parity(server, Xq[:32], query="marginal")
+    record["parity_max_abs_dev"] = max(devs.values())
+
+    # fast-sim vs checked-sim: same artifact, same leaves, bit-identical
+    art = server.artifact("marginal", "vliw-sim")
+    vprog, dense, workspace = art.payload
+    cfg = server.substrate("vliw-sim").processor
+    leaves = art.prog.leaves_from_evidence(Xq).astype(np.float32)
+    assert np.array_equal(sim.simulate_leaves(vprog, leaves, cfg).root_values,
+                          fastsim.run(dense, leaves, workspace))
+    t_checked = _median_ms(
+        lambda: sim.simulate_leaves(vprog, leaves, cfg), n_iter=5)
+    t_fast = _median_ms(
+        lambda: fastsim.run(dense, leaves, workspace), n_iter=30)
+    speedup = t_checked / t_fast
+    record["vliw_fastsim"] = {
+        "checked_ms_per_batch": t_checked, "fast_ms_per_batch": t_fast,
+        "speedup": speedup, "bit_identical": True,
+        "cycles": vprog.num_cycles, "ops_per_cycle": vprog.ops_per_cycle}
+    rows.append(csv_row(f"fastsim_vs_checked_b{batch}", t_fast * 1e3,
+                        f"speedup={speedup:.1f}x"))
+    print(f"  fast-sim {t_fast:.3f} ms vs checked {t_checked:.2f} ms "
+          f"-> {speedup:.1f}x (bit-identical)")
+
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"  wrote {out_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="nltcs")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    main(args.dataset, args.batch, args.out)

@@ -104,3 +104,56 @@ class VLIWProgram:
     @property
     def ops_per_cycle(self) -> float:
         return self.n_useful_ops / max(self.num_cycles, 1)
+
+
+# --------------------------------------------------------------------------- #
+# Dense encoding — the fast-sim instruction format
+# --------------------------------------------------------------------------- #
+# Dense opcodes (forwards are resolved away at decode time, so only the
+# three arithmetic PE ops survive).
+D_ADD = 0
+D_MUL = 1
+D_MAX = 2
+
+_D_OF_PE = {PE_ADD: D_ADD, PE_MUL: D_MUL, PE_MAX: D_MAX}
+
+
+@dataclasses.dataclass
+class DenseProgram:
+    """Pre-decoded VLIW instruction stream as dense numpy arrays.
+
+    The sparse per-cycle :class:`VLIWInstr` stream (dict-of-dicts reads,
+    PE maps, pipelined writebacks) is replayed once, symbolically, into a
+    flat SSA value space: values ``[0, n_init)`` are the initial
+    data-memory image cells (constants + leaf-input overlay points),
+    values ``[n_init, n_init + n_ops)`` are PE outputs in dependence
+    (level-sorted) order. Crossbar reads, register-file traffic and
+    load/store rows are all resolved into the ``a``/``b`` operand index
+    vectors, so executing the program is a handful of vectorized
+    gather→op→scatter passes (:func:`repro.core.processor.fastsim.run`)
+    instead of a per-cycle Python interpretation — same arithmetic on the
+    same f32 values, hence bit-identical roots to the checked simulator.
+    """
+    n_init: int                 # initial SSA values (memory-image cells)
+    init_values: np.ndarray     # (n_init,) f32 constant image
+    input_cells: np.ndarray     # (m_ind,) int32 SSA id of each leaf slot
+    opcode: np.ndarray          # (n_ops,) uint8 D_* codes
+    a: np.ndarray               # (n_ops,) int32 first operand SSA id
+    b: np.ndarray               # (n_ops,) int32 second operand SSA id
+    level_offsets: np.ndarray   # (L+1,) int32 independent-op ranges
+    # ops are sorted by (level, opcode), so each level decomposes into ≤3
+    # contiguous single-opcode runs — executed as one ufunc call each,
+    # writing straight into the value-buffer slice; the fourth element
+    # fuses both operand vectors into a single gather index
+    segments: list              # [(lo, hi, D_* code, concat(a, b)), ...]
+    root: int                   # SSA id of the root value
+    cycles: int                 # source VLIW cycle count (throughput acct.)
+    n_useful_ops: int           # arithmetic ops excluding decode-time fwds
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.opcode)
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.level_offsets) - 1

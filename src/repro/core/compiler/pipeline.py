@@ -483,6 +483,28 @@ class _Scheduler:
         self.stats["bundle_ops"] += len(ops)
         return ops
 
+    def _alloc_root_row(self) -> int:
+        """Data-memory row for the epilogue root store.
+
+        Must never alias a row still holding live values: the root store
+        is the program's last write, but a consumer of this VLIWProgram
+        (multi-output extensions, debug dumps) may read any row the
+        compiler claims is still valid. Prefer a free row, else recycle a
+        spill row whose every slot is dead; a machine with no safe row
+        left fails loudly instead of silently clobbering a live one.
+        """
+        if self.mem_free_rows:
+            return self.mem_free_rows.pop()
+        for row in sorted(self.mem_row_slots):
+            if row < self.n_in_rows:
+                continue   # leaf/constant image rows are never recycled
+            if all(self.refcnt[s] <= 0 for s in self.mem_row_slots[row]):
+                return row
+        raise RuntimeError(
+            "no data-memory row available for the root store: "
+            f"{len(self.mem_row_slots)} rows all hold live values "
+            "(data_mem_rows too small for this program)")
+
     # ---------------- main loop ------------------------------------------ #
     def run(self) -> isa.VLIWProgram:
         cfg, prog, m = self.cfg, self.prog, self.m
@@ -600,7 +622,7 @@ class _Scheduler:
             self.instrs.append(isa.VLIWInstr(trees=[None] * cfg.num_trees))
             self.t += 1
         root_bank, root_reg = self.reg_of[root_slot]
-        out_row = self.mem_free_rows.pop() if self.mem_free_rows else cfg.data_mem_rows - 1
+        out_row = self._alloc_root_row()
         self.instrs.append(isa.VLIWInstr(
             trees=[None] * cfg.num_trees,
             mem=isa.MemInstr("store", out_row, root_reg)))

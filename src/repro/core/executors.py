@@ -131,6 +131,23 @@ def eval_leveled(prog: TensorProgram, leaf_ind: jnp.ndarray,
     return _leveled_impl(prog, full.T, log_domain)
 
 
+def make_leveled_eval(prog: TensorProgram, log_domain: bool = True):
+    """Bind ``prog`` into a standalone jit'd leveled evaluator.
+
+    This is the "compile" step of the leveled-jax substrate
+    (:mod:`repro.runtime.substrates`): the returned closure owns its own
+    jit cache entry and is the cacheable artifact payload; the leveled
+    pass itself is the shared :func:`_leveled_impl`.
+    """
+    @jax.jit
+    def run(leaf_ind: jnp.ndarray) -> jnp.ndarray:
+        leaf_ind = jnp.atleast_2d(leaf_ind).astype(jnp.float32)
+        full = _full_input(prog, leaf_ind, None, log_domain)
+        return _leveled_impl(prog, full.T, log_domain)
+
+    return run
+
+
 def log_likelihood(prog: TensorProgram, leaf_ind: jnp.ndarray,
                    params: jnp.ndarray | None = None) -> jnp.ndarray:
     """Batched root log-probability (log-domain leveled executor)."""

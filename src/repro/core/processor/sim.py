@@ -42,10 +42,10 @@ class SimResult:
     checks: dict
 
 
-def build_input_memory(vprog: isa.VLIWProgram, prog: TensorProgram,
-                       X: np.ndarray, cfg: ProcessorConfig) -> dict[int, np.ndarray]:
-    """Data-memory image: constant rows + indicator overlay for batch X."""
-    leaf_ind = prog.leaves_from_evidence(X).astype(np.float32)  # (batch, m_ind)
+def input_memory_from_leaves(vprog: isa.VLIWProgram, leaf_ind: np.ndarray,
+                             cfg: ProcessorConfig) -> dict[int, np.ndarray]:
+    """Data-memory image: constant rows + indicator-leaf overlay."""
+    leaf_ind = np.atleast_2d(leaf_ind).astype(np.float32)  # (batch, m_ind)
     batch = leaf_ind.shape[0]
     mem: dict[int, np.ndarray] = {}
     for row, consts in vprog.const_rows.items():
@@ -56,11 +56,26 @@ def build_input_memory(vprog: isa.VLIWProgram, prog: TensorProgram,
     return mem
 
 
+def build_input_memory(vprog: isa.VLIWProgram, prog: TensorProgram,
+                       X: np.ndarray, cfg: ProcessorConfig) -> dict[int, np.ndarray]:
+    """Data-memory image for evidence rows ``X`` (indicator expansion)."""
+    return input_memory_from_leaves(
+        vprog, prog.leaves_from_evidence(X), cfg)
+
+
 def simulate(vprog: isa.VLIWProgram, prog: TensorProgram, X: np.ndarray,
              cfg: ProcessorConfig) -> SimResult:
-    X = np.atleast_2d(X)
-    batch = X.shape[0]
-    mem = build_input_memory(vprog, prog, X, cfg)
+    """Checked simulation of evidence rows ``X`` (batch, num_vars)."""
+    return simulate_leaves(vprog,
+                           prog.leaves_from_evidence(np.atleast_2d(X)), cfg)
+
+
+def simulate_leaves(vprog: isa.VLIWProgram, leaf_ind: np.ndarray,
+                    cfg: ProcessorConfig) -> SimResult:
+    """Checked simulation from indicator-leaf inputs (batch, m_ind)."""
+    leaf_ind = np.atleast_2d(leaf_ind)
+    batch = leaf_ind.shape[0]
+    mem = input_memory_from_leaves(vprog, leaf_ind, cfg)
     nan = np.full(batch, np.nan, np.float32)
 
     regs = np.full((cfg.banks, cfg.regs_per_bank, batch), np.nan, np.float32)

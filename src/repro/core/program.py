@@ -24,6 +24,7 @@ skeleton answers MPE/MAP queries on every substrate.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
@@ -78,6 +79,39 @@ class TensorProgram:
 
     def level_sizes(self) -> np.ndarray:
         return np.diff(self.level_offsets)
+
+    def digest(self) -> str:
+        """Stable content hash of the program (sha256 hex, cached).
+
+        Two programs lowered from identical SPNs — e.g. the same circuit
+        re-learned from the same data — hash equal, so compiled-artifact
+        caches (:mod:`repro.runtime.cache`) survive object identity
+        changes. Covers every field that affects evaluation: structure
+        (B/C/O vectors, levels, root), leaf layout and parameter values.
+        Mutating ``param_values`` in place (EM / SGD learning) must be
+        followed by :meth:`invalidate_digest`.
+        """
+        cached = getattr(self, "_digest", None)
+        if cached is not None:
+            return cached
+        h = hashlib.sha256()
+        h.update(np.asarray(
+            [self.m_ind, self.m_param, self.root_slot], np.int64).tobytes())
+        for arr, dt in ((self.opcode, np.uint8), (self.b, np.int32),
+                        (self.c, np.int32), (self.level_offsets, np.int32),
+                        (self.ind_var, np.int32), (self.ind_value, np.int32),
+                        (self.param_values, np.float64)):
+            a = np.ascontiguousarray(np.asarray(arr, dt))
+            h.update(np.asarray(a.shape, np.int64).tobytes())
+            h.update(a.tobytes())
+        for g in self.sum_weight_groups:
+            h.update(np.ascontiguousarray(np.asarray(g, np.int32)).tobytes())
+        self._digest = h.hexdigest()
+        return self._digest
+
+    def invalidate_digest(self) -> None:
+        """Drop the cached digest after in-place parameter mutation."""
+        self._digest = None
 
     # ------------------------------------------------------------------ #
     def leaves_from_evidence(self, x: np.ndarray) -> np.ndarray:

@@ -1,4 +1,4 @@
-from .ops import pad_program, spn_eval
+from .ops import build_eval, pad_program, spn_eval
 from .ref import spn_eval_ref
 
-__all__ = ["spn_eval", "spn_eval_ref", "pad_program"]
+__all__ = ["build_eval", "spn_eval", "spn_eval_ref", "pad_program"]

@@ -85,6 +85,19 @@ def _build(prog: TensorProgram, batch_tile: int, log_domain: bool,
     return run
 
 
+def build_eval(prog: TensorProgram, *, batch_tile: int = K.LANE,
+               log_domain: bool = False, interpret: bool | None = None):
+    """Compile ``prog`` into a reusable kernel closure (pad + build + jit).
+
+    This is the "compile" step of the pallas substrate
+    (:mod:`repro.runtime.substrates`): the returned ``run(leaf_ind,
+    params=None)`` closure is the cacheable artifact payload. ``spn_eval``
+    remains the one-shot convenience wrapper over the same builder.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return _build(prog, int(batch_tile), bool(log_domain), bool(interpret))
+
+
 def spn_eval(prog: TensorProgram, leaf_ind, params=None, *,
              log_domain: bool = False, batch_tile: int = K.LANE,
              interpret: bool | None = None) -> jnp.ndarray:

@@ -1,27 +1,31 @@
-"""Serving driver.
+"""Serving driver — a thin CLI over :class:`repro.runtime.Server`.
 
 Two workloads:
 
-- ``spn``: the paper's workload — batched SPN inference, now with a
-  **query axis**. Learns an SPN, wraps it in the
-  :class:`repro.queries.QueryEngine` and serves batched requests of the
-  selected query type on every substrate (leveled JAX executor, Pallas
-  kernel, VLIW processor sim), reporting throughput per backend plus the
-  processor's ops/cycle (the paper's metric):
+- ``spn``: the paper's workload — batched SPN inference with a **query
+  axis** and a **substrate axis**. Learns an SPN, wraps it in the
+  unified substrate runtime (``repro.runtime``: substrate registry,
+  content-addressed compiled-artifact cache, dynamic micro-batcher) and
+  serves batched requests of the selected query type on the selected
+  substrate(s), reporting throughput per substrate plus the processor's
+  ops/cycle (the paper's metric):
 
-  - ``--query joint``     — full-evidence likelihood (the seed workload),
-  - ``--query marginal``  — partial evidence, ``--mask-frac`` of the
-    variables marginalized per row,
-  - ``--query mpe``       — max-product sweep on the same masked evidence
-    (the ``PE_MAX`` instruction stream on the processor) + argmax decode,
-  - ``--query sample``    — ancestral sampling (numpy vs lax.scan
-    samplers) + on-substrate scoring of the draws.
+  - ``--query {joint,marginal,mpe,sample}`` — which query is served
+    (``--mask-frac`` controls the evidence mask for marginal/mpe);
+  - ``--substrate {numpy,leveled-jax,pallas,vliw-sim,all}`` — which
+    backend serves it; every request flows through the same
+    ``runtime.Server`` path regardless of the backend.
+
+  Cross-substrate agreement is checked with
+  :func:`repro.runtime.verify_parity` (including bit-exact VLIW
+  fast-sim vs checked-sim conformance).
 
 - ``lm``: batched LM serving — prefill a prompt batch then decode N
   tokens with the KV cache, on the smoke config (CPU-sized).
 
     PYTHONPATH=src python -m repro.launch.serve --mode spn --dataset nltcs
-    PYTHONPATH=src python -m repro.launch.serve --mode spn --query mpe
+    PYTHONPATH=src python -m repro.launch.serve --mode spn --query mpe \\
+        --substrate vliw-sim
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen2-0.5b
 """
 from __future__ import annotations
@@ -33,89 +37,104 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+SPN_SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim")
+
+
+def bench(fn, n_batches: int, batch: int) -> dict:
+    """Time ``fn`` honestly: block on every iteration's result.
+
+    Earlier revisions only blocked after the loop, so asynchronously
+    dispatched iterations were untimed; per-iteration ``block_until_ready``
+    makes ``us_per_batch`` the real request latency.
+    """
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        jax.block_until_ready(fn())
+    dt = time.perf_counter() - t0
+    return {"us_per_batch": dt / n_batches * 1e6,
+            "evals_per_s": batch * n_batches / dt}
+
 
 def serve_spn(dataset: str, batch: int, n_batches: int,
-              use_kernel: bool = True, query: str = "joint",
+              substrate: str = "all", query: str = "joint",
               mask_frac: float = 0.3) -> dict:
-    from ..core import executors, learn
-    from ..core.processor import sim
+    from ..core import learn
     from ..data import spn_datasets
-    from ..kernels.spn_eval import spn_eval
-    from ..queries import QueryEngine, random_mask, sample_ancestral_jax, \
-        sample_ancestral_numpy
+    from ..queries import (mpe_backtrace, random_mask, sample_ancestral_jax,
+                           sample_ancestral_numpy)
+    from ..runtime import Server, verify_parity
 
     X = spn_datasets.load(dataset, "train", 400)
-    eng = QueryEngine(learn.learn_spn(X, min_instances=64))
-    # MPE rides the max-product twin; every other query the sum-product one
-    prog = eng.max_prog if query == "mpe" else eng.prog
-    print(f"SPN[{dataset}] query={query}: {prog.n_ops} ops, "
-          f"{prog.num_levels} levels")
+    spn = learn.learn_spn(X, min_instances=64)
+    server = Server(spn)
+    names = SPN_SUBSTRATES if substrate in ("all", None) else (substrate,)
+    print(f"SPN[{dataset}] query={query}: {server.prog.n_ops} ops, "
+          f"{server.prog.num_levels} levels; substrates: {', '.join(names)}")
 
-    # warmup + timed loops
-    out = {}
-    def bench(name, fn):
-        fn()  # compile
-        t0 = time.time()
-        for _ in range(n_batches):
-            r = fn()
-        jax.block_until_ready(r)
-        dt = time.time() - t0
-        out[name] = {"us_per_batch": dt / n_batches * 1e6,
-                     "evals_per_s": batch * n_batches / dt}
-        print(f"  {name:18s} {out[name]['us_per_batch']:10.1f} us/batch "
-              f"({out[name]['evals_per_s']:12.0f} evals/s)")
-        return r
-
+    out: dict = {}
     if query == "sample":
-        bench("sampler-numpy",
-              lambda: sample_ancestral_numpy(eng.spn, batch, seed=0))
-        samples = bench("sampler-lax-scan",
-                        lambda: sample_ancestral_jax(eng.spn, batch, seed=0))
+        out["sampler-numpy"] = bench(
+            lambda: sample_ancestral_numpy(spn, batch, seed=0),
+            n_batches, batch)
+        Xq = sample_ancestral_jax(spn, batch, seed=0)
+        out["sampler-lax-scan"] = bench(
+            lambda: sample_ancestral_jax(spn, batch, seed=0),
+            n_batches, batch)
         assert np.array_equal(
-            samples, sample_ancestral_numpy(eng.spn, batch, seed=0)), \
+            Xq, sample_ancestral_numpy(spn, batch, seed=0)), \
             "sampler substrate mismatch"
-        leaves = jnp.asarray(prog.leaves_from_evidence(samples), jnp.float32)
+        Xq = np.asarray(Xq)
     else:
         Xq = spn_datasets.load(dataset, "test", batch)
         if query in ("marginal", "mpe"):
             Xq = random_mask(Xq, mask_frac, seed=0)
-        leaves = jnp.asarray(prog.leaves_from_evidence(Xq), jnp.float32)
+    for name, r in out.items():
+        print(f"  {name:18s} {r['us_per_batch']:10.1f} us/batch "
+              f"({r['evals_per_s']:12.0f} evals/s)")
 
+    # every substrate serves the same batched requests through the Server
     score = "score-" if query == "sample" else ""
-    r_lvl = bench(f"{score}leveled-jax",
-                  lambda: executors.eval_leveled(prog, leaves, None, True))
-    if use_kernel:
-        r_ker = bench(f"{score}pallas-kernel",
-                      lambda: spn_eval(prog, leaves, log_domain=True))
-        err = float(jnp.abs(r_ker - r_lvl).max())
-        print(f"  kernel vs leveled max |Δ|: {err:.2e}")
+    for name in names:
+        out[score + name] = bench(
+            lambda n=name: server.query(Xq, query, n), n_batches, batch)
+        r = out[score + name]
+        extra = ""
+        if name == "vliw-sim":
+            meta = server.artifact(query, name).meta
+            out["processor_sim"] = {"ops_per_cycle": meta["ops_per_cycle"],
+                                    "cycles": meta["cycles"]}
+            extra = (f"  [{meta['ops_per_cycle']:.2f} ops/cycle, "
+                     f"{meta['cycles']} cycles/eval-batch]")
+        print(f"  {score + name:18s} {r['us_per_batch']:10.1f} us/batch "
+              f"({r['evals_per_s']:12.0f} evals/s){extra}")
 
-    # VLIW processor: compile once (cached on the engine), simulate a slice
-    Xs = (np.asarray(samples[:8]) if query == "sample" else Xq[:8])
-    vprog = eng.vliw_program(prog)
-    res = sim.simulate(vprog, prog, Xs, eng.processor)
-    ref = executors.eval_ops_numpy(prog, np.asarray(
-        prog.leaves_from_evidence(Xs)))
-    assert np.allclose(res.root_values, ref, rtol=1e-4), "processor mismatch"
-    out["processor_sim"] = {"ops_per_cycle": res.ops_per_cycle,
-                            "cycles": res.cycles}
-    print(f"  processor-sim      {res.ops_per_cycle:.2f} ops/cycle "
-          f"({res.cycles} cycles/eval-batch)")
+    # cross-substrate agreement (includes bit-exact fast-vs-checked sim)
+    devs = verify_parity(server, Xq[: min(len(Xq), 32)], query=query,
+                         substrates=names)
+    out["parity"] = devs
+    print("  parity vs numpy oracle: " +
+          ", ".join(f"{k}={v:.1e}" for k, v in devs.items()))
 
     if query == "mpe":
-        r = eng.mpe(Xq[:4], backend="numpy")
-        # tie-robust self-check: the decoded assignment must reproduce the
-        # sweep's root value under the max program (argmax identity may
-        # legitimately differ between decoders on exact ties)
-        dec = executors.eval_ops_numpy(
-            prog, prog.leaves_from_evidence(r.assignment), log_domain=True)
-        assert np.allclose(dec, r.log_value, atol=1e-6), "decode mismatch"
+        art = server.artifact("mpe", names[0])
+        assignment, log_value = mpe_backtrace(art.prog, Xq[:4])
+        dec = server.query(assignment, "joint", names[0])
+        # tie-robust self-check: the decoded assignment's max-product
+        # value must reproduce the sweep's root value
+        chk = server.query(assignment, "mpe", names[0])
+        assert np.allclose(chk, log_value, atol=1e-4), "decode mismatch"
         out["mpe_example"] = {"evidence": Xq[:4].tolist(),
-                              "assignment": r.assignment.tolist(),
-                              "log_value": r.log_value.tolist()}
+                              "assignment": assignment.tolist(),
+                              "log_value": log_value.tolist()}
         print(f"  MPE decode self-check ok, e.g. row 0: "
-              f"{Xq[0].tolist()} -> {r.assignment[0].tolist()} "
-              f"(log p* = {r.log_value[0]:.4f})")
+              f"{Xq[0].tolist()} -> {assignment[0].tolist()} "
+              f"(log p* = {log_value[0]:.4f}, log p = {dec[0]:.4f})")
+
+    out["runtime_stats"] = server.stats()
+    cs = out["runtime_stats"]["cache"]
+    print(f"  artifact cache: {cs['hits']} hits / {cs['misses']} misses "
+          f"({cs['size']} artifacts resident)")
     return out
 
 
@@ -161,6 +180,10 @@ def main() -> None:
     ap.add_argument("--query", choices=["joint", "marginal", "mpe", "sample"],
                     default="joint",
                     help="SPN query type served (see repro.queries)")
+    ap.add_argument("--substrate",
+                    choices=list(SPN_SUBSTRATES) + ["all"], default="all",
+                    help="execution substrate serving the SPN queries "
+                         "(see repro.runtime.substrates)")
     ap.add_argument("--mask-frac", type=float, default=0.3,
                     help="fraction of variables marginalized for "
                          "marginal/mpe queries")
@@ -173,7 +196,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.mode == "spn":
         serve_spn(args.dataset, args.batch, args.batches,
-                  query=args.query, mask_frac=args.mask_frac)
+                  substrate=args.substrate, query=args.query,
+                  mask_frac=args.mask_frac)
     else:
         serve_lm(args.arch, min(args.batch, 8), args.prompt_len,
                  args.gen_len)

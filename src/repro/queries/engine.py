@@ -1,10 +1,13 @@
-"""Multi-query inference engine over all four execution substrates.
+"""Multi-query inference engine over the pluggable substrate runtime.
 
 :class:`QueryEngine` turns one SPN into a query server. It lowers the
 circuit once into its sum-product :class:`~repro.core.program.TensorProgram`
-and the max-product twin, holds both alive (substrate caches — Pallas
-kernel builds, VLIW compiles — key on program identity), and dispatches
-each query to the requested backend:
+(holding the max-product twin alive for decoders) and dispatches each
+query through the substrate registry of
+:mod:`repro.runtime.substrates` — compiled artifacts (kernel builds,
+VLIW compiles + fast-sim decodes, leveled closures) live in a
+content-addressed :class:`~repro.runtime.cache.ArtifactCache`, so
+repeated queries never recompile:
 
 ====================  ========  =========  ========  ========
 query \\ backend       numpy     leveled    kernel    sim
@@ -18,12 +21,14 @@ query \\ backend       numpy     leveled    kernel    sim
 ``sample`` (score)    ✓         ✓          ✓         ✓
 ====================  ========  =========  ========  ========
 
-Backends: ``numpy`` — float64 alg.-1 oracle; ``leveled`` — group-decomposed
-jit'd JAX; ``kernel`` — the Pallas TPU kernel (interpret-mode off-TPU);
-``sim`` — VLIW compile + cycle-accurate processor simulation (linear f32;
-the engine logs the root afterwards). Sampling draws never run *on* the
-kernel/sim substrates (a fixed op stream cannot flip coins), so those
-backends draw with the JAX sampler and score the draws on-substrate.
+Backend names are the engine's historical spellings; they resolve to
+registry substrates via :data:`repro.runtime.substrates.ALIASES`
+(``numpy`` → float64 alg.-1 oracle, ``leveled`` → ``leveled-jax``,
+``kernel`` → ``pallas`` (interpret-mode off-TPU), ``sim`` →
+``vliw-sim``, the VLIW compile + vectorized fast-sim of the paper's
+processor). Sampling draws never run *on* the kernel/sim substrates (a
+fixed op stream cannot flip coins), so those backends draw with the JAX
+sampler and score the draws on-substrate.
 
 All log values are base e.
 """
@@ -31,14 +36,13 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
 import numpy as np
 
-from ..core import executors, program
-from ..core.processor import sim as processor_sim
+from ..core import program
 from ..core.processor.config import PTREE, ProcessorConfig
 from ..core.spn import SPN
-from ..kernels.spn_eval import spn_eval
+from ..runtime.cache import ArtifactCache
+from ..runtime.substrates import canonical, make_substrate
 from . import evidence as ev
 from . import mpe as mpe_mod
 from . import sampling
@@ -67,48 +71,57 @@ class QueryEngine:
     """
 
     def __init__(self, spn: SPN, *, processor: ProcessorConfig = PTREE,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, cache_capacity: int = 16):
         self.spn = spn
         self.prog = program.lower(spn)
         self.max_prog = program.to_max_product(self.prog)
         self.processor = processor
         self.interpret = interpret
-        self._vliw: dict[int, object] = {}    # id(prog) -> VLIWProgram
+        self.cache = ArtifactCache(cache_capacity)
+        self._substrates: dict[str, object] = {}
 
     @property
     def num_vars(self) -> int:
         return self.prog.num_vars
 
     # ---------------- substrate dispatch ---------------------------------- #
-    def vliw_program(self, prog: program.TensorProgram):
-        """Compiled VLIW program for ``prog`` (cached on the engine)."""
-        key = id(prog)
-        if key not in self._vliw:
-            from ..core.compiler.pipeline import compile_program
-            self._vliw[key] = compile_program(prog, self.processor)
-        return self._vliw[key]
+    def substrate(self, backend: str):
+        """Registry substrate instance for an engine backend name."""
+        name = canonical(backend)
+        if name not in self._substrates:
+            try:
+                self._substrates[name] = make_substrate(
+                    name, processor=self.processor, interpret=self.interpret)
+            except ValueError:
+                raise ValueError(f"unknown backend {backend!r}; pick from "
+                                 f"{BACKENDS}") from None
+        return self._substrates[name]
 
-    def _eval_log(self, prog: program.TensorProgram, x: np.ndarray,
-                  backend: str) -> np.ndarray:
-        """Root log value of ``prog`` under evidence ``x`` on ``backend``."""
+    def artifact(self, query: str, backend: str):
+        """Compiled artifact for (this SPN, query, backend) — cached."""
+        return self.cache.get_or_compile(self.substrate(backend), self.prog,
+                                         query=query, log_domain=True)
+
+    def vliw_program(self, prog: program.TensorProgram):
+        """Compiled VLIW program for ``prog``.
+
+        The engine's own programs route through the artifact cache; any
+        other program is compiled directly (one-off, uncached).
+        """
+        if prog.digest() == self.prog.digest():
+            return self.artifact("joint", "sim").payload[0]
+        if prog.digest() == self.max_prog.digest():
+            return self.artifact("mpe", "sim").payload[0]
+        from ..core.compiler.pipeline import compile_program
+        return compile_program(prog, self.processor)
+
+    def _eval_log(self, x: np.ndarray, backend: str,
+                  query: str) -> np.ndarray:
+        """Root log value of the query's program under evidence ``x``."""
         x = np.atleast_2d(x)
-        if backend == "sim":       # the simulator expands evidence itself
-            res = processor_sim.simulate(self.vliw_program(prog), prog, x,
-                                         self.processor)
-            with np.errstate(divide="ignore"):
-                return np.log(res.root_values.astype(np.float64))
-        leaf = prog.leaves_from_evidence(x)
-        if backend == "numpy":
-            return executors.eval_ops_numpy(prog, leaf, log_domain=True)
-        if backend == "leveled":
-            out = executors.eval_leveled(prog, jnp.asarray(leaf, jnp.float32),
-                                         None, True)
-            return np.asarray(out, np.float64)
-        if backend == "kernel":
-            out = spn_eval(prog, leaf.astype(np.float32), log_domain=True,
-                           interpret=self.interpret)
-            return np.asarray(out, np.float64)
-        raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
+        art = self.artifact(query, backend)
+        sub = self.substrate(backend)
+        return sub.execute(art, art.prog.leaves_from_evidence(x))
 
     # ---------------- queries --------------------------------------------- #
     def joint(self, x: np.ndarray, backend: str = "leveled") -> np.ndarray:
@@ -117,11 +130,11 @@ class QueryEngine:
         if (x < 0).any():
             raise ValueError("joint() needs full evidence; use marginal() "
                              "for rows containing -1")
-        return self._eval_log(self.prog, x, backend)
+        return self._eval_log(x, backend, "joint")
 
     def marginal(self, x: np.ndarray, backend: str = "leveled") -> np.ndarray:
         """log p(evidence): -1 entries are summed out by the indicator mask."""
-        return self._eval_log(self.prog, x, backend)
+        return self._eval_log(x, backend, "marginal")
 
     def conditional(self, query: np.ndarray, evidence: np.ndarray,
                     backend: str = "leveled") -> np.ndarray:
@@ -140,13 +153,13 @@ class QueryEngine:
         """
         x = np.atleast_2d(x)
         if backend == "leveled":
-            log_value = self._eval_log(self.max_prog, x, backend)
+            log_value = self._eval_log(x, backend, "mpe")
             assignment = mpe_mod.mpe_decode_grad(self.max_prog, x)
         elif backend == "numpy":
             # one sweep: the backtrace's buffer root IS the numpy value
             assignment, log_value = mpe_mod.mpe_backtrace(self.max_prog, x)
         else:
-            log_value = self._eval_log(self.max_prog, x, backend)
+            log_value = self._eval_log(x, backend, "mpe")
             assignment, _ = mpe_mod.mpe_backtrace(self.max_prog, x)
         return MPEResult(assignment=assignment, log_value=log_value)
 
@@ -158,4 +171,5 @@ class QueryEngine:
         else:
             samples = sampling.sample_ancestral_jax(self.spn, n, seed)
         return SampleResult(samples=samples,
-                            log_prob=self.joint(samples, backend))
+                            log_prob=self._eval_log(samples, backend,
+                                                    "sample"))

@@ -1,5 +1,26 @@
+"""Unified substrate runtime: pluggable backends, artifact cache,
+dynamic micro-batching, serving — plus the fault-tolerance harness.
+
+See :mod:`repro.runtime.substrates` for the backend registry,
+:mod:`repro.runtime.server` for the serving entry point.
+"""
+from .batcher import MicroBatcher, PendingResult
+from .cache import ArtifactCache
 from .fault import (FailureInjector, Heartbeat, RestartPolicy,
                     TrainingAborted, Watchdog, run_with_restarts)
+from .server import DEFAULT_SUBSTRATES, ParityError, Server, verify_parity
+from .substrates import (ALIASES, LANE, QUERIES, SEMIRING_OF_QUERY, Artifact,
+                         Substrate, available_substrates, canonical,
+                         get_substrate, make_substrate, register)
 
-__all__ = ["FailureInjector", "Heartbeat", "RestartPolicy", "TrainingAborted",
-           "Watchdog", "run_with_restarts"]
+__all__ = [
+    # fault tolerance
+    "FailureInjector", "Heartbeat", "RestartPolicy", "TrainingAborted",
+    "Watchdog", "run_with_restarts",
+    # substrate runtime
+    "ALIASES", "LANE", "QUERIES", "SEMIRING_OF_QUERY", "Artifact",
+    "Substrate", "available_substrates", "canonical", "get_substrate",
+    "make_substrate", "register",
+    "ArtifactCache", "MicroBatcher", "PendingResult",
+    "DEFAULT_SUBSTRATES", "ParityError", "Server", "verify_parity",
+]

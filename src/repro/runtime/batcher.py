@@ -1,0 +1,79 @@
+"""Dynamic micro-batching of heterogeneous inference requests.
+
+The kernel substrate pads every call to the 128-lane tile, and the
+leveled/VLIW paths amortize fixed per-call cost over the batch — so
+serving many small requests one by one wastes most of the machine. The
+:class:`MicroBatcher` coalesces submitted requests (any mix of row
+counts) into one leaf matrix, pads the row count up to the executor's
+tile with neutral all-marginalized rows (indicator 1.0 — finite in both
+domains), executes once, and scatters result slices back to each
+caller's :class:`PendingResult`.
+
+Flushes happen when the accumulated rows reach ``max_rows``, or
+explicitly (``flush()`` / first ``result()`` call) — the synchronous
+analogue of a serving deadline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class PendingResult:
+    """Handle for a submitted request; materializes on first access."""
+
+    def __init__(self, batcher: "MicroBatcher"):
+        self._batcher = batcher
+        self._value: np.ndarray | None = None
+
+    def ready(self) -> bool:
+        return self._value is not None
+
+    def result(self) -> np.ndarray:
+        if self._value is None:
+            self._batcher.flush()
+        assert self._value is not None
+        return self._value
+
+
+class MicroBatcher:
+    def __init__(self, execute, *, tile: int = 128, max_rows: int = 4096):
+        """``execute``: (rows, m_ind) linear leaves -> (rows,) values."""
+        if max_rows % tile:
+            max_rows = (max_rows // tile + 1) * tile
+        self.execute = execute
+        self.tile = tile
+        self.max_rows = max_rows
+        self._queue: list[tuple[np.ndarray, PendingResult]] = []
+        self._queued_rows = 0
+        self.stats = {"requests": 0, "rows": 0, "batches": 0,
+                      "padded_rows": 0}
+
+    def submit(self, leaves: np.ndarray) -> PendingResult:
+        leaves = np.atleast_2d(np.asarray(leaves))
+        pending = PendingResult(self)
+        self._queue.append((leaves, pending))
+        self._queued_rows += leaves.shape[0]
+        self.stats["requests"] += 1
+        self.stats["rows"] += leaves.shape[0]
+        if self._queued_rows >= self.max_rows:
+            self.flush()
+        return pending
+
+    def flush(self) -> None:
+        if not self._queue:
+            return
+        queue, self._queue, self._queued_rows = self._queue, [], 0
+        rows = np.concatenate([leaves for leaves, _ in queue], axis=0)
+        n = rows.shape[0]
+        n_pad = (n + self.tile - 1) // self.tile * self.tile
+        if n_pad > n:   # neutral rows: every indicator 1 (marginalize-all)
+            pad = np.ones((n_pad - n, rows.shape[1]), rows.dtype)
+            rows = np.concatenate([rows, pad], axis=0)
+        values = np.asarray(self.execute(rows))[:n]
+        self.stats["batches"] += 1
+        self.stats["padded_rows"] += n_pad - n
+        off = 0
+        for leaves, pending in queue:
+            k = leaves.shape[0]
+            pending._value = values[off: off + k]
+            off += k

@@ -1,0 +1,67 @@
+"""Content-addressed LRU cache of compiled substrate artifacts.
+
+Repeated requests for the same (SPN, query, substrate, batch tile)
+quadruple must never re-levelize, re-pad, re-trace or re-run the VLIW
+compiler: keys are built from :meth:`TensorProgram.digest` — a *content*
+hash — so even a structurally identical program re-learned into a fresh
+object hits. Capacity-bounded LRU with hit/miss/eviction counters
+(`stats()`), shared by the query engine, the server and the benchmarks.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from ..core.program import TensorProgram
+from .substrates import LANE, SEMIRING_OF_QUERY, Substrate
+
+
+class ArtifactCache:
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: OrderedDict[tuple, object] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @staticmethod
+    def key(prog: TensorProgram, query: str, substrate: str,
+            batch_tile: int, log_domain: bool) -> tuple:
+        # the query component is normalized to its semiring: joint,
+        # marginal and sample all execute the identical sum-product
+        # program, so they share one compiled artifact per substrate
+        return (prog.digest(), SEMIRING_OF_QUERY.get(query, query),
+                substrate, batch_tile, log_domain)
+
+    def get_or_compile(self, substrate: Substrate, prog: TensorProgram, *,
+                       query: str = "joint", log_domain: bool = True,
+                       batch_tile: int = LANE):
+        k = self.key(prog, query, substrate.name, batch_tile, log_domain)
+        art = self._entries.get(k)
+        if art is not None:
+            self.hits += 1
+            self._entries.move_to_end(k)
+            return art
+        self.misses += 1
+        art = substrate.compile(prog, query=query, log_domain=log_domain,
+                                batch_tile=batch_tile)
+        self._entries[k] = art
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return art
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._entries),
+                "capacity": self.capacity}

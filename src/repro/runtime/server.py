@@ -1,0 +1,189 @@
+"""The unified substrate runtime server.
+
+``Server`` owns everything between a raw SPN and a stream of answered
+queries: the lowered :class:`TensorProgram`, one instance of every
+requested substrate, the content-addressed :class:`ArtifactCache`, and a
+dynamic :class:`MicroBatcher` per live artifact. The serving driver
+(``repro.launch.serve``) is a thin CLI over this class, and later
+scaling layers (sharding, async dispatch, multi-model) stack on the same
+interface.
+
+Request path::
+
+    submit(x, query, substrate)          # evidence -> leaves -> enqueue
+      -> flush() / result()              # coalesce, pad to tile, execute
+    query(x, query, substrate)           # synchronous convenience
+
+:func:`verify_parity` is the reusable cross-substrate agreement check —
+every substrate's root values against the float64 numpy oracle, plus the
+vliw fast-sim against the cycle-accurate checked simulator (bit-exact).
+It replaces the asserts previously inlined in ``serve_spn()`` and is
+shared by serve and the tests.
+"""
+from __future__ import annotations
+
+import weakref
+
+import numpy as np
+
+from ..core import program as program_mod
+from ..core.processor.config import PTREE, ProcessorConfig
+from ..core.spn import SPN
+from .batcher import MicroBatcher, PendingResult
+from .cache import ArtifactCache
+from .substrates import (LANE, QUERIES, Artifact, Substrate, canonical,
+                         make_substrate)
+
+DEFAULT_SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim")
+
+
+class ParityError(AssertionError):
+    pass
+
+
+class Server:
+    """Multi-substrate, multi-query SPN inference server."""
+
+    def __init__(self, spn: SPN | None = None, *,
+                 prog: program_mod.TensorProgram | None = None,
+                 substrates: tuple[str, ...] | None = None,
+                 processor: ProcessorConfig = PTREE,
+                 interpret: bool | None = None,
+                 cache_capacity: int = 32,
+                 batch_tile: int = LANE,
+                 max_rows: int = 4096):
+        if prog is None:
+            if spn is None:
+                raise ValueError("need an SPN or a lowered TensorProgram")
+            prog = program_mod.lower(spn)
+        self.spn = spn
+        self.prog = prog
+        self.batch_tile = batch_tile
+        self.max_rows = max_rows
+        self.cache = ArtifactCache(cache_capacity)
+        self._processor = processor
+        self._interpret = interpret
+        names = tuple(canonical(n)
+                      for n in (substrates or DEFAULT_SUBSTRATES))
+        self.substrates: dict[str, Substrate] = {
+            n: make_substrate(n, processor=processor, interpret=interpret)
+            for n in names}
+        self._batchers: weakref.WeakKeyDictionary[Artifact, MicroBatcher] = \
+            weakref.WeakKeyDictionary()
+
+    # ---------------- compilation ----------------------------------------- #
+    def substrate(self, name: str) -> Substrate:
+        cname = canonical(name)
+        if cname not in self.substrates:
+            raise ValueError(f"substrate {name!r} not enabled; have "
+                             f"{tuple(self.substrates)}")
+        return self.substrates[cname]
+
+    def artifact(self, query: str = "joint",
+                 substrate: str = "leveled-jax") -> Artifact:
+        """Compiled artifact for (this SPN, query, substrate) — cached."""
+        return self.cache.get_or_compile(
+            self.substrate(substrate), self.prog, query=query,
+            log_domain=True, batch_tile=self.batch_tile)
+
+    def _batcher_for(self, art: Artifact) -> MicroBatcher:
+        batcher = self._batchers.get(art)
+        if batcher is None:
+            sub = self.substrate(art.substrate)
+            # the closure must hold the artifact weakly, or this entry's
+            # value would pin its own key and the WeakKeyDictionary could
+            # never release evicted artifacts (payloads included)
+            aref = weakref.ref(art)
+            batcher = MicroBatcher(
+                lambda leaves, _s=sub, _r=aref: _s.execute(_r(), leaves),
+                tile=sub.pad_tile(self.batch_tile), max_rows=self.max_rows)
+            self._batchers[art] = batcher
+        return batcher
+
+    # ---------------- request path ----------------------------------------- #
+    def submit(self, x: np.ndarray, query: str = "joint",
+               substrate: str = "leveled-jax") -> PendingResult:
+        """Enqueue evidence rows ``x``; returns a :class:`PendingResult`.
+
+        ``x``: (batch, num_vars) with ``-1`` marginalizing (or, for MPE,
+        maximizing over) a variable. The result is the (batch,) root log
+        value of the query's program on the chosen substrate.
+        """
+        x = np.atleast_2d(x)
+        if query == "joint" and (x < 0).any():
+            raise ValueError("joint queries need full evidence; "
+                             "use query='marginal' for rows containing -1")
+        art = self.artifact(query, substrate)
+        leaves = art.prog.leaves_from_evidence(x)
+        return self._batcher_for(art).submit(leaves)
+
+    def flush(self) -> None:
+        for batcher in list(self._batchers.values()):
+            batcher.flush()
+
+    def query(self, x: np.ndarray, query: str = "joint",
+              substrate: str = "leveled-jax") -> np.ndarray:
+        """Synchronous submit + flush: (batch,) root log values."""
+        pending = self.submit(x, query, substrate)
+        return pending.result()
+
+    # ---------------- introspection ---------------------------------------- #
+    def stats(self) -> dict:
+        out = {"cache": self.cache.stats(),
+               "compiles": {n: s.compile_count
+                            for n, s in self.substrates.items()},
+               "batchers": {}}
+        for art, b in self._batchers.items():
+            out["batchers"][f"{art.semiring}/{art.substrate}"] = dict(b.stats)
+        return out
+
+
+def verify_parity(server: Server, x: np.ndarray, *, query: str = "marginal",
+                  substrates: tuple[str, ...] | None = None,
+                  atol: float = 1e-4) -> dict[str, float]:
+    """Cross-substrate agreement on ``x`` against the numpy oracle.
+
+    Returns ``{substrate: max_abs_deviation}`` (fast-vs-checked VLIW
+    conformance reported as ``vliw-sim/checked``, compared bit-exactly).
+    Raises :class:`ParityError` on any disagreement.
+    """
+    if query not in QUERIES:
+        raise ValueError(f"unknown query {query!r}")
+    names = tuple(canonical(n) for n in (substrates or server.substrates))
+    x = np.atleast_2d(x)
+    if "numpy" in server.substrates:
+        ref = server.query(x, query, "numpy")
+    else:   # the oracle is the point of the check — build one on demand
+        oracle = make_substrate("numpy")
+        art = server.cache.get_or_compile(
+            oracle, server.prog, query=query, log_domain=True,
+            batch_tile=server.batch_tile)
+        ref = oracle.execute(art, art.prog.leaves_from_evidence(x))
+    devs: dict[str, float] = {}
+
+    def against_ref(name: str, vals: np.ndarray) -> None:
+        both_inf = np.isneginf(vals) & np.isneginf(ref)
+        dev = float(np.abs(np.where(both_inf, 0.0, vals - ref)).max())
+        devs[name] = dev
+        if not np.isfinite(dev) or dev > atol:
+            raise ParityError(f"substrate {name!r} deviates from the "
+                              f"numpy oracle by {dev:.3e} (atol={atol})")
+
+    for name in names:
+        if name == "numpy":
+            devs[name] = 0.0
+            continue
+        vals = server.query(x, query, name)
+        against_ref(name, vals)
+        if name == "vliw-sim":
+            art = server.artifact(query, name)
+            sub = server.substrate(name)
+            leaves = art.prog.leaves_from_evidence(np.atleast_2d(x))
+            checked = sub.execute_checked(art, leaves)
+            fast = sub.execute(art, leaves)
+            if not np.array_equal(checked, fast):
+                raise ParityError(
+                    "vliw fast-sim root values are not bit-identical to "
+                    "the checked cycle-accurate simulator")
+            devs["vliw-sim/checked"] = 0.0
+    return devs

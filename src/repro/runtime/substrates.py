@@ -1,0 +1,247 @@
+"""Pluggable execution substrates behind one compile/execute interface.
+
+The paper's claim is architectural: the *same* SPN instruction stream can
+be served by very different machines. The seed repo had the four
+execution paths hand-wired across ``core/executors.py``,
+``kernels/spn_eval``, ``queries/engine.py`` and ``launch/serve.py``;
+this module extracts them behind a single :class:`Substrate` interface —
+
+``compile(prog, *, query, log_domain, batch_tile) -> Artifact``
+    one-time work: semiring rewrite for MPE, levelization, kernel
+    builds, VLIW compilation, fast-sim decode;
+``execute(artifact, leaves) -> values``
+    the per-request hot path: (batch, m_ind) linear indicator inputs →
+    (batch,) root values (log-domain when the artifact says so).
+
+Four registered implementations:
+
+==============  ==========================================================
+``numpy``       float64 alg.-1 oracle (:func:`~repro.core.executors.eval_ops_numpy`)
+``leveled-jax`` group-decomposed jit'd JAX executor
+``pallas``      Pallas TPU kernel (interpret-mode off-TPU)
+``vliw-sim``    VLIW compile + vectorized fast-sim (checked sim as oracle)
+==============  ==========================================================
+
+Artifacts are content-addressed via :meth:`TensorProgram.digest` and
+cached by :class:`repro.runtime.cache.ArtifactCache`; the registry is
+open — new backends (sharded, async, remote) register themselves with
+:func:`register` and every consumer (query engine, server, benchmarks)
+picks them up by name.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import executors, program
+from ..core.processor import fastsim, sim
+from ..core.processor.config import PTREE, ProcessorConfig
+
+LANE = 128    # kernel lane tile — the batcher's padding unit
+
+#: accepted spellings -> canonical substrate name (legacy QueryEngine
+#: backend names and the ISSUE's long names both resolve)
+ALIASES = {
+    "numpy-oracle": "numpy",
+    "oracle": "numpy",
+    "leveled": "leveled-jax",
+    "kernel": "pallas",
+    "pallas-kernel": "pallas",
+    "sim": "vliw-sim",
+}
+
+QUERIES = ("joint", "marginal", "mpe", "sample")
+
+#: which semiring a query's program runs under — joint/marginal/sample
+#: all execute the *same* sum-product program (they differ only in the
+#: evidence mask / where the rows come from), so compiled artifacts are
+#: shared across them; only MPE needs the max-product twin
+SEMIRING_OF_QUERY = {"joint": "sum", "marginal": "sum", "sample": "sum",
+                     "mpe": "max"}
+
+
+def canonical(name: str) -> str:
+    return ALIASES.get(name, name)
+
+
+@dataclasses.dataclass(eq=False)
+class Artifact:
+    """One compiled (program, semiring, substrate, batch_tile) artifact."""
+    substrate: str
+    query: str                        # query that triggered the compile
+    semiring: str                     # "sum" | "max" — the real identity
+    log_domain: bool
+    batch_tile: int
+    digest: str                       # base-program content hash
+    prog: program.TensorProgram       # derived program actually executed
+    payload: object                   # substrate-specific compiled object
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+class Substrate:
+    """Base class: derive the query's program, delegate the real build."""
+
+    name: str = "abstract"
+
+    def __init__(self) -> None:
+        self.compile_count = 0        # asserted on by cache-hit tests
+
+    def compile(self, prog: program.TensorProgram, *, query: str = "joint",
+                log_domain: bool = True,
+                batch_tile: int = LANE) -> Artifact:
+        if query not in QUERIES:
+            raise ValueError(f"unknown query {query!r}; pick from {QUERIES}")
+        self.compile_count += 1
+        digest = prog.digest()
+        semiring = SEMIRING_OF_QUERY[query]
+        # MPE rides the max-product (tropical) twin; every other query
+        # the sum-product program itself
+        derived = program.to_max_product(prog) if semiring == "max" else prog
+        payload, meta = self._build(derived, log_domain, batch_tile)
+        return Artifact(substrate=self.name, query=query, semiring=semiring,
+                        log_domain=log_domain, batch_tile=batch_tile,
+                        digest=digest, prog=derived, payload=payload,
+                        meta=meta)
+
+    def pad_tile(self, batch_tile: int) -> int:
+        """Row multiple the micro-batcher should pad requests to."""
+        return 1    # most substrates take any batch; the kernel overrides
+
+    def _build(self, prog: program.TensorProgram, log_domain: bool,
+               batch_tile: int):
+        raise NotImplementedError
+
+    def execute(self, artifact: Artifact, leaves: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, type[Substrate]] = {}
+
+
+def register(cls: type[Substrate]) -> type[Substrate]:
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available_substrates() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_substrate(name: str, **kwargs) -> Substrate:
+    """Instantiate a registered substrate by (aliased) name."""
+    cname = canonical(name)
+    if cname not in _REGISTRY:
+        raise ValueError(f"unknown substrate {name!r}; "
+                         f"pick from {available_substrates()}")
+    return _REGISTRY[cname](**kwargs)
+
+
+def make_substrate(name: str, *, processor: ProcessorConfig = PTREE,
+                   interpret: bool | None = None) -> Substrate:
+    """Instantiate a substrate, routing the shared runtime options to the
+    constructors that take them (the one place this mapping lives)."""
+    cname = canonical(name)
+    kwargs = {"pallas": {"interpret": interpret},
+              "vliw-sim": {"processor": processor}}.get(cname, {})
+    return get_substrate(cname, **kwargs)
+
+
+# --------------------------------------------------------------------------- #
+# implementations
+# --------------------------------------------------------------------------- #
+@register
+class NumpySubstrate(Substrate):
+    """Float64 alg.-1 oracle — the reference every other backend chases."""
+
+    name = "numpy"
+
+    def _build(self, prog, log_domain, batch_tile):
+        return None, {}
+
+    def execute(self, artifact, leaves):
+        return executors.eval_ops_numpy(artifact.prog, leaves,
+                                        log_domain=artifact.log_domain)
+
+
+@register
+class LeveledJaxSubstrate(Substrate):
+    """Group-decomposed jit'd JAX executor (production CPU/TPU path)."""
+
+    name = "leveled-jax"
+
+    def _build(self, prog, log_domain, batch_tile):
+        return executors.make_leveled_eval(prog, log_domain), {}
+
+    def execute(self, artifact, leaves):
+        return np.asarray(artifact.payload(leaves), np.float64)
+
+
+@register
+class PallasSubstrate(Substrate):
+    """Pallas TPU kernel with VMEM-resident value buffer."""
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None) -> None:
+        super().__init__()
+        self.interpret = interpret
+
+    def _build(self, prog, log_domain, batch_tile):
+        from ..kernels.spn_eval import build_eval
+        run = build_eval(prog, batch_tile=batch_tile, log_domain=log_domain,
+                         interpret=self.interpret)
+        return run, {}
+
+    def execute(self, artifact, leaves):
+        return np.asarray(artifact.payload(leaves, None), np.float64)
+
+    def pad_tile(self, batch_tile: int) -> int:
+        return batch_tile    # VMEM kernel wants whole 128-lane tiles
+
+
+@register
+class VliwSimSubstrate(Substrate):
+    """VLIW compile + vectorized fast-sim of the paper's processor.
+
+    The artifact payload is ``(vliw_program, dense_program, workspace)``:
+    the compiled instruction stream, its pre-decoded dense encoding and a
+    reusable value-buffer workspace. ``execute`` runs the vectorized
+    fast-sim; :meth:`execute_checked` runs the cycle-accurate checked
+    simulator on the same artifact — the conformance oracle fast-sim
+    results are asserted bit-identical against.
+    """
+
+    name = "vliw-sim"
+
+    def __init__(self, processor: ProcessorConfig = PTREE) -> None:
+        super().__init__()
+        self.processor = processor
+
+    def _build(self, prog, log_domain, batch_tile):
+        from ..core.compiler.pipeline import compile_program
+        vprog = compile_program(prog, self.processor)
+        dense = fastsim.decode(vprog, self.processor)
+        meta = {"cycles": vprog.num_cycles,
+                "ops_per_cycle": vprog.ops_per_cycle,
+                "n_useful_ops": vprog.n_useful_ops,
+                "processor": self.processor.name}
+        return (vprog, dense, {}), meta
+
+    def _finish(self, artifact, root_f32: np.ndarray) -> np.ndarray:
+        vals = root_f32.astype(np.float64)
+        if artifact.log_domain:
+            with np.errstate(divide="ignore"):
+                vals = np.log(vals)
+        return vals
+
+    def execute(self, artifact, leaves):
+        _, dense, workspace = artifact.payload
+        return self._finish(artifact, fastsim.run(dense, leaves, workspace))
+
+    def execute_checked(self, artifact, leaves):
+        """Cycle-accurate checked simulation (structural-rule oracle)."""
+        vprog, _, _ = artifact.payload
+        res = sim.simulate_leaves(vprog, np.asarray(leaves, np.float32),
+                                  self.processor)
+        return self._finish(artifact, res.root_values)

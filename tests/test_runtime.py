@@ -1,0 +1,250 @@
+"""Unified substrate runtime: program digests, the compiled-artifact
+cache (hit/miss/LRU/content-addressing), the dynamic micro-batcher,
+VLIW fast-sim conformance against the checked simulator, and the
+Server end-to-end path."""
+import numpy as np
+import pytest
+
+from repro.core import program
+from repro.core.learn import learn_spn, random_spn
+from repro.core.processor.config import PTREE
+from repro.data import spn_datasets
+from repro.queries import QueryEngine, random_mask, sample_ancestral_numpy
+from repro.runtime import (ArtifactCache, MicroBatcher, ParityError, Server,
+                           canonical, get_substrate, verify_parity)
+from repro.runtime.substrates import NumpySubstrate
+
+QUERIES = ("joint", "marginal", "mpe", "sample")
+SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim")
+
+
+@pytest.fixture(scope="module")
+def server(small_spn):
+    return Server(small_spn)
+
+
+def _evidence(num_vars, query, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, 2, (n, num_vars))
+    if query in ("marginal", "mpe"):
+        return random_mask(X, 0.4, seed=seed)
+    return X
+
+
+# ---------------------------------------------------------------------------
+# program digest
+# ---------------------------------------------------------------------------
+def test_digest_stable_across_relearn():
+    """Identical re-learned SPNs lower to content-equal programs."""
+    X = spn_datasets.load("nltcs", "train", 200)
+    d1 = program.lower(learn_spn(X, min_instances=80)).digest()
+    d2 = program.lower(learn_spn(X, min_instances=80)).digest()
+    assert d1 == d2
+
+
+def test_digest_distinguishes_programs(small_prog, nltcs_prog):
+    assert small_prog.digest() != nltcs_prog.digest()
+    # the max-product twin differs only in opcodes — still a new identity
+    assert program.to_max_product(small_prog).digest() != small_prog.digest()
+
+
+def test_digest_tracks_parameter_values(small_prog):
+    d0 = small_prog.digest()
+    orig = float(small_prog.param_values[0])
+    small_prog.param_values[0] = orig + 1.0
+    small_prog.invalidate_digest()
+    try:
+        assert small_prog.digest() != d0
+    finally:
+        small_prog.param_values[0] = orig
+        small_prog.invalidate_digest()
+    assert small_prog.digest() == d0
+
+
+# ---------------------------------------------------------------------------
+# artifact cache
+# ---------------------------------------------------------------------------
+def test_cache_hit_miss_counts(small_prog):
+    cache = ArtifactCache(capacity=8)
+    sub = get_substrate("numpy")
+    a1 = cache.get_or_compile(sub, small_prog, query="marginal")
+    a2 = cache.get_or_compile(sub, small_prog, query="marginal")
+    assert a1 is a2
+    assert cache.stats()["hits"] == 1 and cache.stats()["misses"] == 1
+    assert sub.compile_count == 1
+    cache.get_or_compile(sub, small_prog, query="mpe")   # distinct key
+    assert cache.stats()["misses"] == 2 and sub.compile_count == 2
+
+
+def test_cache_content_addressed(small_spn):
+    """Re-lowering the same SPN into a fresh object still hits."""
+    cache = ArtifactCache(capacity=8)
+    sub = get_substrate("numpy")
+    a1 = cache.get_or_compile(sub, program.lower(small_spn))
+    a2 = cache.get_or_compile(sub, program.lower(small_spn))
+    assert a1 is a2 and sub.compile_count == 1
+
+
+def test_cache_lru_eviction():
+    cache = ArtifactCache(capacity=2)
+    sub = get_substrate("numpy")
+    progs = [program.lower(random_spn(6, depth=2, num_sums=2,
+                                      repetitions=1, seed=s))
+             for s in range(3)]
+    for p in progs:
+        cache.get_or_compile(sub, p)
+    assert cache.stats()["evictions"] == 1 and len(cache) == 2
+    # progs[0] was evicted -> recompile; progs[2] is resident -> hit
+    cache.get_or_compile(sub, progs[2])
+    assert cache.stats()["hits"] == 1
+    cache.get_or_compile(sub, progs[0])
+    assert cache.stats()["misses"] == 4 and sub.compile_count == 4
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+def test_batcher_coalesces_heterogeneous_requests():
+    calls = []
+
+    def execute(leaves):
+        calls.append(leaves.shape)
+        return leaves.sum(axis=1)
+
+    b = MicroBatcher(execute, tile=128)
+    rng = np.random.default_rng(0)
+    reqs = [rng.random((n, 7)) for n in (1, 5, 130)]
+    pendings = [b.submit(r) for r in reqs]
+    out = [p.result() for p in pendings]          # first result() flushes
+    assert len(calls) == 1                        # one coalesced execution
+    assert calls[0] == (256, 7)                   # 136 rows padded to 2 tiles
+    for r, o in zip(reqs, out):
+        np.testing.assert_allclose(o, r.sum(axis=1))
+    assert b.stats == {"requests": 3, "rows": 136, "batches": 1,
+                       "padded_rows": 120}
+
+
+def test_batcher_auto_flush_at_max_rows():
+    calls = []
+    b = MicroBatcher(lambda lv: (calls.append(1), lv[:, 0])[1],
+                     tile=4, max_rows=8)
+    p = b.submit(np.ones((8, 3)))
+    assert p.ready() and calls == [1]             # capacity reached -> flush
+    b.flush()
+    assert calls == [1]                           # empty flush is a no-op
+
+
+# ---------------------------------------------------------------------------
+# VLIW fast-sim conformance (bit-identical to the checked simulator)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("query", QUERIES)
+def test_fastsim_bit_identical_small(small_spn, query):
+    srv = Server(small_spn, substrates=("vliw-sim",))
+    sub = srv.substrate("vliw-sim")
+    art = srv.artifact(query, "vliw-sim")
+    if query == "sample":
+        x = sample_ancestral_numpy(small_spn, 9, seed=3)
+    else:
+        x = _evidence(srv.prog.num_vars, query, n=9, seed=3)
+    leaves = art.prog.leaves_from_evidence(x)
+    fast = sub.execute(art, leaves)
+    checked = sub.execute_checked(art, leaves)
+    np.testing.assert_array_equal(fast, checked)
+
+
+@pytest.mark.parametrize("query", ["marginal", "mpe"])
+def test_fastsim_bit_identical_nltcs(nltcs_spn, query):
+    srv = Server(nltcs_spn, substrates=("vliw-sim",))
+    sub = srv.substrate("vliw-sim")
+    art = srv.artifact(query, "vliw-sim")
+    x = _evidence(srv.prog.num_vars, query, n=16, seed=7)
+    leaves = art.prog.leaves_from_evidence(x)
+    np.testing.assert_array_equal(sub.execute(art, leaves),
+                                  sub.execute_checked(art, leaves))
+
+
+# ---------------------------------------------------------------------------
+# server end-to-end
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("query", QUERIES)
+def test_server_cross_substrate_agreement(server, query):
+    if query == "sample":
+        x = sample_ancestral_numpy(server.spn, 6, seed=1)
+    else:
+        x = _evidence(server.prog.num_vars, query)
+    ref = server.query(x, query, "numpy")
+    assert np.isfinite(ref).all()
+    for name in SUBSTRATES[1:]:
+        np.testing.assert_allclose(server.query(x, query, name), ref,
+                                   atol=1e-4, err_msg=name)
+
+
+def test_server_second_invocation_is_cache_hit(small_spn):
+    """Acceptance: no recompilation for any (SPN, query, substrate) triple."""
+    srv = Server(small_spn)
+    x = np.abs(_evidence(srv.prog.num_vars, "marginal"))  # joint-valid too
+
+    def hit_all():
+        for query in QUERIES:
+            for name in SUBSTRATES:
+                srv.query(x, query, name)
+
+    hit_all()
+    compiles = dict(srv.stats()["compiles"])
+    misses = srv.cache.stats()["misses"]
+    hit_all()
+    assert srv.stats()["compiles"] == compiles
+    assert srv.cache.stats()["misses"] == misses
+    # one artifact per semiring: joint/marginal/sample share sum-product
+    assert all(c == 2 for c in compiles.values())
+    assert srv.cache.stats()["hits"] >= len(QUERIES) * len(SUBSTRATES)
+
+
+def test_server_joint_rejects_partial_evidence(server):
+    with pytest.raises(ValueError):
+        server.query(np.full((1, server.prog.num_vars), -1), "joint")
+
+
+def test_server_substrate_aliases(server):
+    x = _evidence(server.prog.num_vars, "joint")
+    np.testing.assert_array_equal(server.query(x, "joint", "leveled"),
+                                  server.query(x, "joint", "leveled-jax"))
+    assert canonical("kernel") == "pallas" and canonical("sim") == "vliw-sim"
+
+
+def test_verify_parity_passes_and_detects(server):
+    x = _evidence(server.prog.num_vars, "marginal")
+    devs = verify_parity(server, x, query="marginal")
+    assert devs["vliw-sim/checked"] == 0.0
+    assert max(devs.values()) < 1e-4
+
+    class Broken(NumpySubstrate):
+        name = "leveled-jax"   # masquerade as a real backend
+
+        def execute(self, artifact, leaves):
+            return super().execute(artifact, leaves) + 0.5
+
+    srv = Server(server.spn)
+    srv.substrates["leveled-jax"] = Broken()
+    with pytest.raises(ParityError):
+        verify_parity(srv, x, query="marginal",
+                      substrates=("numpy", "leveled-jax"))
+
+
+def test_verify_parity_without_numpy_substrate(small_spn):
+    """The oracle is built on demand when the server doesn't host one."""
+    srv = Server(small_spn, substrates=("leveled-jax",))
+    x = _evidence(srv.prog.num_vars, "marginal")
+    devs = verify_parity(srv, x, query="marginal")
+    assert 0.0 < devs["leveled-jax"] < 1e-4   # f32 vs f64: small, not fake
+
+
+def test_engine_backend_dispatch_is_cached(small_spn):
+    eng = QueryEngine(small_spn)
+    x = _evidence(eng.num_vars, "marginal")
+    eng.marginal(x, "sim")
+    eng.marginal(x, "sim")
+    eng.mpe(x, "sim")
+    assert eng.substrate("sim").compile_count == 2   # marginal + mpe once
+    # vliw_program() routes through the same artifact cache
+    assert eng.vliw_program(eng.prog) is eng.artifact("joint", "sim").payload[0]
