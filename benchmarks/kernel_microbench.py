@@ -34,18 +34,21 @@ def run(verbose: bool = True, dataset: str = "nltcs", batch: int = 256):
     us_scan = timeit(lambda: jax.block_until_ready(
         executors.eval_scan(prog, leaves, None, True)), n_iter=5)
 
-    pad_ops = pp.n_ops_pad - prog.n_ops
+    pad_ops = pp.n_pad_nodes
     vmem_kib = pp.num_slots * 128 * 4 / 1024
     stats = {
-        "ops": prog.n_ops, "levels": prog.num_levels,
-        "pad_overhead": pad_ops / prog.n_ops,
+        "ops": prog.n_ops, "levels": pp.num_levels,
+        "segments": pp.num_segments,
+        "fused_nodes": pp.n_nodes,
+        "pad_overhead": pad_ops / pp.n_nodes,
         "vmem_kib_per_tile": vmem_kib,
-        "instr_bytes": pp.n_ops_pad * 12,
+        "instr_bytes": len(pp.gather) * 4,
         "us_kernel": us_kernel, "us_leveled": us_leveled, "us_scan": us_scan,
     }
     if verbose:
-        print(f"kernel_microbench[{dataset}] ops={prog.n_ops} "
-              f"levels={prog.num_levels} pad={pad_ops/prog.n_ops:.1%} "
+        print(f"kernel_microbench[{dataset}] ops={prog.n_ops} -> "
+              f"{pp.n_nodes} fused nodes, {pp.num_segments} segments / "
+              f"{pp.num_levels} levels, pad={pad_ops/pp.n_nodes:.1%} "
               f"VMEM/tile={vmem_kib:.0f}KiB")
         print(f"  pallas(interp) {us_kernel:9.1f} us | leveled "
               f"{us_leveled:9.1f} us | scan {us_scan:9.1f} us  (batch {batch})")

@@ -5,15 +5,23 @@ SPN and records per-substrate evals/s, plus the vectorized fast-sim vs
 cycle-accurate checked-sim comparison (bit-identity asserted, speedup
 measured). Results are printed as CSV rows and persisted to
 ``BENCH_serve.json`` so the throughput trajectory accumulates across
-commits (the CI bench-smoke step runs this on the smallest dataset).
+commits. The record also carries the Pallas kernel mode (``interpret``
+vs compiled) and the segment-scheduler descriptor stats, so numbers are
+never compared across incommensurable configurations.
+
+``--compare BASELINE.json`` turns the run into a **regression gate**: it
+exits non-zero when any substrate's throughput regressed by more than
+25% against the baseline record (the CI bench-smoke step runs this
+against the committed ``BENCH_serve.json`` before overwriting it).
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--dataset nltcs]
-        [--batch 256] [--out BENCH_serve.json]
+        [--batch 256] [--out BENCH_serve.json] [--compare BENCH_serve.json]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import numpy as np
@@ -22,23 +30,111 @@ from repro.core.processor import fastsim, sim
 from repro.queries import random_mask
 from repro.runtime import DEFAULT_SUBSTRATES, Server, verify_parity
 
-from .common import bench_spn, csv_row, timeit
+from .common import bench_spn, csv_row
+
+#: per-substrate throughput regression tolerance for ``--compare``
+REGRESSION_TOLERANCE = 0.25
+#: numpy-canary bound: beyond this machine-speed scale the gate fails
+#: outright instead of normalizing (see :func:`compare_records`)
+MACHINE_SCALE_BOUND = 3.0
+
+
+def _best_round_us(fn, rounds: int = 4, n_iter: int = 5,
+                   warmup: int = 2) -> float:
+    """Best per-round median wall-time in microseconds.
+
+    Shared-machine CPU throttling comes in multi-second phases that can
+    slow *everything* 2-3x; a single median-of-N taken inside one phase
+    is meaningless. Timing several short rounds spread over the run and
+    keeping the best round's median measures the code, not the phase.
+    Callers interleave the benchmarked configurations across rounds so
+    every configuration gets a shot at the fast phases.
+    """
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(rounds):
+        times = []
+        for _ in range(n_iter):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        best = min(best, times[len(times) // 2])
+    return best * 1e6
 
 
 def _median_ms(fn, n_iter: int, warmup: int = 2) -> float:
-    for _ in range(warmup):
-        fn()
-    times = []
-    for _ in range(n_iter):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e3
+    return _best_round_us(fn, rounds=3, n_iter=n_iter, warmup=warmup) / 1e3
+
+
+def compare_records(new: dict, baseline: dict,
+                    tolerance: float = REGRESSION_TOLERANCE) -> list[str]:
+    """Per-substrate throughput regressions of ``new`` vs ``baseline``.
+
+    Returns human-readable failure lines (empty = gate passes). Only
+    substrates present in both records are compared, and only when the
+    workloads match (dataset/batch/query; the Pallas substrate is
+    additionally skipped when the two records ran different kernel
+    modes — interpreter vs compiled numbers are incommensurable).
+
+    Comparisons are **machine-speed normalized**: the numpy oracle is
+    byte-identical reference code in every run, so the ratio of the two
+    records' numpy times measures the machines (or the CI runner's
+    noisy-neighbor phase), not the code; each substrate's time is scaled
+    by it before applying the tolerance. Absolute cross-machine
+    wall-clock comparisons would fail every PR run on a runner merely
+    slower than the box that recorded the baseline.
+    """
+    failures: list[str] = []
+    for key in ("dataset", "batch", "query"):
+        if baseline.get(key) != new.get(key):
+            return [f"baseline is a different workload "
+                    f"({key}: {baseline.get(key)!r} vs {new.get(key)!r})"]
+    subs_new = new.get("substrates", {})
+    subs_old = baseline.get("substrates", {})
+    scale = 1.0
+    if "numpy" in subs_new and "numpy" in subs_old:
+        scale = subs_new["numpy"]["us_per_batch"] / \
+            subs_old["numpy"]["us_per_batch"]
+    if scale > MACHINE_SCALE_BOUND:
+        # the canary must stay roughly canary-shaped: a huge numpy
+        # slowdown is either a regression in code shared by every
+        # substrate's request path (which normalization would absorb)
+        # or a machine unsuitable for benchmarking — fail either way
+        failures.append(
+            f"numpy oracle itself slowed {scale:.1f}x vs baseline "
+            f"(> {MACHINE_SCALE_BOUND:.0f}x bound): shared-path "
+            f"regression or unsuitable benchmark machine")
+    for name, old in subs_old.items():
+        cur = subs_new.get(name)
+        if cur is None or name == "numpy":   # numpy IS the speed canary
+            continue
+        if (name == "pallas"
+                and baseline.get("pallas_interpret") is not None
+                and baseline.get("pallas_interpret")
+                != new.get("pallas_interpret")):
+            continue
+        slowdown = cur["us_per_batch"] / (old["us_per_batch"] * scale) - 1.0
+        if slowdown > tolerance:
+            failures.append(
+                f"{name}: {cur['us_per_batch']:.0f} us/batch vs baseline "
+                f"{old['us_per_batch']:.0f} x{scale:.2f} machine-speed "
+                f"scale (+{slowdown:.0%} > {tolerance:.0%} tolerance)")
+    return failures
 
 
 def main(dataset: str = "nltcs", batch: int = 256,
-         out_path: str = "BENCH_serve.json") -> list[str]:
+         out_path: str = "BENCH_serve.json",
+         compare_path: str | None = None) -> list[str]:
+    baseline = None
+    if compare_path:
+        try:
+            with open(compare_path) as f:
+                baseline = json.load(f)
+        except FileNotFoundError:
+            print(f"  (no baseline at {compare_path}; gate skipped)")
+
     spn, prog = bench_spn(dataset)
     server = Server(spn)
     Xq = random_mask(
@@ -48,8 +144,27 @@ def main(dataset: str = "nltcs", batch: int = 256,
                     "n_ops": prog.n_ops, "substrates": {}}
     rows: list[str] = []
 
+    # round-robin over substrates so CPU-throttle phases hit all of them
+    # equally; per substrate keep the best round's median. Rounds are
+    # spread over a few seconds of wall time because throttle phases on
+    # shared machines last whole seconds — back-to-back rounds would all
+    # land in one phase and defeat the best-of aggregation.
+    best: dict[str, float] = {n: float("inf") for n in DEFAULT_SUBSTRATES}
+    for name in DEFAULT_SUBSTRATES:            # warmup / compile
+        server.query(Xq, "marginal", name)
+    for r in range(6):
+        if r:
+            time.sleep(0.4)
+        for name in DEFAULT_SUBSTRATES:
+            # one unmeasured call re-warms caches after the round-robin
+            # switch, matching the back-to-back conditions the historical
+            # baselines were recorded under
+            us = _best_round_us(
+                lambda n=name: server.query(Xq, "marginal", n),
+                rounds=1, n_iter=5, warmup=1)
+            best[name] = min(best[name], us)
     for name in DEFAULT_SUBSTRATES:
-        us = timeit(lambda n=name: server.query(Xq, "marginal", n), n_iter=9)
+        us = best[name]
         evals_s = batch / (us / 1e6)
         record["substrates"][name] = {"us_per_batch": us,
                                       "evals_per_s": evals_s}
@@ -59,6 +174,10 @@ def main(dataset: str = "nltcs", batch: int = 256,
 
     devs = verify_parity(server, Xq[:32], query="marginal")
     record["parity_max_abs_dev"] = max(devs.values())
+    record["pallas_interpret"] = \
+        server.artifact("marginal", "pallas").meta["interpret"]
+    record["segments"] = \
+        server.artifact("marginal", "leveled-jax").meta["segments"]
 
     # fast-sim vs checked-sim: same artifact, same leaves, bit-identical
     art = server.artifact("marginal", "vliw-sim")
@@ -84,6 +203,16 @@ def main(dataset: str = "nltcs", batch: int = 256,
     with open(out_path, "w") as f:
         json.dump(record, f, indent=2)
     print(f"  wrote {out_path}")
+
+    if baseline is not None:
+        failures = compare_records(record, baseline)
+        if failures:
+            print(f"  REGRESSION GATE FAILED vs {compare_path}:")
+            for line in failures:
+                print(f"    {line}")
+            sys.exit(2)
+        print(f"  regression gate vs {compare_path}: ok "
+              f"(tolerance {REGRESSION_TOLERANCE:.0%})")
     return rows
 
 
@@ -92,5 +221,8 @@ if __name__ == "__main__":
     ap.add_argument("--dataset", default="nltcs")
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="baseline BENCH_serve.json; exit non-zero on >25%% "
+                         "per-substrate throughput regression")
     args = ap.parse_args()
-    main(args.dataset, args.batch, args.out)
+    main(args.dataset, args.batch, args.out, args.compare)

@@ -29,6 +29,7 @@ import numpy as np
 
 from ..processor.config import ProcessorConfig
 from ..program import OP_MAX, OP_PROD, OP_SUM, TensorProgram
+from ..segments import fusion_info
 from . import isa, regalloc, treepack
 
 _NOWHERE, _MEM, _REG, _PENDING = 0, 1, 2, 3
@@ -65,6 +66,18 @@ class _Scheduler:
                 if s >= m:
                     self.height[s - m] = max(self.height[s - m],
                                              self.height[j] + 1)
+        # segment scheduler's fusion chains: op -> same-opcode single
+        # consumer (-1 where the chain stops). Bundle growth climbs these
+        # chains directly, so a whole k-ary reduction issues as one
+        # homogeneous tree bundle instead of being rediscovered op by op.
+        self.fuse_parent = fusion_info(prog).parent
+        # issue priority: height first (critical path), then the smaller
+        # operand slot — ops of one segment share broadcast-friendly
+        # operands (e.g. every weight-prod of one indicator leaf), so
+        # clustering them in the scan coalesces crossbar reads of the
+        # shared slot into a single bank address
+        self.prio = [(-int(self.height[i]), int(min(self.b[i], self.c[i])))
+                     for i in range(n)]
 
         # leaf layout ------------------------------------------------------
         (self.leaf_bank, self.leaf_row, self.n_in_rows,
@@ -92,6 +105,7 @@ class _Scheduler:
         self.row_slots: dict[int, list[int]] = defaultdict(list)
         self.free_load_rows = list(range(load_region - 1, -1, -1))
         self.row_last_use: dict[int, int] = {}
+        self.row_loaded_at: dict[int, int] = {}
 
         # data-memory rows ---------------------------------------------------
         self.mem_row_slots: dict[int, list[int]] = defaultdict(list)
@@ -194,6 +208,12 @@ class _Scheduler:
         for r, mrow in self.loaded_row_of.items():
             if self.pending_rows[r]:
                 continue
+            # a row loaded this or last cycle hasn't had a chance to feed
+            # an issue yet — evicting it now is how two loads staging the
+            # operands of ONE op thrash each other forever on machines
+            # with a tiny load region
+            if self.row_loaded_at.get(r, -(1 << 30)) >= self.t - 1:
+                continue
             key = (self.row_live[r], self.row_last_use.get(r, -1))
             if best_key is None or key < best_key:
                 best, best_key = r, key
@@ -222,6 +242,7 @@ class _Scheduler:
                 return None
         self.loaded_row_of[rrow] = mrow
         self.resident_mem_rows.add(mrow)
+        self.row_loaded_at[rrow] = self.t
         self.write_res[self.t + 1].add(_ALL_BANKS)
         live = 0
         for s in self.mem_row_slots[mrow]:
@@ -276,6 +297,18 @@ class _Scheduler:
         def incl(j: int) -> bool:
             return not self.issued[j]
 
+        # segment-aware growth: climb the fusion chain first and try to
+        # issue the whole homogeneous reduction (up to the chain's highest
+        # un-issued ancestor) as one bundle — the paper's "one operation
+        # per PE group per step". Falls back to growing from ``op`` when
+        # the fused subtree exceeds the depth budget or operands of the
+        # wider tree aren't readable yet.
+        start = op
+        while True:
+            p = int(self.fuse_parent[start])
+            if p < 0 or self.issued[p]:
+                break
+            start = p
         grown = treepack.grow(op, maxd, b=self.b, c=self.c, m=m,
                               readable=self.readable, includable=incl)
         if grown is None:
@@ -289,6 +322,13 @@ class _Scheduler:
         # smaller bundle instead of deferring the op entirely
         history = [grown]
         cur = op
+        if start != op:
+            whole = treepack.grow(start, maxd, b=self.b, c=self.c, m=m,
+                                  readable=self.readable, includable=incl)
+            if whole is not None and (treepack.count_ops(whole[0])
+                                      > treepack.count_ops(grown[0])):
+                history.append(whole)
+                cur = start
         improved = True
         while improved and history[-1][1] < maxd:
             improved = False
@@ -531,7 +571,7 @@ class _Scheduler:
                         if self.state[s] == _MEM and self.refcnt[s] > 0:
                             self.want(s, int(self.height[i]))
                     continue
-                self.active[i] = negh
+                self.active[i] = self.prio[i]
 
             tree_instrs: list[isa.TreeInstr | None] = [None] * cfg.num_trees
             reads_cycle: dict[int, int] = {}

@@ -15,6 +15,7 @@ from collections import defaultdict
 
 import numpy as np
 
+from .. import segments
 from ..program import TensorProgram
 from ..processor.config import ProcessorConfig
 
@@ -24,6 +25,14 @@ def layout_leaves(prog: TensorProgram, cfg: ProcessorConfig):
 
     ``images`` is the (n_rows, banks) float32 constant image of the input
     region of data memory: parameter values baked in, indicator cells 0.
+
+    Conflict edges come from two sources: the classic pairwise rule (two
+    operands of one binary op are read in the same cycle) and the
+    segment scheduler's fused n-ary nodes — all leaf operands of a fused
+    reduction that fits one PE tree issue as ONE bundle, so they form a
+    read *clique* (≤1 address per bank per cycle). Without the clique the
+    scheduler's whole-segment bundles would immediately trip crossbar
+    conflicts and fall back to fragmented issue.
     """
     m = prog.m
     conflicts: dict[int, set[int]] = defaultdict(set)
@@ -32,6 +41,14 @@ def layout_leaves(prog: TensorProgram, cfg: ProcessorConfig):
         if b < m and c < m and b != c:
             conflicts[b].add(c)
             conflicts[c].add(b)
+    info = segments.fusion_info(prog)
+    for leaves in info.leaves.values():
+        group = sorted({s for s in leaves if s < m})
+        if len(group) <= cfg.leaf_ports_per_tree:   # one-bundle candidates
+            for a in group:
+                for b2 in group:
+                    if a != b2:
+                        conflicts[a].add(b2)
 
     order = sorted(range(m), key=lambda s: -len(conflicts.get(s, ())))
     bank_of = np.full(m, -1, np.int32)

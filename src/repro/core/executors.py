@@ -6,10 +6,14 @@ Three execution strategies, mirroring the paper:
 - :func:`eval_scan`      — alg. 2 "for loop over a vector" via ``lax.scan``
   (faithful to the sequential formulation; slow, used for validation),
 - :func:`eval_leveled`   — the *group decomposition* execution (paper
-  fig. 2a adapted to TPU): one vectorized gather→op→scatter pass per level,
-  batch dimension on vector lanes. This is the production JAX path; the
-  Pallas kernel in :mod:`repro.kernels.spn_eval` implements the same
-  schedule with an explicitly VMEM-resident value buffer.
+  fig. 2a adapted to TPU), scheduled by the **segment scheduler**
+  (:mod:`repro.core.segments`): per level, one gather and one
+  unpredicated halving reduction per opcode-homogeneous n-ary segment —
+  no per-element opcode ``where``-selects, k-ary reductions fused into
+  single segments. Bit-identical (at f32) to the binary leveled pass it
+  replaces. This is the production JAX path; the Pallas kernel in
+  :mod:`repro.kernels.spn_eval` implements the same schedule with an
+  explicitly VMEM-resident value buffer.
 
 All executors support linear and log domain ((+,×) → (logaddexp,+)) and
 all three opcodes — SUM, PROD and MAX (the tropical semiring used by
@@ -24,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import segments
 from .program import OP_MAX, OP_PROD, TensorProgram
 
 
@@ -104,22 +109,57 @@ def eval_scan(prog: TensorProgram, leaf_ind: jnp.ndarray,
 # --------------------------------------------------------------------------- #
 # leveled (group-decomposed) execution — the production JAX path
 # --------------------------------------------------------------------------- #
+def segment_reduce(vals: jnp.ndarray, op: int, log_domain: bool,
+                   n_nodes: int) -> jnp.ndarray:
+    """Halving reduction of one homogeneous segment.
+
+    ``vals``: (arity * n_nodes, batch) operand rows, position-major in
+    bit-reversed order (:mod:`repro.core.segments` layout), so every
+    halving step is a contiguous split executed as ONE unpredicated
+    vector ufunc — the vectorized analogue of the paper's PE trees
+    running a single operation per step. The pairing rule itself lives
+    in :func:`repro.core.segments.halving_reduce`, shared with the
+    numpy reference and the Pallas kernel.
+    """
+    return segments.halving_reduce(
+        vals, segments.combine_fn(op, log_domain, jnp), n_nodes)
+
+
+def _segmented_impl(seg: segments.SegmentedProgram, full_T: jnp.ndarray,
+                    log_domain: bool) -> jnp.ndarray:
+    """Segment-scheduled leveled pass. ``full_T``: (m, batch) leaf rows."""
+    batch = full_T.shape[1]
+    pad_rows = jnp.asarray(seg.init_rows(log_domain)[seg.m:], full_T.dtype)
+    A = jnp.zeros((seg.num_slots, batch), full_T.dtype)
+    A = jax.lax.dynamic_update_slice(A, full_T, (0, 0))
+    A = jax.lax.dynamic_update_slice(
+        A, jnp.broadcast_to(pad_rows[:, None],
+                            (seg.node_base - seg.m, batch)), (seg.m, 0))
+    for level in range(seg.num_levels):
+        s0, s1 = int(seg.level_offsets[level]), int(seg.level_offsets[level + 1])
+        lo, _ = seg.level_out_range(level)
+        outs = []
+        for s in range(s0, s1):
+            g0 = int(seg.seg_off[s])
+            ns = int(seg.seg_nodes[s])
+            g1 = g0 + int(seg.seg_arity[s]) * ns
+            vals = jnp.take(A, jnp.asarray(seg.gather[g0:g1]), axis=0)
+            outs.append(segment_reduce(vals, int(seg.seg_op[s]),
+                                       log_domain, ns))
+        block = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+        A = jax.lax.dynamic_update_slice(A, block, (lo, 0))
+    return A[seg.root_slot]
+
+
 def _leveled_impl(prog: TensorProgram, full_T: jnp.ndarray,
                   log_domain: bool) -> jnp.ndarray:
-    """Core leveled pass. ``full_T``: (m, batch) value-buffer prefix."""
-    batch = full_T.shape[1]
-    A = jnp.zeros((prog.num_slots, batch), full_T.dtype)
-    A = jax.lax.dynamic_update_slice(A, full_T, (0, 0))
-    for lo, hi in zip(prog.level_offsets[:-1], prog.level_offsets[1:]):
-        lo, hi = int(lo), int(hi)
-        bi = jnp.asarray(prog.b[lo:hi])
-        ci = jnp.asarray(prog.c[lo:hi])
-        op = jnp.asarray(prog.opcode[lo:hi])[:, None]
-        vb = jnp.take(A, bi, axis=0)
-        vc = jnp.take(A, ci, axis=0)
-        new = _combine(op, vb, vc, log_domain)
-        A = jax.lax.dynamic_update_slice(A, new, (prog.m + lo, 0))
-    return A[prog.root_slot]
+    """Core leveled pass over the program's segment schedule.
+
+    Kept as the single entry point every leveled consumer (likelihood,
+    learning, MPE grad-decode) routes through; the schedule itself is
+    the cached :func:`repro.core.segments.segment_program`.
+    """
+    return _segmented_impl(segments.segment_program(prog), full_T, log_domain)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))

@@ -1,0 +1,493 @@
+"""Segment scheduler: opcode-homogeneous, tile-aligned level segments
+with fused n-ary reductions (the REASON / custom-processor schedule).
+
+The binary :class:`~repro.core.program.TensorProgram` interleaves
+sum/prod/max rows inside every level, so every vectorized executor used
+to resolve the opcode *per element* with ``where``-select chains — each
+level paid for all three semiring ops plus two selects. The paper's
+datapath does the opposite: each step executes ONE homogeneous operation
+across a PE group. This module rewrites the program into that form:
+
+1. **N-ary fusion** — the balanced binary reduction trees that
+   :func:`repro.core.program.lower` emits for k-ary sum/product/max
+   nodes are detected (same opcode, every interior value consumed
+   exactly once, shape-verified against :func:`balanced_reduce`'s
+   pairing) and collapsed into single *fused nodes* of arity k: one
+   ``SUM_N``/``PROD_N``/``MAX_N`` segmented reduction instead of k-1
+   predicated binary ops.
+2. **Opcode-homogeneous segments** — fused nodes are levelized over the
+   fused dependence graph and, within a level, grouped into contiguous
+   *segments* of equal opcode and equal padded arity, described by a
+   ``(seg_off, arity, op)`` descriptor table. An executor runs one
+   unpredicated vector ufunc per halving step per segment — no masks,
+   no ``where``.
+3. **Tile alignment** — every level's output block starts 8-aligned and
+   is padded to a multiple of 8 slots with neutral dummy nodes, so the
+   Pallas kernel can consume the representation directly (f32 sublane
+   tile = 8) and slot ranges stay friendly for every vector ISA.
+
+Bit-exactness invariant
+-----------------------
+The fused execution is **bit-identical** to the binary program (hence to
+the numpy oracle, at matching precision). Two facts make this work:
+
+- a balanced bottom-up pairwise reduction over ``k`` operands equals the
+  same reduction over the operands padded to ``2^d`` with the op's
+  neutral element (``x op neutral == x`` exactly in IEEE arithmetic, and
+  the trailing neutrals reproduce the "odd leftover carried" behaviour
+  of :func:`~repro.core.program.lower`'s ``balanced_reduce``);
+- laying the ``2^d`` operands out in **bit-reversed position order**
+  (position-major, nodes minor) turns every halving step into a
+  contiguous split — ``op(G[:h], G[h:])`` — pairing exactly the adjacent
+  operands the binary tree paired, with no strided access and no gather
+  beyond the initial one.
+
+Groups whose tree shape does not match ``balanced_reduce`` (hand-built
+programs, exotic rewrites) are conservatively split back into arity-2
+fused nodes, which are trivially exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .program import OP_MAX, OP_PROD, OP_SUM, TensorProgram
+
+SUBLANE = 8        # f32 sublane tile: level offsets/widths are 8-aligned
+
+#: display names of the fused n-ary opcodes (same numeric codes as the
+#: binary ops — arity lives in the segment descriptor, not the opcode)
+NARY_NAMES = {OP_SUM: "SUM_N", OP_PROD: "PROD_N", OP_MAX: "MAX_N"}
+
+
+def _round_up(x: int, k: int) -> int:
+    return (x + k - 1) // k * k
+
+
+def _bitrev(d: int) -> np.ndarray:
+    """Bit-reversal permutation of ``[0, 2**d)``."""
+    r = np.arange(1 << d)
+    out = np.zeros_like(r)
+    for i in range(d):
+        out = (out << 1) | ((r >> i) & 1)
+    return out
+
+
+def neutral_values(log_domain: bool) -> np.ndarray:
+    """(3,) neutral element per opcode (index = OP_*), float64.
+
+    ``x op neutral == x`` bit-exactly: 0/-inf for SUM (linear/log),
+    1/0 for PROD, -inf for MAX in both domains (log is monotone).
+    """
+    out = np.empty(3, np.float64)
+    out[OP_SUM] = -np.inf if log_domain else 0.0
+    out[OP_PROD] = 0.0 if log_domain else 1.0
+    out[OP_MAX] = -np.inf
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# fusion-group detection
+# --------------------------------------------------------------------------- #
+def _balanced_shape(k: int):
+    """Pairing tree ``balanced_reduce`` builds over ``k`` leaf tokens."""
+    items: list = list(range(k))
+    while len(items) > 1:
+        nxt = [(items[i], items[i + 1]) for i in range(0, len(items) - 1, 2)]
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    return items[0]
+
+
+@dataclasses.dataclass
+class FusionInfo:
+    """Per-op fusion structure of a binary program.
+
+    ``root_of[i]`` is the *balanced-decomposed* fused-node root of op
+    ``i`` — the unit the segment scheduler executes as one n-ary
+    reduction. ``leaves[r]`` lists fused node ``r``'s operand slots in
+    the binary tree's left-to-right order (original slot numbering; a
+    slot ``>= m`` names another fused node by its root op).
+
+    ``parent[i]`` is the *raw* same-opcode single-consumer chain (-1
+    where it stops) — a superset of the balanced decomposition, used by
+    the VLIW compiler, whose tree bundles don't need balanced shapes.
+    """
+    root_of: np.ndarray
+    parent: np.ndarray
+    leaves: dict[int, list[int]]
+
+    def group_arity(self, r: int) -> int:
+        return len(self.leaves[r])
+
+
+def fusion_info(prog: TensorProgram) -> FusionInfo:
+    """Detect maximal fusable reduction trees of ``prog``.
+
+    An op joins its consumer's chain when they share an opcode and the
+    op's value is consumed exactly once (interior values of a reduction
+    tree never escape). Each maximal chain tree is then *decomposed into
+    maximal balanced subtrees* — only subtrees whose pairing matches
+    :func:`_balanced_shape` (the shape ``lower()``'s ``balanced_reduce``
+    emits) become n-ary fused nodes, so halving execution is
+    bit-identical to the binary program; the glue ops above them (e.g.
+    where a sum-of-sums chain merged two original SPN nodes) become
+    small fused nodes over the sub-results.
+    """
+    # memoized on the program instance (not a module-level cache) so the
+    # analysis dies with its program — a long-lived server churning many
+    # SPNs must not pin every one it ever saw
+    cached = getattr(prog, "_fusion_info", None)
+    if cached is not None:
+        return cached
+    m, n = prog.m, prog.n_ops
+    b, c, opcode = prog.b, prog.c, prog.opcode
+    refcnt = np.zeros(m + n, np.int64)
+    consumer = np.full(m + n, -1, np.int64)
+    for i in range(n):
+        for s in (int(b[i]), int(c[i])):
+            refcnt[s] += 1
+            consumer[s] = i
+    refcnt[prog.root_slot] += 1   # the epilogue read pins the root op
+
+    parent = np.full(n, -1, np.int64)
+    chain_root = np.arange(n, dtype=np.int64)
+    # ops are level-sorted, so a consumer always has a larger index:
+    # scanning downward sees the parent's root before the child's
+    for i in range(n - 1, -1, -1):
+        if refcnt[m + i] == 1 and consumer[m + i] >= 0:
+            p = int(consumer[m + i])
+            if opcode[p] == opcode[i]:
+                parent[i] = p
+                chain_root[i] = chain_root[p]
+
+    members: dict[int, list[int]] = {}
+    for i in range(n):
+        members.setdefault(int(chain_root[i]), []).append(i)
+
+    root_of = np.arange(n, dtype=np.int64)
+    leaves: dict[int, list[int]] = {}
+    for r, mem in members.items():
+        memset = set(mem)
+
+        def in_order(op: int, lv: list[int], interior: list[int]):
+            kids = []
+            interior.append(op)
+            for s in (int(b[op]), int(c[op])):
+                if s >= m and (s - m) in memset:
+                    kids.append(in_order(s - m, lv, interior))
+                else:
+                    kids.append(len(lv))
+                    lv.append(int(s))
+            return (kids[0], kids[1])
+
+        def build(op: int) -> None:
+            lv: list[int] = []
+            interior: list[int] = []
+            tree = in_order(op, lv, interior)
+            if tree == _balanced_shape(len(lv)):
+                leaves[op] = lv
+                for j in interior:
+                    root_of[j] = op
+                return
+            # unbalanced at this root: split into the two child subtrees
+            kids = []
+            for s in (int(b[op]), int(c[op])):
+                if s >= m and (s - m) in memset:
+                    build(s - m)
+                    kids.append(int(s))   # refer to the sub-node's output
+                else:
+                    kids.append(int(s))
+            leaves[op] = kids
+            root_of[op] = op
+
+        build(r)
+    info = FusionInfo(root_of=root_of, parent=parent, leaves=leaves)
+    prog._fusion_info = info
+    return info
+
+
+# --------------------------------------------------------------------------- #
+# the segmented program
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(eq=False)   # identity hash: static jit arg
+class SegmentedProgram:
+    """Opcode-homogeneous, tile-aligned segment schedule of a program.
+
+    Slot layout (all executors share it):
+
+    - ``[0, m)``              : leaf slots (indicators + parameters),
+    - ``[m, m+3)``            : neutral pad slots, index = opcode,
+    - ``[m+3, node_base)``    : dead alignment slots,
+    - ``[node_base, num_slots)``: fused-node outputs, level-contiguous;
+      each level's block starts 8-aligned and spans a multiple of 8
+      slots (trailing slots produced by neutral dummy nodes).
+
+    Segments are contiguous runs of nodes with one ``(op, arity)``; the
+    descriptor table is the ``(seg_off, seg_arity, seg_op)`` columns plus
+    the derived output offsets. The gather stream holds each segment's
+    operand slots position-major in bit-reversed order (see module doc),
+    padded to the segment arity with the op's neutral pad slot.
+    """
+    base: TensorProgram
+    m: int                       # leaf slots (== base.m)
+    node_base: int               # 8-aligned first fused-node output slot
+    num_slots: int               # 8-aligned total
+    gather: np.ndarray           # (G,) int32 operand slot stream
+    seg_off: np.ndarray          # (S,) int32 gather offset per segment
+    seg_op: np.ndarray           # (S,) uint8 opcode per segment
+    seg_arity: np.ndarray        # (S,) int32 padded (power-of-two) arity
+    seg_nodes: np.ndarray        # (S,) int32 node count (incl. dummies)
+    seg_out: np.ndarray          # (S,) int32 output slot of node 0
+    level_offsets: np.ndarray    # (L+1,) int32 segment ranges per level
+    root_slot: int
+    n_nodes: int                 # real fused nodes (excluding dummies)
+    n_pad_nodes: int             # alignment dummy nodes
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.seg_op)
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.level_offsets) - 1
+
+    @property
+    def pad_slots(self) -> np.ndarray:
+        """(3,) neutral pad slot per opcode (index = OP_*)."""
+        return np.arange(self.m, self.m + 3, dtype=np.int32)
+
+    def level_out_range(self, level: int) -> tuple[int, int]:
+        """Output slot range ``[lo, hi)`` of a level (both 8-aligned)."""
+        s0, s1 = int(self.level_offsets[level]), int(self.level_offsets[level + 1])
+        lo = int(self.seg_out[s0])
+        hi = int(self.seg_out[s1 - 1] + self.seg_nodes[s1 - 1])
+        return lo, hi
+
+    def init_rows(self, log_domain: bool) -> np.ndarray:
+        """(node_base,) float64 initial values of the non-node slot rows:
+        zeros for leaves (overwritten per request) and alignment slots,
+        the domain's neutral elements in the three pad rows."""
+        rows = np.zeros(self.node_base, np.float64)
+        rows[self.m: self.m + 3] = neutral_values(log_domain)
+        return rows
+
+    def stats(self) -> dict:
+        """Descriptor-level stats (recorded in artifact/bench metadata)."""
+        return {
+            "levels": self.num_levels,
+            "segments": self.num_segments,
+            "n_nodes": self.n_nodes,
+            "pad_nodes": self.n_pad_nodes,
+            "max_arity": int(self.seg_arity.max()),
+            "binary_levels": self.base.num_levels,
+            "binary_ops": self.base.n_ops,
+        }
+
+
+def segment_program(prog: TensorProgram) -> SegmentedProgram:
+    """Build the segment schedule of ``prog``.
+
+    Memoized on the program instance, so the schedule's lifetime is its
+    program's lifetime (no global cache pinning evicted programs).
+    """
+    cached = getattr(prog, "_segments", None)
+    if cached is not None:
+        return cached
+    m = prog.m
+    info = fusion_info(prog)
+    roots = sorted(info.leaves)            # ascending = topological
+    node_of_root = {r: j for j, r in enumerate(roots)}
+
+    # fused-graph levelization ------------------------------------------------
+    lvl_of_node = np.zeros(len(roots), np.int64)
+    for j, r in enumerate(roots):
+        lv = 0
+        for s in info.leaves[r]:
+            if s >= m:
+                lv = max(lv, int(lvl_of_node[node_of_root[int(info.root_of[s - m])]]))
+        lvl_of_node[j] = lv + 1
+    num_levels = int(lvl_of_node.max()) if len(roots) else 0
+
+    # slot numbering: leaves, pads, alignment, then level blocks --------------
+    node_base = _round_up(m + 3, SUBLANE)
+    pad_slot = np.arange(m, m + 3, dtype=np.int64)
+
+    # order nodes by (level, opcode, padded arity) so segments are contiguous
+    arity = np.array([len(info.leaves[r]) for r in roots], np.int64)
+    pow2 = np.array([1 << (int(a) - 1).bit_length() for a in arity], np.int64)
+    ops = np.array([prog.opcode[r] for r in roots], np.uint8)
+    order = np.lexsort((pow2, ops, lvl_of_node))
+
+    slot_of_node = np.empty(len(roots), np.int64)
+    gather: list[np.ndarray] = []
+    seg_off: list[int] = []
+    seg_op: list[int] = []
+    seg_arity: list[int] = []
+    seg_nodes: list[int] = []
+    seg_out: list[int] = []
+    level_offsets = [0]
+    goff = 0
+    out = node_base
+    n_pad_nodes = 0
+
+    def slot_of(s: int) -> int:
+        """Operand slot in the new numbering (leaf or fused-node output)."""
+        if s < m:
+            return s
+        return int(slot_of_node[node_of_root[int(info.root_of[s - m])]])
+
+    pos = 0
+    for level in range(1, num_levels + 1):
+        idx = [int(j) for j in order if lvl_of_node[j] == level]
+        level_start = out
+        # contiguous (op, arity) runs inside the level
+        run_start = 0
+        runs: list[list[int]] = []
+        for k in range(1, len(idx) + 1):
+            if (k == len(idx) or ops[idx[k]] != ops[idx[run_start]]
+                    or pow2[idx[k]] != pow2[idx[run_start]]):
+                runs.append(idx[run_start:k])
+                run_start = k
+        for run_i, run in enumerate(runs):
+            o = int(ops[run[0]])
+            A = int(pow2[run[0]])
+            d = A.bit_length() - 1
+            ns = len(run)
+            # the level's last segment absorbs the 8-alignment dummies
+            pad_nodes = 0
+            if run_i == len(runs) - 1:
+                width = (out - level_start) + ns
+                pad_nodes = _round_up(width, SUBLANE) - width
+            rev = _bitrev(d)
+            block = np.full((A, ns + pad_nodes), pad_slot[o], np.int64)
+            for col, j in enumerate(run):
+                lv = info.leaves[roots[j]]
+                src = np.full(A, pad_slot[o], np.int64)
+                src[: len(lv)] = [slot_of(s) for s in lv]
+                block[:, col] = src[rev]
+                slot_of_node[j] = out + col
+            gather.append(block.reshape(-1))
+            seg_off.append(goff)
+            seg_op.append(o)
+            seg_arity.append(A)
+            seg_nodes.append(ns + pad_nodes)
+            seg_out.append(out)
+            goff += block.size
+            out += ns + pad_nodes
+            n_pad_nodes += pad_nodes
+            pos += 1
+        level_offsets.append(pos)
+
+    root_op = prog.root_slot - m
+    assert root_op >= 0, "lower() always emits at least one op"
+    root_slot = int(slot_of_node[node_of_root[int(info.root_of[root_op])]])
+
+    seg = SegmentedProgram(
+        base=prog, m=m, node_base=node_base, num_slots=out,
+        gather=(np.concatenate(gather) if gather
+                else np.zeros(0, np.int64)).astype(np.int32),
+        seg_off=np.asarray(seg_off, np.int32),
+        seg_op=np.asarray(seg_op, np.uint8),
+        seg_arity=np.asarray(seg_arity, np.int32),
+        seg_nodes=np.asarray(seg_nodes, np.int32),
+        seg_out=np.asarray(seg_out, np.int32),
+        level_offsets=np.asarray(level_offsets, np.int32),
+        root_slot=root_slot,
+        n_nodes=len(roots), n_pad_nodes=n_pad_nodes)
+    validate(seg)
+    prog._segments = seg
+    return seg
+
+
+def validate(seg: SegmentedProgram) -> None:
+    """Structural invariants every consumer relies on."""
+    assert seg.node_base % SUBLANE == 0 and seg.num_slots % SUBLANE == 0
+    assert (seg.seg_arity >= 2).all()
+    assert ((seg.seg_arity & (seg.seg_arity - 1)) == 0).all(), "arity pow2"
+    goff = 0
+    out = seg.node_base
+    for s in range(seg.num_segments):
+        assert int(seg.seg_off[s]) == goff, "gather stream is contiguous"
+        assert int(seg.seg_out[s]) == out, "node outputs are contiguous"
+        goff += int(seg.seg_arity[s]) * int(seg.seg_nodes[s])
+        out += int(seg.seg_nodes[s])
+    assert goff == len(seg.gather) and out == seg.num_slots
+    for level in range(seg.num_levels):
+        lo, hi = seg.level_out_range(level)
+        assert lo % SUBLANE == 0 and hi % SUBLANE == 0, "8-aligned levels"
+        s0, s1 = int(seg.level_offsets[level]), int(seg.level_offsets[level + 1])
+        for s in range(s0, s1):
+            g0 = int(seg.seg_off[s])
+            g1 = g0 + int(seg.seg_arity[s]) * int(seg.seg_nodes[s])
+            assert (seg.gather[g0:g1] < lo).all(), "operands from the past"
+    assert seg.node_base <= seg.root_slot < seg.num_slots
+
+
+# --------------------------------------------------------------------------- #
+# the one halving-reduction rule every substrate shares
+# --------------------------------------------------------------------------- #
+def combine_fn(op: int, log_domain: bool, xp, logaddexp=None):
+    """Elementwise combine of one segment opcode in one domain.
+
+    ``xp`` is the array namespace (numpy or jax.numpy); ``logaddexp``
+    overrides ``xp.logaddexp`` where a substrate needs its own stable
+    implementation (the Pallas kernel's Mosaic-safe one). Keeping this
+    resolution in one place is what keeps every substrate pairing and
+    combining operands identically — the bit-exactness contract.
+    """
+    if op == OP_PROD:
+        return (lambda a, b: a + b) if log_domain else (lambda a, b: a * b)
+    if op == OP_MAX:
+        return xp.maximum
+    if log_domain:
+        return logaddexp if logaddexp is not None else xp.logaddexp
+    return lambda a, b: a + b
+
+
+def halving_reduce(vals, combine, n_nodes: int):
+    """Reduce ``(arity * n_nodes, batch)`` segment operand rows to
+    ``(n_nodes, batch)`` by repeated contiguous halving.
+
+    Correct ONLY on the bit-reversed position-major layout
+    :func:`segment_program` emits — each split pairs exactly the
+    adjacent operands the original binary tree paired.
+    """
+    while vals.shape[0] > n_nodes:
+        h = vals.shape[0] // 2
+        vals = combine(vals[:h], vals[h:])
+    return vals
+
+
+# --------------------------------------------------------------------------- #
+# float64 reference executor (the parity anchor for every substrate)
+# --------------------------------------------------------------------------- #
+def eval_segmented_numpy(seg: SegmentedProgram, leaf_ind: np.ndarray,
+                         log_domain: bool = False) -> np.ndarray:
+    """Float64 segmented evaluation; bit-identical to
+    :func:`repro.core.executors.eval_ops_numpy` on the base program.
+
+    ``leaf_ind``: (batch, m_ind) indicator values → (batch,) root values.
+    """
+    prog = seg.base
+    leaf_ind = np.atleast_2d(np.asarray(leaf_ind, np.float64))
+    batch = leaf_ind.shape[0]
+    A = np.zeros((seg.num_slots, batch), np.float64)
+    A[: prog.m_ind] = leaf_ind.T
+    A[prog.m_ind: prog.m] = prog.param_values[:, None]
+    if log_domain:
+        with np.errstate(divide="ignore"):
+            A[: prog.m] = np.log(A[: prog.m])
+    A[seg.m: seg.node_base] = seg.init_rows(log_domain)[seg.m:, None]
+    with np.errstate(invalid="ignore"):
+        for s in range(seg.num_segments):
+            g0 = int(seg.seg_off[s])
+            ns = int(seg.seg_nodes[s])
+            G = A[seg.gather[g0: g0 + int(seg.seg_arity[s]) * ns]]
+            G = halving_reduce(
+                G, combine_fn(int(seg.seg_op[s]), log_domain, np), ns)
+            out = int(seg.seg_out[s])
+            A[out: out + ns] = G
+    return A[seg.root_slot]

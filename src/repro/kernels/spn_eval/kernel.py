@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for leveled SPN evaluation.
+"""Pallas TPU kernel for segment-scheduled SPN evaluation.
 
 TPU adaptation of the paper's processor (DESIGN.md §2): the *batch*
 dimension rides the 128 VPU lanes (the paper's node-parallel scalar PEs
@@ -9,61 +9,53 @@ paper's banked register file. All levels execute inside one
 analogue of PE-tree datapath fusion: "avoiding frequent writebacks to the
 register file").
 
-The per-level operand indices (the paper's B/C vectors) are streamed to
-the kernel as an **instruction tensor** — the Pallas analogue of the
-paper's VLIW instruction stream: op-codes + operand addresses resident
-on-chip, consumed one level ("group", fig. 2a) per step. Levels are
-8-aligned so every slice is tile-friendly; gathers index the sublane axis
-with i32 vectors (Mosaic `dynamic_gather`).
+Scheduling follows the **segment scheduler**
+(:mod:`repro.core.segments`): every level is a run of opcode-homogeneous
+n-ary segments, and each segment executes as one sublane gather followed
+by unpredicated halving ufuncs — exactly the paper's "one homogeneous
+operation per PE group per step". The old per-element ``is_prod`` /
+``is_max`` masks and the three-way ``where`` select are gone from the
+inner loop; the opcode is resolved *per segment at trace time*, not per
+element at run time.
 
-The O column of the instruction tensor carries the full opcode alphabet
-(0=sum, 1=prod, 2=max), so the same kernel executes sum-product
-(likelihood/marginal) and max-product (MPE) programs — the query engine
-just streams a different instruction tensor.
+The per-segment operand indices are streamed to the kernel as an
+**instruction tensor** — the Pallas analogue of the paper's VLIW
+instruction stream: the flat bit-reversed gather stream resident
+on-chip, consumed one segment per step; the ``(seg_off, arity, op)``
+descriptor table is static and unrolled into the kernel body. Levels
+are 8-aligned (enforced by :func:`repro.core.segments.segment_program`)
+so every value-buffer slice is tile-friendly; gathers index the sublane
+axis with i32 vectors (Mosaic `dynamic_gather`).
 
-Layout contract (produced by :func:`repro.kernels.spn_eval.ops.pad_program`):
-
-- slots ``[0, m_pad)``: leaf inputs (indicators + parameters), 8-aligned,
-- each level's outputs occupy an 8-aligned contiguous slot range,
-- padded ops compute ``A[0] (op) A[0]`` (finite in both domains).
+Because segments carry the full opcode alphabet (SUM_N / PROD_N /
+MAX_N), the same kernel executes sum-product (likelihood/marginal) and
+max-product (MPE) programs — the query engine just streams a different
+descriptor table.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ...core import segments
+from ...core.segments import SegmentedProgram
 
 SUBLANE = 8     # f32 sublane tile
 LANE = 128      # lane tile
 
 
-@dataclasses.dataclass(eq=False)   # identity-hash: used as a static jit arg
-class PaddedProgram:
-    """Level-padded, 8-aligned slot program consumed by the kernel."""
-    m_pad: int                      # leaf slots incl. padding
-    num_slots: int                  # total padded slots (multiple of 8)
-    levels: list                    # [(offset, b, c, is_prod), ...] np arrays
-    root_slot: int
+def default_interpret() -> bool:
+    """Auto-detected interpret mode: compiled on TPU, interpreter elsewhere.
 
-    @property
-    def num_levels(self) -> int:
-        return len(self.levels)
-
-    @property
-    def n_ops_pad(self) -> int:
-        return sum(len(b) for (_, b, _, _) in self.levels)
-
-    def instruction_tensor(self) -> np.ndarray:
-        """(n_ops_pad, 3) int32: columns = B, C, O (the paper's vectors)."""
-        b = np.concatenate([lv[1] for lv in self.levels])
-        c = np.concatenate([lv[2] for lv in self.levels])
-        o = np.concatenate([lv[3] for lv in self.levels]).astype(np.int32)
-        return np.stack([b, c, o], axis=1).astype(np.int32)
+    The kernel used to hardwire ``interpret=True``, silently running the
+    (orders-of-magnitude slower) Pallas interpreter even on TPU hosts;
+    now the backend decides and callers may force either mode explicitly.
+    """
+    return jax.default_backend() != "tpu"
 
 
 def _logaddexp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -75,72 +67,83 @@ def _logaddexp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(safe, mx + jnp.log1p(jnp.exp(diff)), mx)
 
 
-def _kernel_body(pprog: PaddedProgram, log_domain: bool,
+def _segment_reduce(vals: jnp.ndarray, op: int, log_domain: bool,
+                    n_nodes: int) -> jnp.ndarray:
+    """Unpredicated halving reduction of one homogeneous segment —
+    the shared pairing rule with the kernel's Mosaic-safe logaddexp."""
+    return segments.halving_reduce(
+        vals, segments.combine_fn(op, log_domain, jnp,
+                                  logaddexp=_logaddexp), n_nodes)
+
+
+def _kernel_body(seg: SegmentedProgram, log_domain: bool,
                  in_ref, instr_ref, out_ref, a_ref):
-    """One batch tile: leaves → leveled sweep in VMEM → root row."""
-    a_ref[0: pprog.m_pad, :] = in_ref[...]
-    ip = 0                                          # instruction pointer
-    for (off, b, c, isp) in pprog.levels:
-        width = len(b)
-        bi = instr_ref[ip: ip + width, 0]
-        ci = instr_ref[ip: ip + width, 1]
-        oi = instr_ref[ip: ip + width, 2]
-        ip += width
-        prefix = a_ref[0: off, :]                   # aligned static slice
-        vb = jnp.take(prefix, bi, axis=0)           # sublane gather
-        vc = jnp.take(prefix, ci, axis=0)
-        is_prod = (oi == 1)[:, None]
-        is_max = (oi == 2)[:, None]
-        mx = jnp.maximum(vb, vc)                    # max: same in both domains
-        if log_domain:
-            new = jnp.where(is_prod, vb + vc,
-                            jnp.where(is_max, mx, _logaddexp(vb, vc)))
-        else:
-            new = jnp.where(is_prod, vb * vc,
-                            jnp.where(is_max, mx, vb + vc))
-        a_ref[off: off + width, :] = new
-    root = a_ref[pprog.root_slot, :]
+    """One batch tile: leaves → segment-scheduled sweep in VMEM → root."""
+    a_ref[0: seg.node_base, :] = in_ref[...]
+    for level in range(seg.num_levels):
+        s0, s1 = int(seg.level_offsets[level]), int(seg.level_offsets[level + 1])
+        lo, hi = seg.level_out_range(level)           # 8-aligned range
+        # one whole-buffer read per level; gather indices only ever point
+        # below ``lo`` (validated invariant), so reading the not-yet-
+        # written tail is safe and cheaper than slicing a prefix per level
+        A = a_ref[...]
+        outs = []
+        for s in range(s0, s1):
+            g0 = int(seg.seg_off[s])
+            ns = int(seg.seg_nodes[s])
+            g1 = g0 + int(seg.seg_arity[s]) * ns
+            idx = instr_ref[g0: g1, 0]
+            vals = jnp.take(A, idx, axis=0)           # sublane gather
+            outs.append(_segment_reduce(vals, int(seg.seg_op[s]),
+                                        log_domain, ns))
+        block = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+        a_ref[lo: hi, :] = block
+    root = a_ref[seg.root_slot, :]
     out_ref[...] = jnp.broadcast_to(root[None, :], out_ref.shape)
 
 
-def build_spn_kernel(pprog: PaddedProgram, *, batch_tile: int = LANE,
-                     log_domain: bool = False, interpret: bool = True):
-    """Compile a pallas_call evaluating ``pprog`` over a batch.
+def build_spn_kernel(seg: SegmentedProgram, *, batch_tile: int = LANE,
+                     log_domain: bool = False,
+                     interpret: bool | None = None):
+    """Compile a pallas_call evaluating ``seg`` over a batch.
 
-    Returns ``fn(full_leaves, instr)`` mapping an ``(m_pad, B)`` leaf
-    buffer (domain-transformed, B a multiple of ``batch_tile``) plus the
-    ``(n_ops_pad, 3)`` instruction tensor to ``(B,)`` root values.
+    Returns ``fn(buf, instr)`` mapping a ``(node_base, B)`` value-buffer
+    prefix (domain-transformed leaves + neutral pad rows, B a multiple
+    of ``batch_tile``) plus the ``(n_gather, 1)`` instruction tensor to
+    ``(B,)`` root values. ``interpret=None`` auto-detects the backend
+    (:func:`default_interpret`).
     """
     if batch_tile % LANE:
         raise ValueError(f"batch_tile must be a multiple of {LANE}")
-    n_instr = pprog.n_ops_pad
-    vmem_bytes = ((pprog.num_slots + pprog.m_pad + SUBLANE) * batch_tile * 4
-                  + n_instr * 3 * 4)
+    interpret = default_interpret() if interpret is None else bool(interpret)
+    n_instr = max(len(seg.gather), 1)
+    vmem_bytes = ((seg.num_slots + seg.node_base + SUBLANE) * batch_tile * 4
+                  + n_instr * 4)
     if vmem_bytes > 14 * 2 ** 20:
         raise ValueError(
             f"value buffer needs {vmem_bytes / 2**20:.1f} MiB VMEM "
-            f"({pprog.num_slots} slots x {batch_tile} lanes); reduce "
+            f"({seg.num_slots} slots x {batch_tile} lanes); reduce "
             f"batch_tile or split the SPN")
 
-    body = functools.partial(_kernel_body, pprog, log_domain)
+    body = functools.partial(_kernel_body, seg, log_domain)
 
-    def fn(full_leaves: jnp.ndarray, instr: jnp.ndarray) -> jnp.ndarray:
-        m_pad, B = full_leaves.shape
-        assert m_pad == pprog.m_pad and B % batch_tile == 0
+    def fn(buf: jnp.ndarray, instr: jnp.ndarray) -> jnp.ndarray:
+        node_base, B = buf.shape
+        assert node_base == seg.node_base and B % batch_tile == 0
         grid = (B // batch_tile,)
         out = pl.pallas_call(
             body,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((m_pad, batch_tile), lambda i: (0, i)),
-                pl.BlockSpec((n_instr, 3), lambda i: (0, 0)),
+                pl.BlockSpec((node_base, batch_tile), lambda i: (0, i)),
+                pl.BlockSpec((n_instr, 1), lambda i: (0, 0)),
             ],
             out_specs=pl.BlockSpec((SUBLANE, batch_tile), lambda i: (0, i)),
             out_shape=jax.ShapeDtypeStruct((SUBLANE, B), jnp.float32),
-            scratch_shapes=[pltpu.VMEM((pprog.num_slots, batch_tile),
+            scratch_shapes=[pltpu.VMEM((seg.num_slots, batch_tile),
                                        jnp.float32)],
             interpret=interpret,
-        )(full_leaves, instr)
+        )(buf, instr)
         return out[0]
 
     return fn

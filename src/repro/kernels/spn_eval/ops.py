@@ -1,18 +1,18 @@
 """jit'd public wrapper around the spn_eval Pallas kernel.
 
-Handles everything the kernel contract demands: level padding/slot
-remapping to 8-aligned ranges, parameter splicing (for learned weights),
-domain transform, batch padding to the lane tile, and interpret-mode
-selection (interpret on CPU hosts, compiled on TPU).
+Handles everything the kernel contract demands: the segment schedule
+(:func:`pad_program` — opcode-homogeneous, 8-aligned n-ary segments),
+parameter splicing (for learned weights), domain transform, neutral pad
+rows, batch padding to the lane tile, and interpret-mode selection
+(auto-detected from the backend, overridable by callers).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...core import segments
 from ...core.program import TensorProgram
 from . import kernel as K
 
@@ -21,67 +21,61 @@ def _round_up(x: int, k: int) -> int:
     return (x + k - 1) // k * k
 
 
-@functools.cache
-def pad_program(prog: TensorProgram) -> K.PaddedProgram:
-    """Remap a level-contiguous program to 8-aligned padded slot ranges.
+def pad_program(prog: TensorProgram) -> segments.SegmentedProgram:
+    """Segment schedule of ``prog`` — the kernel's instruction layout.
 
-    The slot permutation is order-preserving within leaves and within each
-    level, so ``new_slot = old_slot + shift(level)`` with a per-region
-    shift — cheap to apply to the B/C index vectors.
+    Alias of :func:`repro.core.segments.segment_program` (cached there):
+    the tile-aligned segmented representation *is* the padded program —
+    every level's output block starts 8-aligned and spans a multiple of
+    8 slots, each segment is one opcode at one padded arity.
     """
-    m_pad = _round_up(prog.m, K.SUBLANE)
-    # old-slot -> new-slot lookup (leaves first, then per level)
-    new_of_old = np.zeros(prog.num_slots, np.int64)
-    new_of_old[: prog.m] = np.arange(prog.m)
-    levels = []
-    off = m_pad
-    for lo, hi in zip(prog.level_offsets[:-1], prog.level_offsets[1:]):
-        lo, hi = int(lo), int(hi)
-        width = hi - lo
-        width_pad = _round_up(max(width, 1), K.SUBLANE)
-        new_of_old[prog.m + lo: prog.m + hi] = off + np.arange(width)
-        b = new_of_old[prog.b[lo:hi]].astype(np.int32)
-        c = new_of_old[prog.c[lo:hi]].astype(np.int32)
-        isp = prog.opcode[lo:hi].astype(np.uint8)
-        pad = width_pad - width
-        if pad:  # padded ops: A[0] (prod) A[0] — finite in both domains
-            b = np.concatenate([b, np.zeros(pad, np.int32)])
-            c = np.concatenate([c, np.zeros(pad, np.int32)])
-            isp = np.concatenate([isp, np.ones(pad, np.uint8)])
-        levels.append((off, b, c, isp))
-        off += width_pad
-    return K.PaddedProgram(
-        m_pad=m_pad, num_slots=off, levels=levels,
-        root_slot=int(new_of_old[prog.root_slot]))
+    return segments.segment_program(prog)
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-@functools.cache
 def _build(prog: TensorProgram, batch_tile: int, log_domain: bool,
            interpret: bool):
-    pprog = pad_program(prog)
-    fn = K.build_spn_kernel(pprog, batch_tile=batch_tile,
+    # memoized on the program instance (like segment_program), so the
+    # compiled kernel dies with its program instead of being pinned in a
+    # module-level cache after the ArtifactCache evicts the artifact
+    key = (batch_tile, log_domain, interpret)
+    builds = prog.__dict__.setdefault("_pallas_builds", {})
+    cached = builds.get(key)
+    if cached is not None:
+        return cached
+    seg = pad_program(prog)
+    fn = K.build_spn_kernel(seg, batch_tile=batch_tile,
                             log_domain=log_domain, interpret=interpret)
-    m_ind, m, m_pad = prog.m_ind, prog.m, pprog.m_pad
-    stored = jnp.asarray(prog.param_values, jnp.float32)
-    instr = jnp.asarray(pprog.instruction_tensor())
+    m_ind, m, node_base = prog.m_ind, prog.m, seg.node_base
+    instr = jnp.asarray(seg.gather[:, None])
+    # everything but the indicator rows is static per artifact: parameter
+    # rows (domain-transformed once), neutral pad + alignment rows, and
+    # the batch-padding columns (indicator 1 → 0 in log domain). Per call
+    # only the (B, m_ind) leaf block is transformed and spliced in.
+    # param logs go through the same f32 jnp.log as the ref/leaf path so
+    # kernel and pure-jnp oracle stay bitwise comparable in log domain
+    pcol = jnp.asarray(prog.param_values, jnp.float32)
+    lead = jnp.zeros(m_ind, jnp.float32) if log_domain \
+        else jnp.ones(m_ind, jnp.float32)            # batch-pad columns
+    base_col = jnp.concatenate([
+        lead, jnp.log(pcol) if log_domain else pcol,
+        jnp.asarray(seg.init_rows(log_domain)[m:], jnp.float32)])
 
     @jax.jit
     def run(leaf_ind: jnp.ndarray, params: jnp.ndarray | None) -> jnp.ndarray:
         leaf_ind = jnp.atleast_2d(leaf_ind).astype(jnp.float32)
         B = leaf_ind.shape[0]
         B_pad = _round_up(max(B, 1), batch_tile)
-        p = stored if params is None else params.astype(jnp.float32)
-        full = jnp.ones((B_pad, m_pad), jnp.float32)       # pad rows = 1.0
-        full = full.at[:B, :m_ind].set(leaf_ind)
-        full = full.at[:, m_ind: m].set(p[None, :])
+        buf = jnp.broadcast_to(base_col[:, None], (node_base, B_pad))
         if log_domain:
-            full = jnp.log(full)
-        return fn(full.T, instr)[:B]
+            leaf_ind = jnp.log(leaf_ind)
+        buf = buf.at[:m_ind, :B].set(leaf_ind.T)
+        if params is not None:
+            p = params.astype(jnp.float32)
+            buf = buf.at[m_ind: m, :].set(
+                (jnp.log(p) if log_domain else p)[:, None])
+        return fn(buf, instr)[:B]
 
+    builds[key] = run
     return run
 
 
@@ -93,9 +87,13 @@ def build_eval(prog: TensorProgram, *, batch_tile: int = K.LANE,
     (:mod:`repro.runtime.substrates`): the returned ``run(leaf_ind,
     params=None)`` closure is the cacheable artifact payload. ``spn_eval``
     remains the one-shot convenience wrapper over the same builder.
+    ``interpret=None`` resolves via :func:`K.default_interpret` at build
+    time (compiled on TPU, interpreter elsewhere) — resolved *before*
+    the build cache so explicit and auto-detected callers requesting the
+    same mode share one compiled kernel.
     """
-    interpret = _default_interpret() if interpret is None else interpret
-    return _build(prog, int(batch_tile), bool(log_domain), bool(interpret))
+    interpret = K.default_interpret() if interpret is None else bool(interpret)
+    return _build(prog, int(batch_tile), bool(log_domain), interpret)
 
 
 def spn_eval(prog: TensorProgram, leaf_ind, params=None, *,
@@ -106,6 +104,6 @@ def spn_eval(prog: TensorProgram, leaf_ind, params=None, *,
     ``leaf_ind``: (batch, m_ind) indicator values → (batch,) root values
     (root log-probabilities when ``log_domain``).
     """
-    interpret = _default_interpret() if interpret is None else interpret
-    run = _build(prog, int(batch_tile), bool(log_domain), bool(interpret))
+    run = build_eval(prog, batch_tile=batch_tile, log_domain=log_domain,
+                     interpret=interpret)
     return run(jnp.asarray(leaf_ind), params)

@@ -1,9 +1,11 @@
 """Pure-jnp oracle for the spn_eval Pallas kernel.
 
-Implements exactly the computation the kernel performs — a leveled pass
-over the slot value buffer with static per-level operand gathers — in
-plain ``jnp`` with no Pallas, no padding tricks, float32 throughout
-(kernels compute in f32; float64 reference lives in
+Implements exactly the computation the kernel performs — the segment
+schedule of :mod:`repro.core.segments`: per level, one static gather and
+one unpredicated halving reduction per opcode-homogeneous segment — in
+plain ``jnp`` with no Pallas, float32 throughout, sharing the kernel's
+:func:`~repro.kernels.spn_eval.kernel._logaddexp` so log-domain results
+are bitwise comparable too (the float64 reference lives in
 ``repro.core.executors.eval_ops_numpy``).
 """
 from __future__ import annotations
@@ -11,7 +13,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from ...core import segments
 from ...core.program import TensorProgram
+from .kernel import _segment_reduce
 
 
 def spn_eval_ref(prog: TensorProgram, leaf_ind: jnp.ndarray,
@@ -20,8 +24,10 @@ def spn_eval_ref(prog: TensorProgram, leaf_ind: jnp.ndarray,
     """Evaluate ``prog`` for a batch. ``leaf_ind``: (batch, m_ind) → (batch,).
 
     Value-buffer layout identical to the kernel: slots [0, m) leaves,
-    [m, m+n) op outputs, level-contiguous.
+    [m, node_base) neutral pads + alignment, then level-contiguous
+    fused-node outputs.
     """
+    seg = segments.segment_program(prog)
     leaf_ind = jnp.atleast_2d(leaf_ind).astype(jnp.float32)
     batch = leaf_ind.shape[0]
     p = jnp.asarray(prog.param_values, jnp.float32) if params is None else params
@@ -29,15 +35,15 @@ def spn_eval_ref(prog: TensorProgram, leaf_ind: jnp.ndarray,
     A = jnp.concatenate([leaf_ind, p], axis=1).T          # (m, batch)
     if log_domain:
         A = jnp.log(A)
-    for lo, hi in zip(prog.level_offsets[:-1], prog.level_offsets[1:]):
-        lo, hi = int(lo), int(hi)
-        b = np.asarray(prog.b[lo:hi])                      # static gather
-        c = np.asarray(prog.c[lo:hi])
-        op = np.asarray(prog.opcode[lo:hi])[:, None]
-        vb, vc = A[b], A[c]
-        prod = vb + vc if log_domain else vb * vc
-        add = jnp.logaddexp(vb, vc) if log_domain else vb + vc
-        new = jnp.where(op == 1, prod,
-                        jnp.where(op == 2, jnp.maximum(vb, vc), add))
-        A = jnp.concatenate([A, new], axis=0)
-    return A[prog.root_slot]
+    tail = jnp.asarray(seg.init_rows(log_domain)[seg.m:], jnp.float32)
+    A = jnp.concatenate(
+        [A, jnp.broadcast_to(tail[:, None], (seg.node_base - seg.m, batch))],
+        axis=0)
+    for s in range(seg.num_segments):
+        g0 = int(seg.seg_off[s])
+        ns = int(seg.seg_nodes[s])
+        idx = np.asarray(seg.gather[g0: g0 + int(seg.seg_arity[s]) * ns])
+        vals = _segment_reduce(A[idx], int(seg.seg_op[s]),
+                               log_domain, ns)
+        A = jnp.concatenate([A, vals], axis=0)
+    return A[seg.root_slot]

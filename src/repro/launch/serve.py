@@ -58,7 +58,8 @@ def bench(fn, n_batches: int, batch: int) -> dict:
 
 def serve_spn(dataset: str, batch: int, n_batches: int,
               substrate: str = "all", query: str = "joint",
-              mask_frac: float = 0.3) -> dict:
+              mask_frac: float = 0.3,
+              interpret: bool | None = None) -> dict:
     from ..core import learn
     from ..data import spn_datasets
     from ..queries import (mpe_backtrace, random_mask, sample_ancestral_jax,
@@ -67,7 +68,7 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
 
     X = spn_datasets.load(dataset, "train", 400)
     spn = learn.learn_spn(X, min_instances=64)
-    server = Server(spn)
+    server = Server(spn, interpret=interpret)
     names = SPN_SUBSTRATES if substrate in ("all", None) else (substrate,)
     print(f"SPN[{dataset}] query={query}: {server.prog.n_ops} ops, "
           f"{server.prog.num_levels} levels; substrates: {', '.join(names)}")
@@ -106,6 +107,11 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
                                     "cycles": meta["cycles"]}
             extra = (f"  [{meta['ops_per_cycle']:.2f} ops/cycle, "
                      f"{meta['cycles']} cycles/eval-batch]")
+        elif name == "pallas":
+            meta = server.artifact(query, name).meta
+            out["pallas_interpret"] = meta["interpret"]
+            extra = ("  [interpret-mode]" if meta["interpret"]
+                     else f"  [compiled, {meta['backend']}]")
         print(f"  {score + name:18s} {r['us_per_batch']:10.1f} us/batch "
               f"({r['evals_per_s']:12.0f} evals/s){extra}")
 
@@ -187,6 +193,10 @@ def main() -> None:
     ap.add_argument("--mask-frac", type=float, default=0.3,
                     help="fraction of variables marginalized for "
                          "marginal/mpe queries")
+    ap.add_argument("--interpret", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="Pallas kernel mode: 'auto' compiles on TPU and "
+                         "interprets elsewhere; 'on'/'off' force it")
     ap.add_argument("--dataset", default="nltcs")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=256)
@@ -197,7 +207,9 @@ def main() -> None:
     if args.mode == "spn":
         serve_spn(args.dataset, args.batch, args.batches,
                   substrate=args.substrate, query=args.query,
-                  mask_frac=args.mask_frac)
+                  mask_frac=args.mask_frac,
+                  interpret={"auto": None, "on": True,
+                             "off": False}[args.interpret])
     else:
         serve_lm(args.arch, min(args.batch, 8), args.prompt_len,
                  args.gen_len)

@@ -36,8 +36,18 @@ class PendingResult:
 
 
 class MicroBatcher:
-    def __init__(self, execute, *, tile: int = 128, max_rows: int = 4096):
-        """``execute``: (rows, m_ind) linear leaves -> (rows,) values."""
+    def __init__(self, execute, *, tile: int = 1, max_rows: int = 4096):
+        """``execute``: (rows, m_ind) linear leaves -> (rows,) values.
+
+        ``tile`` is the executor's declared row multiple — the substrate's
+        ``pad_tile(artifact.batch_tile)``, NOT a hardwired 128: substrates
+        that take any batch (numpy, leveled-jax, vliw-sim) declare 1 and
+        are never padded. ``stats['padded_rows']`` counts the rows of
+        padding waste, reported by :meth:`Server.stats` next to the
+        artifact-cache hit/miss counters.
+        """
+        if tile < 1:
+            raise ValueError(f"tile must be >= 1, got {tile}")
         if max_rows % tile:
             max_rows = (max_rows // tile + 1) * tile
         self.execute = execute
@@ -47,6 +57,12 @@ class MicroBatcher:
         self._queued_rows = 0
         self.stats = {"requests": 0, "rows": 0, "batches": 0,
                       "padded_rows": 0}
+
+    @property
+    def pad_waste(self) -> float:
+        """Fraction of executed rows that were padding."""
+        total = self.stats["rows"] + self.stats["padded_rows"]
+        return self.stats["padded_rows"] / total if total else 0.0
 
     def submit(self, leaves: np.ndarray) -> PendingResult:
         leaves = np.atleast_2d(np.asarray(leaves))

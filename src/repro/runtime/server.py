@@ -96,7 +96,7 @@ class Server:
             aref = weakref.ref(art)
             batcher = MicroBatcher(
                 lambda leaves, _s=sub, _r=aref: _s.execute(_r(), leaves),
-                tile=sub.pad_tile(self.batch_tile), max_rows=self.max_rows)
+                tile=sub.pad_tile(art.batch_tile), max_rows=self.max_rows)
             self._batchers[art] = batcher
         return batcher
 
@@ -132,9 +132,12 @@ class Server:
         out = {"cache": self.cache.stats(),
                "compiles": {n: s.compile_count
                             for n, s in self.substrates.items()},
+               "padded_rows": 0,
                "batchers": {}}
         for art, b in self._batchers.items():
-            out["batchers"][f"{art.semiring}/{art.substrate}"] = dict(b.stats)
+            out["batchers"][f"{art.semiring}/{art.substrate}"] = dict(
+                b.stats, pad_waste=round(b.pad_waste, 4))
+            out["padded_rows"] += b.stats["padded_rows"]
         return out
 
 

@@ -32,9 +32,10 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import numpy as np
 
-from ..core import executors, program
+from ..core import executors, program, segments
 from ..core.processor import fastsim, sim
 from ..core.processor.config import PTREE, ProcessorConfig
 
@@ -166,12 +167,13 @@ class NumpySubstrate(Substrate):
 
 @register
 class LeveledJaxSubstrate(Substrate):
-    """Group-decomposed jit'd JAX executor (production CPU/TPU path)."""
+    """Segment-scheduled jit'd JAX executor (production CPU/TPU path)."""
 
     name = "leveled-jax"
 
     def _build(self, prog, log_domain, batch_tile):
-        return executors.make_leveled_eval(prog, log_domain), {}
+        meta = {"segments": segments.segment_program(prog).stats()}
+        return executors.make_leveled_eval(prog, log_domain), meta
 
     def execute(self, artifact, leaves):
         return np.asarray(artifact.payload(leaves), np.float64)
@@ -179,7 +181,13 @@ class LeveledJaxSubstrate(Substrate):
 
 @register
 class PallasSubstrate(Substrate):
-    """Pallas TPU kernel with VMEM-resident value buffer."""
+    """Pallas TPU kernel with VMEM-resident value buffer.
+
+    ``interpret=None`` auto-detects the backend at compile time —
+    compiled kernel on TPU, Pallas interpreter elsewhere — and the mode
+    actually used is recorded in the artifact meta so interpreter-mode
+    numbers are never mistaken for compiled-kernel numbers.
+    """
 
     name = "pallas"
 
@@ -189,9 +197,15 @@ class PallasSubstrate(Substrate):
 
     def _build(self, prog, log_domain, batch_tile):
         from ..kernels.spn_eval import build_eval
+        from ..kernels.spn_eval.kernel import default_interpret
+        interpret = (default_interpret() if self.interpret is None
+                     else bool(self.interpret))
         run = build_eval(prog, batch_tile=batch_tile, log_domain=log_domain,
-                         interpret=self.interpret)
-        return run, {}
+                         interpret=interpret)
+        meta = {"interpret": interpret,
+                "backend": jax.default_backend(),
+                "segments": segments.segment_program(prog).stats()}
+        return run, meta
 
     def execute(self, artifact, leaves):
         return np.asarray(artifact.payload(leaves, None), np.float64)

@@ -16,18 +16,20 @@ def _leaves(prog, n, seed=0):
 
 
 # ---------------------------------------------------------------------------
-# padding layout invariants
+# padding layout invariants (the segment schedule is the padded program)
 # ---------------------------------------------------------------------------
 def test_pad_program_layout(nltcs_prog):
     pp = pad_program(nltcs_prog)
-    assert pp.m_pad % 8 == 0 and pp.num_slots % 8 == 0
-    off = pp.m_pad
-    for (o, b, c, isp) in pp.levels:
-        assert o == off and len(b) % 8 == 0
-        assert (b < o).all() and (c < o).all()      # operands from the past
-        off += len(b)
-    assert off == pp.num_slots
-    assert 0 <= pp.root_slot < pp.num_slots
+    assert pp.node_base % 8 == 0 and pp.num_slots % 8 == 0
+    for level in range(pp.num_levels):
+        lo, hi = pp.level_out_range(level)
+        assert lo % 8 == 0 and hi % 8 == 0          # tile-aligned levels
+        s0, s1 = pp.level_offsets[level], pp.level_offsets[level + 1]
+        for s in range(s0, s1):
+            g0 = int(pp.seg_off[s])
+            g1 = g0 + int(pp.seg_arity[s]) * int(pp.seg_nodes[s])
+            assert (pp.gather[g0:g1] < lo).all()    # operands from the past
+    assert pp.node_base <= pp.root_slot < pp.num_slots
 
 
 # ---------------------------------------------------------------------------
@@ -87,7 +89,15 @@ def test_kernel_random_spns(seed, nvars, depth, batch, log_domain):
 
 def test_kernel_vmem_guard():
     """Oversized value buffers are rejected with a clear error."""
+    from repro.core import segments
     from repro.kernels.spn_eval import kernel as K
-    big = K.PaddedProgram(m_pad=8, num_slots=40_000, levels=[], root_slot=0)
+    big = segments.SegmentedProgram(
+        base=None, m=8, node_base=16, num_slots=40_000,
+        gather=np.zeros(0, np.int32),
+        seg_off=np.zeros(0, np.int32), seg_op=np.zeros(0, np.uint8),
+        seg_arity=np.zeros(0, np.int32), seg_nodes=np.zeros(0, np.int32),
+        seg_out=np.zeros(0, np.int32),
+        level_offsets=np.zeros(1, np.int32), root_slot=16,
+        n_nodes=0, n_pad_nodes=0)
     with pytest.raises(ValueError, match="VMEM"):
         K.build_spn_kernel(big, batch_tile=128)

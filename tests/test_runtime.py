@@ -122,6 +122,29 @@ def test_batcher_coalesces_heterogeneous_requests():
         np.testing.assert_allclose(o, r.sum(axis=1))
     assert b.stats == {"requests": 3, "rows": 136, "batches": 1,
                        "padded_rows": 120}
+    assert b.pad_waste == pytest.approx(120 / 256)
+
+
+def test_batcher_respects_declared_tile():
+    """Substrates that take any batch (tile=1) are never padded."""
+    shapes = []
+    b = MicroBatcher(lambda lv: (shapes.append(lv.shape), lv[:, 0])[1])
+    b.submit(np.ones((5, 3)))
+    b.flush()
+    assert shapes == [(5, 3)] and b.stats["padded_rows"] == 0
+    assert b.pad_waste == 0.0
+
+
+def test_server_reports_padding_waste(small_spn):
+    srv = Server(small_spn, substrates=("numpy", "pallas"))
+    x = np.abs(_evidence(srv.prog.num_vars, "joint", n=5))
+    srv.query(x, "joint", "numpy")      # tile 1: no padding
+    srv.query(x, "joint", "pallas")     # lane tile: 5 -> 128
+    stats = srv.stats()
+    assert stats["padded_rows"] == 123
+    assert stats["batchers"]["sum/numpy"]["padded_rows"] == 0
+    assert stats["batchers"]["sum/pallas"]["pad_waste"] == \
+        pytest.approx(123 / 128, abs=1e-4)
 
 
 def test_batcher_auto_flush_at_max_rows():

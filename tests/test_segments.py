@@ -1,0 +1,138 @@
+"""Segment scheduler: descriptor invariants, n-ary fusion correctness on
+ragged fan-ins, and cross-substrate parity of segmented vs seed (binary
+alg.-1) execution in both domains."""
+import numpy as np
+import pytest
+
+from repro.core import executors, program, segments
+from repro.core.learn import random_spn
+from repro.core.spn import SPNBuilder
+
+SUBLANE = segments.SUBLANE
+
+
+def _leaves(prog, n, seed=0, mask_frac=0.0):
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, 2, size=(n, max(prog.num_vars, 1)))
+    if mask_frac:
+        X = np.where(rng.random(X.shape) < mask_frac, -1, X)
+    return prog.leaves_from_evidence(X)
+
+
+def _ragged_spn(fanins=(3, 5, 6, 7, 10)):
+    """Sum/product nodes with deliberately non-power-of-two fan-ins."""
+    b = SPNBuilder()
+    rng = np.random.default_rng(0)
+    tops = []
+    for v, k in enumerate(fanins):
+        kids = []
+        for j in range(k):
+            kids.append(b.product([b.indicator(2 * v, j % 2),
+                                   b.indicator(2 * v + 1, (j + 1) % 2)]))
+        w = rng.dirichlet(np.ones(k))
+        tops.append(b.sum(kids, w))
+    return b.build(b.product(tops))
+
+
+# ---------------------------------------------------------------------------
+# descriptor invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("progname", ["small_prog", "nltcs_prog"])
+def test_segment_invariants(progname, request):
+    prog = request.getfixturevalue(progname)
+    seg = segments.segment_program(prog)
+    segments.validate(seg)   # contiguity, pow2 arities, operand ordering
+    # 8-aligned level offsets and widths
+    assert seg.node_base % SUBLANE == 0 and seg.num_slots % SUBLANE == 0
+    for level in range(seg.num_levels):
+        lo, hi = seg.level_out_range(level)
+        assert lo % SUBLANE == 0 and (hi - lo) % SUBLANE == 0
+    # homogeneous opcodes: one opcode per segment, by construction — and
+    # padded operand positions point at that opcode's neutral slot only
+    pad = seg.pad_slots
+    for s in range(seg.num_segments):
+        g0 = int(seg.seg_off[s])
+        g1 = g0 + int(seg.seg_arity[s]) * int(seg.seg_nodes[s])
+        idx = seg.gather[g0:g1]
+        others = np.setdiff1d(pad, [pad[int(seg.seg_op[s])]])
+        assert not np.isin(idx, others).any()
+    # every real binary op is covered by exactly one fused node
+    info = segments.fusion_info(prog)
+    covered = sorted(int(i) for r in info.leaves
+                     for i in np.flatnonzero(info.root_of == r))
+    assert covered == list(range(prog.n_ops))
+
+
+def test_segments_fuse_nary(nltcs_prog):
+    """k-ary reductions collapse: fewer nodes than binary ops, arity > 2."""
+    seg = segments.segment_program(nltcs_prog)
+    assert seg.n_nodes < nltcs_prog.n_ops
+    assert int(seg.seg_arity.max()) > 2
+    assert seg.num_levels <= nltcs_prog.num_levels
+
+
+# ---------------------------------------------------------------------------
+# n-ary fusion correctness on ragged fan-ins
+# ---------------------------------------------------------------------------
+def test_ragged_fanin_fusion_bit_identical():
+    prog = program.lower(_ragged_spn())
+    seg = segments.segment_program(prog)
+    arities = sorted({int(a) for a in seg.seg_arity})
+    assert max(arities) >= 8          # the 7/10-ary sums really fused
+    leaf = _leaves(prog, 40, seed=2)
+    for log in (False, True):
+        ref = executors.eval_ops_numpy(prog, leaf, log)
+        got = segments.eval_segmented_numpy(seg, leaf, log)
+        np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("log_domain", [False, True])
+def test_segmented_numpy_bit_identical_random(log_domain):
+    for seed in range(8):
+        spn = random_spn(6, depth=2, num_sums=3, repetitions=2, seed=seed)
+        prog = program.lower(spn)
+        seg = segments.segment_program(prog)
+        leaf = _leaves(prog, 9, seed=seed, mask_frac=0.3)
+        np.testing.assert_array_equal(
+            segments.eval_segmented_numpy(seg, leaf, log_domain),
+            executors.eval_ops_numpy(prog, leaf, log_domain))
+
+
+def test_max_product_twin_fuses_and_matches(nltcs_prog):
+    mp = program.to_max_product(nltcs_prog)
+    seg = segments.segment_program(mp)
+    assert (seg.seg_op == program.OP_MAX).any()
+    leaf = _leaves(nltcs_prog, 16, seed=5, mask_frac=0.4)
+    np.testing.assert_array_equal(
+        segments.eval_segmented_numpy(seg, leaf, True),
+        executors.eval_ops_numpy(mp, leaf, True))
+
+
+# ---------------------------------------------------------------------------
+# cross-substrate parity: segmented vs seed execution, both domains
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("log_domain", [False, True])
+def test_cross_substrate_parity_nltcs(nltcs_prog, log_domain):
+    from repro.kernels.spn_eval import spn_eval, spn_eval_ref
+    leaf = _leaves(nltcs_prog, 64, seed=7, mask_frac=0.3)
+    ref64 = executors.eval_ops_numpy(nltcs_prog, leaf, log_domain)  # seed oracle
+    lvl = np.asarray(executors.eval_leveled(
+        nltcs_prog, leaf.astype(np.float32), None, log_domain))
+    ker = np.asarray(spn_eval(nltcs_prog, leaf.astype(np.float32),
+                              log_domain=log_domain))
+    jref = np.asarray(spn_eval_ref(nltcs_prog, leaf.astype(np.float32),
+                                   log_domain=log_domain))
+    np.testing.assert_allclose(lvl, ref64, rtol=5e-4, atol=5e-5)
+    np.testing.assert_allclose(ker, ref64, rtol=5e-4, atol=5e-5)
+    np.testing.assert_array_equal(ker, jref)   # same schedule, same bits
+
+
+def test_segment_stats_recorded_in_artifacts(small_spn):
+    from repro.runtime import Server
+    srv = Server(small_spn, substrates=("leveled-jax", "pallas"))
+    for name in ("leveled-jax", "pallas"):
+        meta = srv.artifact("marginal", name).meta
+        assert meta["segments"]["n_nodes"] <= srv.prog.n_ops
+        assert meta["segments"]["segments"] >= 1
+    assert isinstance(srv.artifact("marginal", "pallas").meta["interpret"],
+                      bool)
