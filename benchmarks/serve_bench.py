@@ -14,8 +14,16 @@ exits non-zero when any substrate's throughput regressed by more than
 25% against the baseline record (the CI bench-smoke step runs this
 against the committed ``BENCH_serve.json`` before overwriting it).
 
+``--cores 1,2,4,8`` adds a multi-core scaling sweep: for each core
+count the ``vliw-mc`` substrate is compiled and its calibrated lockstep
+cycle count compared against single-core ``vliw-sim`` — the
+speedup-vs-cores curve plus the communication/compute cycle ratio, per
+dataset. The default run records the 1/2/4-core points so the scaling
+trajectory accumulates in ``BENCH_serve.json`` alongside throughput.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--dataset nltcs]
         [--batch 256] [--out BENCH_serve.json] [--compare BENCH_serve.json]
+        [--cores 1,2,4,8]
 """
 from __future__ import annotations
 
@@ -26,7 +34,9 @@ import time
 
 import numpy as np
 
+from repro.core import multicore
 from repro.core.processor import fastsim, sim
+from repro.core.processor.config import PTREE
 from repro.queries import random_mask
 from repro.runtime import DEFAULT_SUBSTRATES, Server, verify_parity
 
@@ -124,9 +134,62 @@ def compare_records(new: dict, baseline: dict,
     return failures
 
 
+def multicore_scaling(dataset: str, cores_list: list[int],
+                      rows: list[str] | None = None,
+                      prog=None) -> dict:
+    """Speedup-vs-cores curve of ``vliw-mc`` against single-core VLIW.
+
+    Cycle counts come from the calibrated lockstep checked simulation
+    (value-independent), so the curve is machine-speed independent and
+    comparable across runs. ``comm_compute_ratio`` splits each
+    configuration's total core-cycles into communication-attributable
+    (flow-control stalls, end-of-program barrier idling, SEND/RECV slot
+    occupancy) versus compute.
+    """
+    from repro.core.compiler.pipeline import compile_program
+
+    if prog is None:
+        _spn, prog = bench_spn(dataset)
+    base = compile_program(prog, PTREE)
+    out: dict = {"single_core_cycles": base.num_cycles, "cores": {}}
+    print(f"  [{dataset}] single-core vliw-sim: {base.num_cycles} cycles")
+    for k in cores_list:
+        mcp = multicore.compile_multicore(prog, PTREE, k)
+        meta = mcp.meta
+        cycles = int(meta["cycles"])
+        n_eff = meta["effective_cores"]
+        comm_slots = sum(cp.vprog.stats.get("sends", 0)
+                         + cp.vprog.stats.get("recvs", 0)
+                         for cp in mcp.cores)
+        comm_cycles = (sum(meta["stall_cycles"])
+                       + sum(meta["barrier_idle"]) + comm_slots)
+        total = n_eff * cycles
+        speedup = base.num_cycles / cycles
+        entry = {
+            "cycles": cycles, "speedup": round(speedup, 3),
+            "effective_cores": n_eff,
+            "cut_values": meta["cut_values"],
+            "comm_values_per_batch": meta["comm"]["values"],
+            "comm_rows": meta["comm"]["rows"],
+            "stall_cycles": sum(meta["stall_cycles"]),
+            "barrier_idle_cycles": sum(meta["barrier_idle"]),
+            "comm_compute_ratio": round(
+                comm_cycles / max(total - comm_cycles, 1), 4),
+        }
+        out["cores"][str(k)] = entry
+        if rows is not None:
+            rows.append(csv_row(f"mc_scaling_{dataset}_c{k}", cycles,
+                                f"speedup={speedup:.2f}x"))
+        print(f"  [{dataset}] vliw-mc cores={k}: {cycles} cycles "
+              f"({speedup:.2f}x), {entry['comm_values_per_batch']} values "
+              f"crossed, comm/compute={entry['comm_compute_ratio']}")
+    return out
+
+
 def main(dataset: str = "nltcs", batch: int = 256,
          out_path: str = "BENCH_serve.json",
-         compare_path: str | None = None) -> list[str]:
+         compare_path: str | None = None,
+         cores_list: list[int] | None = None) -> list[str]:
     baseline = None
     if compare_path:
         try:
@@ -179,6 +242,12 @@ def main(dataset: str = "nltcs", batch: int = 256,
     record["segments"] = \
         server.artifact("marginal", "leveled-jax").meta["segments"]
 
+    # multi-core scaling points (calibrated lockstep cycle counts), on
+    # the same program the throughput numbers above were measured on
+    record["multicore_scaling"] = {
+        dataset: multicore_scaling(dataset, cores_list or [1, 2, 4], rows,
+                                   prog=server.prog)}
+
     # fast-sim vs checked-sim: same artifact, same leaves, bit-identical
     art = server.artifact("marginal", "vliw-sim")
     vprog, dense, workspace = art.payload
@@ -224,5 +293,11 @@ if __name__ == "__main__":
     ap.add_argument("--compare", default=None, metavar="BASELINE",
                     help="baseline BENCH_serve.json; exit non-zero on >25%% "
                          "per-substrate throughput regression")
+    ap.add_argument("--cores", default=None, metavar="1,2,4,8",
+                    help="multi-core scaling sweep: comma-separated core "
+                         "counts for the vliw-mc cycle-count curve "
+                         "(default 1,2,4)")
     args = ap.parse_args()
-    main(args.dataset, args.batch, args.out, args.compare)
+    cores = ([int(c) for c in args.cores.split(",")]
+             if args.cores else None)
+    main(args.dataset, args.batch, args.out, args.compare, cores)

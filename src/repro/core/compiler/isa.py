@@ -67,20 +67,73 @@ class TreeInstr:
 
 @dataclasses.dataclass
 class MemInstr:
-    """Vector row transfer: data_mem[addr] <-> regfile[:, reg]."""
-    kind: str   # "load" | "store"
-    addr: int   # data-memory row
-    reg: int    # register row (same index in every bank)
+    """Vector row transfer: data_mem[addr] <-> regfile[:, reg].
+
+    Two additional kinds exist only in multi-core programs and execute on
+    the core's *network interface port* (``VLIWInstr.comm``), not the
+    data-memory port:
+
+    - ``"send"``: flush one completed shared-register-window row onto the
+      interconnect. ``addr`` is the global channel-row id; the values are
+      snapshotted from the register cells recorded in
+      :attr:`VLIWProgram.send_specs` (the window latches writebacks
+      AIA-style, so no bank gather is needed).
+    - ``"recv"``: read a window row into load-region register row
+      ``reg`` (member *position i* lands in *bank i*). Non-blocking: if
+      the row has not arrived yet the cells are marked in-flight
+      (full/empty bits) and the core stalls only when a PE actually
+      reads one — flow control at use, not at issue.
+    """
+    kind: str   # "load" | "store" | "send" | "recv"
+    addr: int   # data-memory row (load/store) or channel-row id (send/recv)
+    reg: int    # register row (same index in every bank); -1 for send
 
 
 @dataclasses.dataclass
 class VLIWInstr:
     trees: list[Optional[TreeInstr]]
-    mem: Optional[MemInstr] = None
+    mem: Optional[MemInstr] = None      # data-memory port: load/store
+    comm: Optional[MemInstr] = None     # network-interface port: send/recv
 
     @property
     def num_useful_ops(self) -> int:
         return sum(t.num_useful_ops for t in self.trees if t is not None)
+
+
+@dataclasses.dataclass
+class CommSpec:
+    """One core's side of a multi-core communication plan.
+
+    Channel rows are level-homogeneous groups of cut values between one
+    (src, dst) core pair — see :mod:`repro.core.multicore.comm`. The
+    compiler consumes this spec to lay recv slots out in window rows,
+    pin producer values until their send issues, and order sends before
+    dependent remote reads (the deadlock-freedom invariant).
+    """
+    # consumer side: local leaf slot -> (channel row id, position/bank)
+    recv_slots: dict[int, tuple[int, int]] = dataclasses.field(
+        default_factory=dict)
+    # producer side: local op idx -> [(channel row id, position), ...]
+    # (one entry per destination core — multicast is unrolled)
+    send_ops: dict[int, list] = dataclasses.field(default_factory=dict)
+    # channel row id -> producer binary level (the deadlock grading)
+    row_level: dict[int, int] = dataclasses.field(default_factory=dict)
+    # channel row id -> member count
+    row_size: dict[int, int] = dataclasses.field(default_factory=dict)
+    # local op idx -> GLOBAL critical-path height: a cut value's local
+    # height ends at the send, but its consumers on other cores continue
+    # the path — without this the list scheduler starves cut producers
+    op_height: dict[int, int] = dataclasses.field(default_factory=dict)
+    # channel row id -> estimated global arrival cycle (ETA), measured by
+    # a prior lockstep timing probe. The scheduler treats recv'd values
+    # as ready no earlier than the ETA, so remote-dependent ops are
+    # scheduled where their data can actually be — own work fills the
+    # gap instead of a head-of-line flow-control stall
+    row_eta: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def empty(self) -> bool:
+        return not self.recv_slots and not self.send_ops
 
 
 @dataclasses.dataclass
@@ -96,6 +149,9 @@ class VLIWProgram:
     root_loc: tuple[int, int]            # (row, bank) of the root in data memory
     n_useful_ops: int
     stats: dict = dataclasses.field(default_factory=dict)
+    # multi-core only: channel row id -> [(position, bank, reg), ...] —
+    # the register cells the window snapshots when the row's SEND issues
+    send_specs: dict[int, list] = dataclasses.field(default_factory=dict)
 
     @property
     def num_cycles(self) -> int:
@@ -149,6 +205,10 @@ class DenseProgram:
     root: int                   # SSA id of the root value
     cycles: int                 # source VLIW cycle count (throughput acct.)
     n_useful_ops: int           # arithmetic ops excluding decode-time fwds
+    # leaf column feeding each input cell; None means ``arange(m_ind)``
+    # (single-core). Multi-core merged programs duplicate leaf cells per
+    # core, so several cells may map to one leaf column.
+    input_slots: np.ndarray | None = None
 
     @property
     def n_ops(self) -> int:

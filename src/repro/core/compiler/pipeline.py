@@ -19,6 +19,21 @@ by the paper:
 The register file is a compiler-managed resource: rows ``[0, load_region)``
 stage vector loads (leaf inputs + reloads), rows ``[load_region, R)`` hold
 per-bank allocated intermediates.
+
+Multi-core programs (``comm`` argument, see
+:mod:`repro.core.multicore`) add two compiler duties:
+
+5. *communication scheduling* — cut values whose consumers live on other
+   cores are pinned in registers until their shared-register-window row
+   is complete, then flushed with a ``SEND`` on the network-interface
+   port; remote values are ``RECV``-ed into load-region rows (window
+   rows are re-readable, so eviction/reload works as for leaf rows);
+6. *deadlock-freedom ordering* — an op reading remote values of
+   producer binary level ``λ`` may only issue after every local send
+   row of level ``≤ λ`` has issued. Channel rows are level-homogeneous,
+   so this grading makes lockstep execution provably deadlock-free (a
+   frozen core always awaits a strictly lower level than anything it
+   still owes, and the minimal awaited level is always deliverable).
 """
 from __future__ import annotations
 
@@ -34,6 +49,12 @@ from . import isa, regalloc, treepack
 
 _NOWHERE, _MEM, _REG, _PENDING = 0, 1, 2, 3
 _ALL_BANKS = -1  # write_res sentinel: vector load occupies every bank
+_INF = 1 << 60
+
+#: pseudo data-memory row space for interconnect channel rows — a recv
+#: slot "lives" at row ``RECV_BASE + channel_row_id`` so the on-demand
+#: load machinery (want/prefetch/evict/reload) applies unchanged
+RECV_BASE = 1 << 20
 
 # TensorProgram opcode -> PE opcode (the compiler is semiring-agnostic:
 # scheduling only looks at the dependence structure, not the op identity)
@@ -42,11 +63,15 @@ _PE_OF_OPCODE = {OP_SUM: isa.PE_ADD, OP_PROD: isa.PE_MUL, OP_MAX: isa.PE_MAX}
 
 class _Scheduler:
     def __init__(self, prog: TensorProgram, cfg: ProcessorConfig, *,
-                 load_region: int, candidate_scan: int, max_cycles: int):
+                 load_region: int, candidate_scan: int, max_cycles: int,
+                 comm: isa.CommSpec | None = None, store_root: bool = True):
         self.prog, self.cfg = prog, cfg
         self.load_region = load_region
         self.candidate_scan = candidate_scan
         self.max_cycles = max_cycles
+        self.comm = comm if comm is not None and not comm.empty else None
+        self.store_root = store_root
+        self.last_commit = 0
         m, n = prog.m, prog.n_ops
         self.m, self.n = m, n
         self.b, self.c, self.opcode = prog.b, prog.c, prog.opcode
@@ -59,13 +84,24 @@ class _Scheduler:
         self.refcnt = np.array([len(cs) for cs in self.consumers], np.int64)
         self.root_op = prog.root_slot - m
         assert self.root_op >= 0
-        self.refcnt[prog.root_slot] += 1          # epilogue store
+        if store_root:
+            self.refcnt[prog.root_slot] += 1      # epilogue store
         self.height = np.ones(n, np.int64)
         for j in range(n - 1, -1, -1):
             for s in (self.b[j], self.c[j]):
                 if s >= m:
                     self.height[s - m] = max(self.height[s - m],
                                              self.height[j] + 1)
+        if self.comm:
+            # cut values: the critical path continues on the consumer
+            # cores — schedule by the global height, not the local stub
+            for i, h in self.comm.op_height.items():
+                self.height[i] = max(self.height[i], h)
+            for j in range(n - 1, -1, -1):
+                for s in (self.b[j], self.c[j]):
+                    if s >= m:
+                        self.height[s - m] = max(self.height[s - m],
+                                                 self.height[j] + 1)
         # segment scheduler's fusion chains: op -> same-opcode single
         # consumer (-1 where the chain stops). Bundle growth climbs these
         # chains directly, so a whole k-ary reduction issues as one
@@ -80,8 +116,11 @@ class _Scheduler:
                      for i in range(n)]
 
         # leaf layout ------------------------------------------------------
+        recv_slots = self.comm.recv_slots if self.comm else {}
+        fixed = {s: pos for s, (_row, pos) in recv_slots.items()}
         (self.leaf_bank, self.leaf_row, self.n_in_rows,
-         self.images) = regalloc.layout_leaves(prog, cfg)
+         self.images) = regalloc.layout_leaves(prog, cfg,
+                                               fixed_banks=fixed or None)
 
         # value state ------------------------------------------------------
         self.state = np.zeros(m + n, np.int8)
@@ -89,7 +128,10 @@ class _Scheduler:
         self.reg_of: dict[int, tuple[int, int]] = {}
         self.mem_of: dict[int, tuple[int, int]] = {
             s: (int(self.leaf_row[s]), int(self.leaf_bank[s]))
-            for s in range(m)}
+            for s in range(m) if s not in recv_slots}
+        # recv slots live in window rows of the pseudo channel row space
+        for s, (row, pos) in recv_slots.items():
+            self.mem_of[s] = (RECV_BASE + row, pos)
         self.ready_cycle = np.full(m + n, 1 << 60, np.int64)
 
         # op readiness -----------------------------------------------------
@@ -110,20 +152,61 @@ class _Scheduler:
         # data-memory rows ---------------------------------------------------
         self.mem_row_slots: dict[int, list[int]] = defaultdict(list)
         for s in range(m):
-            self.mem_row_slots[int(self.leaf_row[s])].append(s)
+            self.mem_row_slots[self.mem_of[s][0]].append(s)
         self.mem_free_rows = list(range(cfg.data_mem_rows - 1,
                                         self.n_in_rows - 1, -1))
         self.want_rows: dict[int, int] = {}
-        # leaf-row prefetch order: by first consuming op
+        # leaf/window-row prefetch order: by first consuming op (recv rows
+        # prefetch through the comm port, leaf rows through the mem port)
         first_use = {}
         for i in range(n):
             for s in (self.b[i], self.c[i]):
                 if s < m:
-                    r = int(self.leaf_row[s])
+                    r = self.mem_of[s][0]
                     if r not in first_use:
                         first_use[r] = i
-        self.prefetch = sorted(first_use, key=lambda r: first_use[r])
+        order = sorted(first_use, key=lambda r: first_use[r])
+        self.prefetch = [r for r in order if r < RECV_BASE]
         self.prefetch_ptr = 0
+        self.recv_prefetch = [r for r in order if r >= RECV_BASE]
+        self.recv_prefetch_ptr = 0
+
+        # communication state -------------------------------------------------
+        # producer side: per channel row, remaining un-issued members,
+        # latest member commit cycle, and the member -> (bank, reg) spec
+        self.send_rows_of_op: dict[int, list] = {}
+        self.row_members: dict[int, list] = {}       # row -> [(op, pos), ...]
+        self.row_remaining: dict[int, int] = {}
+        self.row_commit: dict[int, int] = {}
+        self.send_ready: list[tuple[int, int, int]] = []   # (commit, lvl, row)
+        self.send_pinned: set[int] = set()           # slots held for a send
+        self.send_pin_count: dict[int, int] = defaultdict(int)
+        self.unsent_level_count: dict[int, int] = defaultdict(int)
+        self.send_specs: dict[int, list] = {}
+        self.recv_level = {s: self.comm.row_level[row]
+                           for s, (row, _pos) in recv_slots.items()} \
+            if self.comm else {}
+        # per-op gate level: the highest recv-row level among its operands
+        # (-1 = no remote operand). Gated ops are skipped in the candidate
+        # scan without consuming scan budget, or they would starve the
+        # very ops whose sends will eventually unblock them.
+        self.op_gate_level = np.full(n, -1, np.int64)
+        for s, lvl in self.recv_level.items():
+            for i in self.consumers[s]:
+                self.op_gate_level[i] = max(self.op_gate_level[i], lvl)
+        if self.comm:
+            for op, entries in self.comm.send_ops.items():
+                self.send_rows_of_op[op] = list(entries)
+                # pin the value until every destination's send has issued
+                self.refcnt[m + op] += len(entries)
+                self.send_pinned.add(m + op)
+                self.send_pin_count[m + op] = len(entries)
+                for (row, pos) in entries:
+                    self.row_members.setdefault(row, []).append((op, pos))
+            for row, members in self.row_members.items():
+                self.row_remaining[row] = len(members)
+                self.row_commit[row] = 0
+                self.unsent_level_count[self.comm.row_level[row]] += 1
 
         # intermediate registers ---------------------------------------------
         self.bank_free: list[list[int]] = [
@@ -202,6 +285,65 @@ class _Scheduler:
             if row not in self.resident_mem_rows:
                 self.want_rows[row] = max(self.want_rows.get(row, -1), prio)
 
+    # ---------------- communication -------------------------------------- #
+    def _min_unsent_level(self) -> int:
+        """Lowest producer level among this core's un-issued send rows."""
+        levels = [lv for lv, cnt in self.unsent_level_count.items() if cnt]
+        return min(levels) if levels else _INF
+
+    def _recv_gated(self, slot: int) -> bool:
+        """The deadlock-freedom rule: reading remote level-λ data requires
+        all own send rows of level ≤ λ to have issued already."""
+        lvl = self.recv_level.get(slot)
+        return lvl is not None and self._min_unsent_level() <= lvl
+
+    def _note_send_member_issued(self, op: int, commit: int) -> None:
+        for (row, _pos) in self.send_rows_of_op.get(op, ()):
+            self.row_commit[row] = max(self.row_commit[row], commit)
+            self.row_remaining[row] -= 1
+            if self.row_remaining[row] == 0:
+                heapq.heappush(self.send_ready,
+                               (self.row_commit[row],
+                                self.comm.row_level[row], row))
+
+    def pop_ready_send(self) -> isa.MemInstr | None:
+        """Flush the lowest-level complete window row, if any."""
+        ready: list[tuple[int, int]] = []
+        while self.send_ready and self.send_ready[0][0] <= self.t:
+            _, lvl, row = heapq.heappop(self.send_ready)
+            if self.row_commit[row] > self.t:
+                # a member moved banks since completion (copy) — its new
+                # cell commits later; re-arm at the updated commit cycle
+                heapq.heappush(self.send_ready,
+                               (self.row_commit[row], lvl, row))
+                continue
+            ready.append((lvl, row))
+        if not ready:
+            return None
+        ready.sort()
+        lvl, row = ready[0]
+        for (_l, r) in ready[1:]:      # push the rest back, commit passed
+            heapq.heappush(self.send_ready, (self.t, _l, r))
+        spec = []
+        for (op, pos) in self.row_members[row]:
+            bank, reg = self.reg_of[self.m + op]
+            spec.append((pos, bank, reg))
+        self.send_specs[row] = spec
+        self.unsent_level_count[lvl] -= 1
+        # release the pins; a value sent to every destination whose local
+        # consumers are also done frees its register cell
+        for (op, _pos) in self.row_members[row]:
+            s = self.m + op
+            self.send_pin_count[s] -= 1
+            if self.send_pin_count[s] == 0:
+                self.send_pinned.discard(s)
+            self.refcnt[s] -= 1
+            if self.refcnt[s] == 0:
+                self.free_cell(s)
+                self.refcnt[s] = -1
+        self.stats["sends"] = self.stats.get("sends", 0) + 1
+        return isa.MemInstr("send", row, -1)
+
     # ---------------- memory ops ---------------------------------------- #
     def evict_load_row(self) -> int | None:
         best, best_key = None, None
@@ -229,11 +371,13 @@ class _Scheduler:
         return best
 
     def issue_load(self, mrow: int) -> isa.MemInstr | None:
+        is_recv = mrow >= RECV_BASE
         if mrow in self.resident_mem_rows:
             self.want_rows.pop(mrow, None)
             return None
-        if self.write_res[self.t + 1]:   # vload writes every bank at t+1
-            return None
+        if not is_recv and self.write_res[self.t + 1]:
+            return None   # vload writes every bank at t+1; recv rows land
+            # through the window's dedicated fill port instead
         if self.free_load_rows:
             rrow = self.free_load_rows.pop()
         else:
@@ -243,16 +387,27 @@ class _Scheduler:
         self.loaded_row_of[rrow] = mrow
         self.resident_mem_rows.add(mrow)
         self.row_loaded_at[rrow] = self.t
-        self.write_res[self.t + 1].add(_ALL_BANKS)
+        self.last_commit = max(self.last_commit, self.t + 1)
+        if not is_recv:
+            self.write_res[self.t + 1].add(_ALL_BANKS)
+        # recv rows become readable at max(landing, interconnect ETA):
+        # scheduling consumers at the measured arrival converts lockstep
+        # flow-control stalls into overlapped local work
+        at = self.t + 1
+        if is_recv:
+            at = max(at, self.comm.row_eta.get(mrow - RECV_BASE, 0))
         live = 0
         for s in self.mem_row_slots[mrow]:
             if self.refcnt[s] > 0 and not self.mat(s):
                 bank = self.mem_of[s][1]
-                self.mark_materialized(s, bank, rrow, self.t + 1)
+                self.mark_materialized(s, bank, rrow, at)
                 self.row_slots[rrow].append(s)
                 live += 1
         self.row_live[rrow] = live
         self.want_rows.pop(mrow, None)
+        if is_recv:
+            self.stats["recvs"] = self.stats.get("recvs", 0) + 1
+            return isa.MemInstr("recv", mrow - RECV_BASE, rrow)
         self.stats["loads"] += 1
         return isa.MemInstr("load", mrow, rrow)
 
@@ -267,6 +422,10 @@ class _Scheduler:
             if self.pending_rows[reg]:
                 continue
             if any(self.ready_cycle[s] > self.t for s in slots):
+                continue
+            # values awaiting a SEND must stay in their register cells —
+            # the window snapshots them when the row flushes
+            if any(s in self.send_pinned for s in slots):
                 continue
             key = self.row_last_use.get(reg, 0)
             if best_key is None or key < best_key:
@@ -370,6 +529,8 @@ class _Scheduler:
                    buddy: treepack.Buddy, ti: isa.TreeInstr,
                    reads_cycle: dict[int, int]) -> bool:
         """Move ``slot`` to a different bank via a FWD-only level-1 PE."""
+        if self._recv_gated(slot):
+            return False   # gated remote values may not be consumed yet
         src_bank, src_reg = self.reg_of[slot]
         prev = reads_cycle.get(src_bank)
         if prev is not None and prev != src_reg:
@@ -419,6 +580,13 @@ class _Scheduler:
         self.cell_slot[(bk, reg)] = slot
         self.pending_rows[reg] += 1
         heapq.heappush(self.pending_heap, (commit, reg))
+        self.last_commit = max(self.last_commit, commit)
+        # a send-pinned value that moved banks commits later in its new
+        # cell — push the window snapshot past the copy's commit
+        if slot in self.send_pinned:
+            for (row, _pos) in self.send_rows_of_op.get(slot - self.m, ()):
+                if row not in self.send_specs:
+                    self.row_commit[row] = max(self.row_commit[row], commit)
         self.stats["copies"] = self.stats.get("copies", 0) + 1
         return True
 
@@ -445,6 +613,11 @@ class _Scheduler:
                     inside[kid["op"]] += 1
                 collect(kid)
         collect(tree_dict)
+
+        # deadlock-freedom gate: remote values may only be consumed after
+        # every lower-or-equal-level send of our own has issued
+        if self.recv_level and any(self._recv_gated(s) for s in reads):
+            return []
 
         # crossbar feasibility (≤1 address per bank per cycle, broadcast ok)
         local_banks: dict[int, int] = {}
@@ -516,8 +689,11 @@ class _Scheduler:
             self.write_res[commit].add(bk)
             self.cell_slot[(bk, reg)] = m + j
             self.mark_materialized(m + j, bk, reg, commit)
+            if j in self.send_rows_of_op:
+                self._note_send_member_issued(j, commit)
             self.pending_rows[reg] += 1
             heapq.heappush(self.pending_heap, (commit, reg))
+            self.last_commit = max(self.last_commit, commit)
         ti.op_ids.extend(ops)
         self.stats["bundles"] += 1
         self.stats["bundle_ops"] += len(ops)
@@ -579,6 +755,7 @@ class _Scheduler:
             need_spill = False
 
             cand = sorted(self.active.items(), key=lambda kv: kv[1])
+            min_unsent = self._min_unsent_level() if self.comm else _INF
             for tree in range(cfg.num_trees):
                 buddy = treepack.Buddy(cfg.tree_levels)
                 ti = isa.TreeInstr(tree=tree)
@@ -588,6 +765,8 @@ class _Scheduler:
                         break
                     if self.issued[op]:
                         continue
+                    if self.op_gate_level[op] >= min_unsent:
+                        continue   # gated remote read: free skip
                     scanned += 1
                     ops, pressure = self.try_issue(op, tree, buddy, ti,
                                                    reads_cycle)
@@ -599,13 +778,46 @@ class _Scheduler:
                     tree_instrs[tree] = ti
                 cand = [(o, p) for (o, p) in cand if not self.issued[o]]
 
+            # comm slot (network-interface port): completed sends flush
+            # first (the deadlock-freedom rule wants low levels out early),
+            # then demanded window recvs, then recv prefetch
+            comm_instr = None
+            if self.comm:
+                comm_instr = self.pop_ready_send()
+                if comm_instr is None:
+                    row, best = None, -1
+                    for r, p in self.want_rows.items():
+                        if r >= RECV_BASE and p > best:
+                            best, row = p, r
+                    if row is not None:
+                        comm_instr = self.issue_load(row)
+                if comm_instr is None:
+                    while self.recv_prefetch_ptr < len(self.recv_prefetch):
+                        row = self.recv_prefetch[self.recv_prefetch_ptr]
+                        if row in self.resident_mem_rows:
+                            self.recv_prefetch_ptr += 1
+                            continue
+                        # only prefetch into a clean row (don't thrash) —
+                        # unless the machine is otherwise idle, where
+                        # eviction is the only way forward (the load
+                        # region can be smaller than leaf + window rows)
+                        if self.free_load_rows or not issued_now:
+                            comm_instr = self.issue_load(row)
+                            if comm_instr:
+                                self.recv_prefetch_ptr += 1
+                        break
+
             # memory slot: spill > wanted reload > leaf prefetch
             mem_instr = None
             if need_spill:
                 mem_instr = self.spill_intermediate()
-            if mem_instr is None and self.want_rows:
-                row = max(self.want_rows.items(), key=lambda kv: kv[1])[0]
-                mem_instr = self.issue_load(row)
+            if mem_instr is None:
+                row, best = None, -1
+                for r, p in self.want_rows.items():
+                    if r < RECV_BASE and p > best:
+                        best, row = p, r
+                if row is not None:
+                    mem_instr = self.issue_load(row)
             if mem_instr is None and not self.write_res[t + 1]:
                 while self.prefetch_ptr < len(self.prefetch):
                     row = self.prefetch[self.prefetch_ptr]
@@ -613,7 +825,10 @@ class _Scheduler:
                         self.prefetch_ptr += 1
                         continue
                     # only prefetch if a clean row is free (don't thrash)
-                    if self.free_load_rows:
+                    # — unless the machine is idle and prefetch is the
+                    # only way to feed starved ops (multi-core programs
+                    # can have more leaf + window rows than load rows)
+                    if self.free_load_rows or not issued_now:
                         mem_instr = self.issue_load(row)
                         if mem_instr:
                             self.prefetch_ptr += 1
@@ -631,12 +846,22 @@ class _Scheduler:
                         self.free_cell(s)
                         self.refcnt[s] = -1   # freed once
 
-            self.instrs.append(isa.VLIWInstr(trees=tree_instrs, mem=mem_instr))
+            self.instrs.append(isa.VLIWInstr(trees=tree_instrs, mem=mem_instr,
+                                             comm=comm_instr))
             copies_done = any(ti and ti.writes and not ti.op_ids
                               for ti in tree_instrs)
-            if not issued_now and mem_instr is None and not copies_done:
+            if (not issued_now and mem_instr is None and comm_instr is None
+                    and not copies_done):
                 self.stats["stall_cycles"] += 1
-                stalled += 1
+                if self.comm and any(self.state[s] == _PENDING
+                                     and self.ready_cycle[s] > t
+                                     for s in self.recv_level):
+                    # an ETA-scheduled remote row is still on its way —
+                    # this idle cycle is the schedule working as designed,
+                    # not a deadlock (max_cycles still bounds the wait)
+                    stalled = 0
+                else:
+                    stalled += 1
                 if stalled > 256 + cfg.tree_levels:
                     raise RuntimeError(
                         f"deadlock at cycle {t}: {self.remaining} ops left, "
@@ -655,41 +880,67 @@ class _Scheduler:
             self.t += 1
             self.write_res.pop(t, None)
 
-        # epilogue: wait for root commit, store its row
+        # epilogue: flush remaining sends, then either store the root row
+        # (root-owning cores) or just drain the pipeline — a multi-core
+        # worker's outputs are its SENDs, so waiting for a pseudo-root
+        # commit and storing it would be pure fixed overhead on streams
+        # a quarter the single-core length
         root_slot = prog.root_slot
-        t_end = int(self.ready_cycle[root_slot])
-        while self.t < t_end:
-            self.instrs.append(isa.VLIWInstr(trees=[None] * cfg.num_trees))
+        t_end = (int(self.ready_cycle[root_slot]) if self.store_root
+                 else self.last_commit)
+
+        def unsent() -> bool:
+            return any(self.unsent_level_count.values())
+
+        while self.t < t_end or unsent():
+            ci = self.pop_ready_send() if self.comm else None
+            self.instrs.append(isa.VLIWInstr(trees=[None] * cfg.num_trees,
+                                             comm=ci))
             self.t += 1
-        root_bank, root_reg = self.reg_of[root_slot]
-        out_row = self._alloc_root_row()
-        self.instrs.append(isa.VLIWInstr(
-            trees=[None] * cfg.num_trees,
-            mem=isa.MemInstr("store", out_row, root_reg)))
-        self.stats["stores"] += 1
-        self.t += 1
+        if self.store_root:
+            root_bank, root_reg = self.reg_of[root_slot]
+            out_row = self._alloc_root_row()
+            self.instrs.append(isa.VLIWInstr(
+                trees=[None] * cfg.num_trees,
+                mem=isa.MemInstr("store", out_row, root_reg)))
+            self.stats["stores"] += 1
+            self.t += 1
+        else:
+            out_row, root_bank = -1, -1
+            while self.t <= self.last_commit:    # drain pipelined commits
+                self.instrs.append(
+                    isa.VLIWInstr(trees=[None] * cfg.num_trees))
+                self.t += 1
 
         self.stats["cycles"] = self.t
         self.stats["n_in_rows"] = self.n_in_rows
         self.stats["ops_per_cycle"] = self.n / self.t
+        # indicator slots that are recv'd from another core have no input
+        # row; the multi-core runtime feeds them over the interconnect
+        recv_slots = self.comm.recv_slots if self.comm else {}
         return isa.VLIWProgram(
             instrs=self.instrs,
             input_rows=self.n_in_rows,
             input_layout=[(int(self.leaf_row[s]), int(self.leaf_bank[s]))
-                          for s in range(prog.m_ind)],
+                          for s in range(prog.m_ind)
+                          if s not in recv_slots],
             const_rows={r: self.images[r].tolist()
                         for r in range(self.n_in_rows)},
             root_loc=(out_row, root_bank),
             n_useful_ops=self.n,
-            stats=dict(self.stats))
+            stats=dict(self.stats),
+            send_specs=self.send_specs)
 
 
 def compile_program(prog: TensorProgram, cfg: ProcessorConfig, *,
                     load_region: int = 16, candidate_scan: int = 24,
-                    max_cycles: int = 4_000_000) -> isa.VLIWProgram:
+                    max_cycles: int = 4_000_000,
+                    comm: isa.CommSpec | None = None,
+                    store_root: bool = True) -> isa.VLIWProgram:
     # the load region stages vector rows; it must leave intermediate
     # registers in every bank or no op output can ever be written back
     load_region = max(1, min(load_region, cfg.regs_per_bank // 2))
     return _Scheduler(prog, cfg, load_region=load_region,
                       candidate_scan=candidate_scan,
-                      max_cycles=max_cycles).run()
+                      max_cycles=max_cycles, comm=comm,
+                      store_root=store_root).run()

@@ -20,7 +20,8 @@ from ..program import TensorProgram
 from ..processor.config import ProcessorConfig
 
 
-def layout_leaves(prog: TensorProgram, cfg: ProcessorConfig):
+def layout_leaves(prog: TensorProgram, cfg: ProcessorConfig,
+                  fixed_banks: dict[int, int] | None = None):
     """Color leaf slots onto banks; returns (bank_of, row_of, n_rows, images).
 
     ``images`` is the (n_rows, banks) float32 constant image of the input
@@ -33,8 +34,15 @@ def layout_leaves(prog: TensorProgram, cfg: ProcessorConfig):
     read *clique* (≤1 address per bank per cycle). Without the clique the
     scheduler's whole-segment bundles would immediately trip crossbar
     conflicts and fall back to fragmented issue.
+
+    ``fixed_banks`` pre-pins slots whose bank the compiler may not
+    choose — multi-core recv slots land in the bank equal to their
+    position in the shared-register-window row. Pinned slots still
+    participate in the conflict graph (free slots are steered away from
+    their banks) but get ``row_of = -1`` and no input-image cell.
     """
     m = prog.m
+    fixed_banks = fixed_banks or {}
     conflicts: dict[int, set[int]] = defaultdict(set)
     for i in range(prog.n_ops):
         b, c = int(prog.b[i]), int(prog.c[i])
@@ -52,8 +60,12 @@ def layout_leaves(prog: TensorProgram, cfg: ProcessorConfig):
 
     order = sorted(range(m), key=lambda s: -len(conflicts.get(s, ())))
     bank_of = np.full(m, -1, np.int32)
+    for s, bk in fixed_banks.items():
+        bank_of[s] = bk
     load = np.zeros(cfg.banks, np.int64)
     for s in order:
+        if s in fixed_banks:
+            continue
         banned = {int(bank_of[x]) for x in conflicts.get(s, ()) if bank_of[x] >= 0}
         # least-loaded bank, strongly preferring conflict-free ones
         best, best_key = 0, None
@@ -64,9 +76,11 @@ def layout_leaves(prog: TensorProgram, cfg: ProcessorConfig):
         bank_of[s] = best
         load[best] += 1
 
-    row_of = np.zeros(m, np.int32)
+    row_of = np.full(m, -1, np.int32)
     counter = np.zeros(cfg.banks, np.int64)
     for s in range(m):
+        if s in fixed_banks:
+            continue
         bk = int(bank_of[s])
         row_of[s] = counter[bk]
         counter[bk] += 1

@@ -1,0 +1,39 @@
+"""Multi-core SPN processor subsystem.
+
+The paper's processor is a single datapath; its successors (AIA's
+multi-core RISC-V SoC with inter-core register sharing, REASON's
+scalable probabilistic-reasoning fabric) replicate the core and
+partition the SPN DAG across the replicas. This package supplies the
+whole stack for that step:
+
+- :mod:`partition` — level-aware balanced min-cut of the fused-node DAG
+  onto N cores,
+- :mod:`comm`      — the modeled interconnect: level-homogeneous channel
+  rows over AIA-style shared-register windows, with cycle-accounted
+  transfer latency,
+- :mod:`compile`   — per-core :class:`TensorProgram` extraction + VLIW
+  compilation with explicit SEND/RECV rows,
+- :mod:`sim`       — lockstep cycle-accurate simulation of all cores
+  (flow-control stalls, barrier accounting),
+- :mod:`fastsim`   — merged dense decode of every core's stream into ONE
+  vectorized numpy program, bit-identical to the checked sim.
+
+The ``vliw-mc`` substrate (:mod:`repro.runtime.substrates`) packages it
+for serving: throughput becomes a function of ``cores=N`` instead of a
+single-datapath constant.
+"""
+from .comm import (ChannelRow, CommPlan, Interconnect, InterconnectConfig,
+                   build_comm_plan)
+from .compile import CorePlan, MultiCoreProgram, build_core_programs, \
+    compile_multicore
+from .fastsim import decode_multicore
+from .partition import Partition, partition_ops, validate_partition
+from .sim import MCSimResult, simulate_multicore
+
+__all__ = [
+    "ChannelRow", "CommPlan", "Interconnect", "InterconnectConfig",
+    "build_comm_plan", "CorePlan", "MultiCoreProgram",
+    "build_core_programs", "compile_multicore", "decode_multicore",
+    "Partition", "partition_ops", "validate_partition",
+    "MCSimResult", "simulate_multicore",
+]

@@ -1,0 +1,193 @@
+"""Inter-core communication model: shared-register-window channel rows.
+
+Cut values (fused-node outputs consumed on another core) travel as
+*channel rows* — vectors of up to ``banks`` values between one (src,
+dst) core pair, all produced at one binary level. The producer's window
+hardware latches each value at writeback commit (AIA-style register
+sharing — no bank gather needed), the compiler's explicit ``SEND`` row
+flushes the completed window row onto the link, and the consumer's
+``RECV`` row maps it into its register file (member position *i* lands
+in bank *i*, full/empty bits stall a PE read that arrives early).
+
+Level-homogeneous rows are a correctness feature, not just a packing
+choice: together with the compiler's send-before-dependent-read rule
+they give the lockstep schedule a strictly decreasing wait-level
+ordering, which is what makes it deadlock-free (see
+:mod:`repro.core.compiler.pipeline`).
+
+Transfer latency is cycle-accounted per row:
+``hop_latency(src, dst) + ceil(members / link_width)`` — a flat crossbar
+by default (``hops=1``); ring distances model cheaper NoCs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..program import TensorProgram
+from .partition import Partition
+
+
+@dataclasses.dataclass(frozen=True)
+class InterconnectConfig:
+    """Modeled interconnect between cores."""
+    name: str = "xbar"
+    topology: str = "xbar"      # "xbar" (flat) | "ring"
+    hop_latency: int = 1        # cycles per hop, SEND issue -> visibility
+    link_width: int = 32        # values serialized per cycle per link
+    row_capacity: int = 32      # max values per channel row (≤ banks)
+
+    def hops(self, src: int, dst: int, n_cores: int) -> int:
+        if self.topology == "ring" and n_cores > 1:
+            d = abs(src - dst)
+            return min(d, n_cores - d)
+        return 1
+
+    def transfer_cycles(self, members: int, src: int = 0, dst: int = 1,
+                        n_cores: int = 2) -> int:
+        serial = -(-members // self.link_width)
+        return self.hops(src, dst, n_cores) * self.hop_latency + serial
+
+    def fingerprint(self) -> str:
+        return (f"{self.topology}/hop={self.hop_latency}"
+                f"/w={self.link_width}/cap={self.row_capacity}")
+
+
+XBAR = InterconnectConfig()
+
+
+@dataclasses.dataclass
+class ChannelRow:
+    """One shared-register-window row: src -> dst, level-homogeneous."""
+    row_id: int
+    src: int                    # effective core indices
+    dst: int
+    level: int                  # binary level of every member's producer
+    gids: list                  # member global op ids (position = bank)
+
+
+@dataclasses.dataclass
+class CommPlan:
+    """All channel rows of one partition + their latency accounting."""
+    rows: list                              # [ChannelRow, ...]
+    icfg: InterconnectConfig
+    n_cores: int
+    # (gid, dst core) -> (row_id, position): consumer-side lookup
+    value_pos: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def members(self) -> dict:
+        return {r.row_id: len(r.gids) for r in self.rows}
+
+    @property
+    def volume(self) -> int:
+        """Values crossed per batch (multicast unrolled)."""
+        return sum(len(r.gids) for r in self.rows)
+
+    def latency(self, row: ChannelRow) -> int:
+        return self.icfg.transfer_cycles(len(row.gids), row.src, row.dst,
+                                         self.n_cores)
+
+    def stats(self) -> dict:
+        return {"rows": len(self.rows), "values": self.volume,
+                "interconnect": self.icfg.fingerprint()}
+
+
+def build_comm_plan(prog: TensorProgram, part: Partition,
+                    core_index: dict, icfg: InterconnectConfig = XBAR,
+                    banks: int = 32,
+                    heights: np.ndarray | None = None) -> CommPlan:
+    """Group the partition's cut values into channel rows.
+
+    ``core_index`` maps partition core ids to effective (compacted) core
+    indices — empty cores own nothing and are dropped by the compiler.
+    ``heights`` are the global critical-path heights (computed by the
+    caller when it already has them — the per-core builder shares them
+    with the scheduler priorities, so the chunking order and the issue
+    order can never silently diverge).
+    """
+    m = prog.m
+    cap = min(icfg.row_capacity, banks)
+    # (src, dst, level) -> [gid, ...] in ascending gid order
+    groups: dict[tuple[int, int, int], list[int]] = {}
+    seen: set[tuple[int, int]] = set()
+    for i in range(prog.n_ops):
+        ci = int(part.core_of_op[i])
+        for s in (int(prog.b[i]), int(prog.c[i])):
+            if s < m:
+                continue
+            g = s - m
+            cg = int(part.core_of_op[g])
+            if cg == ci or (g, ci) in seen:
+                continue
+            seen.add((g, ci))
+            key = (core_index[cg], core_index[ci], int(part.op_level[g]))
+            groups.setdefault(key, []).append(g)
+
+    # chunk each group in descending global-height order: the values the
+    # consumer's critical path needs first are produced first (the list
+    # scheduler prioritizes by height), so the first row of a group
+    # completes — and ships — earliest
+    gh = heights if heights is not None else global_heights(prog)
+
+    rows: list[ChannelRow] = []
+    value_pos: dict[tuple[int, int], tuple[int, int]] = {}
+    for (src, dst, level) in sorted(groups):
+        gids = sorted(groups[(src, dst, level)],
+                      key=lambda g: (-int(gh[g]), g))
+        for lo in range(0, len(gids), cap):
+            chunk = gids[lo: lo + cap]
+            row = ChannelRow(row_id=len(rows), src=src, dst=dst,
+                             level=level, gids=chunk)
+            rows.append(row)
+            for pos, g in enumerate(chunk):
+                value_pos[(g, dst)] = (row.row_id, pos)
+    return CommPlan(rows=rows, icfg=icfg, n_cores=len(core_index) or 1,
+                    value_pos=value_pos)
+
+
+def global_heights(prog: TensorProgram) -> np.ndarray:
+    """(n_ops,) critical-path height of every binary op (1 = the root)."""
+    m = prog.m
+    gh = np.ones(max(prog.n_ops, 1), np.int64)
+    for j in range(prog.n_ops - 1, -1, -1):
+        for s in (int(prog.b[j]), int(prog.c[j])):
+            if s >= m:
+                gh[s - m] = max(gh[s - m], gh[j] + 1)
+    return gh
+
+
+class Interconnect:
+    """Runtime window state shared by the lockstep simulator's cores.
+
+    Arrived rows stay readable (window memory, AIA register-sharing
+    semantics), so consumers may evict and re-RECV a row freely.
+    """
+
+    def __init__(self, plan: CommPlan):
+        self.plan = plan
+        self._members = plan.members
+        self._latency = {r.row_id: plan.latency(r) for r in plan.rows}
+        self.rows: dict[int, tuple[int, np.ndarray]] = {}
+        self.sends = 0
+        self.values_sent = 0
+        self.max_resident = 0
+
+    def members(self, row_id: int) -> int:
+        return self._members[row_id]
+
+    def push(self, row_id: int, payload: np.ndarray, now: int) -> None:
+        self.rows[row_id] = (now + self._latency[row_id], payload)
+        self.sends += 1
+        self.values_sent += payload.shape[0]
+        self.max_resident = max(self.max_resident, len(self.rows))
+
+    def arrived(self, row_id: int, now: int):
+        entry = self.rows.get(row_id)
+        if entry is None or entry[0] > now:
+            return None
+        return entry[1]
+
+    def in_transit(self, now: int) -> bool:
+        return any(arr > now for arr, _ in self.rows.values())

@@ -1,0 +1,240 @@
+"""Per-core program extraction and multi-core VLIW compilation.
+
+Each core's share of the partitioned DAG becomes an ordinary
+:class:`~repro.core.program.TensorProgram` whose leaf slots are:
+
+- ``[0, n_ind)``            — the *global indicator leaves* this core
+  actually reads (ascending global slot order, so the compiled
+  ``input_layout`` indexes straight into ``leaf_map`` columns),
+- ``[n_ind, n_ind+n_recv)`` — *recv slots*: values imported from other
+  cores over the interconnect (ordered by channel row/position),
+- params after               — the parameter leaves this core reads.
+
+Because each binary op keeps exactly its original operands (locally
+renumbered), the merged dataflow across all cores is the identical
+f32 DAG the single-core program executes — the root value is
+bit-identical by construction, which the conformance tests assert.
+
+``cores=1`` degenerates to the identity: the local program equals the
+global one slot for slot (same opcode/operand/param arrays; only the
+``sum_weight_groups`` learning metadata is dropped), so the compiled
+stream — and its cycle count — matches the single-core ``vliw-sim``
+substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .. import levelize
+from ..compiler import isa
+from ..compiler.pipeline import compile_program
+from ..processor.config import PTREE, ProcessorConfig
+from ..program import TensorProgram
+from . import comm as comm_mod
+from .comm import XBAR, CommPlan, InterconnectConfig, build_comm_plan
+from .partition import Partition, partition_ops
+
+
+@dataclasses.dataclass
+class CorePlan:
+    """One core's program, leaf wiring and communication spec."""
+    core: int                      # effective core index
+    prog: TensorProgram
+    leaf_map: np.ndarray           # (n_ind,) global indicator slots
+    gid_of_op: np.ndarray          # (n_local_ops,) global op ids
+    comm: isa.CommSpec
+    vprog: isa.VLIWProgram | None = None
+
+
+@dataclasses.dataclass
+class MultiCoreProgram:
+    """Everything the lockstep simulator / merged decoder needs."""
+    prog: TensorProgram            # the global program
+    cfg: ProcessorConfig
+    icfg: InterconnectConfig
+    n_cores: int                   # requested core count
+    cores: list                    # [CorePlan, ...] — effective cores only
+    plan: CommPlan
+    partition: Partition
+    root_core: int                 # index into ``cores``
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_effective(self) -> int:
+        return len(self.cores)
+
+
+def build_core_programs(prog: TensorProgram, part: Partition,
+                        icfg: InterconnectConfig = XBAR,
+                        banks: int = 32) -> tuple[list, CommPlan]:
+    """Extract one TensorProgram (+ CommSpec) per non-empty core."""
+    m_ind, m = prog.m_ind, prog.m
+    used = sorted(int(c) for c in np.unique(part.core_of_op))
+    core_index = {c: i for i, c in enumerate(used)}
+    # one height computation feeds both the row chunking order and the
+    # per-core scheduler priorities — they must agree
+    gh = comm_mod.global_heights(prog)
+    plan = build_comm_plan(prog, part, core_index, icfg, banks=banks,
+                           heights=gh)
+    row_level = {r.row_id: r.level for r in plan.rows}
+    row_size = plan.members
+
+    plans: list[CorePlan] = []
+    root_gid = prog.root_slot - m
+    for pc in used:
+        k = core_index[pc]
+        gids = np.flatnonzero(part.core_of_op == pc)
+        gid_set = set(int(g) for g in gids)
+
+        # leaf slots this core reads ---------------------------------------
+        ind_used: set[int] = set()
+        par_used: set[int] = set()
+        recv_used: set[int] = set()          # remote gids
+        for g in gids:
+            for s in (int(prog.b[g]), int(prog.c[g])):
+                if s < m_ind:
+                    ind_used.add(s)
+                elif s < m:
+                    par_used.add(s)
+                elif (s - m) not in gid_set:
+                    recv_used.add(s - m)
+        leaf_map = np.asarray(sorted(ind_used), np.int64)
+        # recv slots ordered by (row, position) — deterministic and
+        # row-contiguous, which keeps the window layout readable
+        recv_list = sorted(recv_used,
+                           key=lambda g: plan.value_pos[(g, k)])
+        par_list = sorted(par_used)
+
+        n_ind, n_recv = len(leaf_map), len(recv_list)
+        m_ind_loc = n_ind + n_recv
+        m_loc = m_ind_loc + len(par_list)
+        slot_of = {int(s): i for i, s in enumerate(leaf_map)}
+        slot_of.update({m + g: n_ind + i for i, g in enumerate(recv_list)})
+        slot_of.update({int(s): m_ind_loc + i
+                        for i, s in enumerate(par_list)})
+        op_slot = {int(g): m_loc + i for i, g in enumerate(gids)}
+
+        def remap(s: int) -> int:
+            if s < m:                       # leaf (indicator or param)
+                return slot_of[s]
+            g2 = s - m
+            # local op output, or a recv slot for a remote value
+            return op_slot[g2] if g2 in gid_set else slot_of[m + g2]
+
+        b = np.asarray([remap(int(prog.b[g])) for g in gids], np.int32)
+        c = np.asarray([remap(int(prog.c[g])) for g in gids], np.int32)
+
+        perm, new_b, new_c, offsets = levelize.level_sort(b, c, m_loc)
+        gid_perm = gids[perm]
+        opcode = prog.opcode[gid_perm]
+
+        ind_var = np.full(m_ind_loc, -1, np.int32)
+        ind_value = np.full(m_ind_loc, -2, np.int32)
+        ind_var[:n_ind] = prog.ind_var[leaf_map]
+        ind_value[:n_ind] = prog.ind_value[leaf_map]
+        param_values = (prog.param_values[[s - m_ind for s in par_list]]
+                        if par_list else np.zeros(0, np.float64))
+
+        local_op_of_gid = {int(g): i for i, g in enumerate(gid_perm)}
+        if root_gid in gid_set:
+            root_slot = m_loc + local_op_of_gid[root_gid]
+        else:
+            root_slot = m_loc + len(gids) - 1     # highest-level local op
+
+        sub = TensorProgram(
+            m_ind=m_ind_loc, m_param=len(par_list),
+            param_values=np.asarray(param_values, np.float64),
+            opcode=opcode.astype(np.uint8), b=new_b, c=new_c,
+            level_offsets=offsets, root_slot=int(root_slot),
+            ind_var=ind_var, ind_value=ind_value,
+            sum_weight_groups=[])
+        sub.validate()
+
+        recv_slots = {n_ind + i: plan.value_pos[(g, k)]
+                      for i, g in enumerate(recv_list)}
+        send_ops: dict[int, list] = {}
+        for g, i in local_op_of_gid.items():
+            entries = [plan.value_pos[(g, d)] for d in range(len(used))
+                       if (g, d) in plan.value_pos]
+            if entries:
+                send_ops[i] = entries
+        comm = isa.CommSpec(recv_slots=recv_slots, send_ops=send_ops,
+                            row_level=row_level, row_size=row_size,
+                            op_height={i: int(gh[g])
+                                       for g, i in local_op_of_gid.items()})
+        plans.append(CorePlan(core=k, prog=sub, leaf_map=leaf_map,
+                              gid_of_op=gid_perm.astype(np.int64),
+                              comm=comm))
+    return plans, plan
+
+
+def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
+                      n_cores: int = 2, icfg: InterconnectConfig = XBAR,
+                      *, seed: int = 0, strategy: str = "subtree",
+                      eta_iters: int = 2, passes: int = 0,
+                      **compile_kwargs) -> MultiCoreProgram:
+    """Partition, build and VLIW-compile ``prog`` for ``n_cores`` cores.
+
+    After the optimistic first compile, ``eta_iters`` rounds of
+    *timing-probe feedback* run: a 1-row lockstep simulation (cycle
+    counts are value-independent) measures when every channel row
+    actually arrives, and each core is recompiled scheduling its remote
+    reads at those ETAs — local work fills what used to be flow-control
+    stalls. The best-cycle iteration wins (the probe is exact, so this
+    is a monotone ratchet on the real serving cost).
+    """
+    from .sim import simulate_multicore   # local import: cycle avoidance
+
+    part = partition_ops(prog, n_cores, seed=seed, strategy=strategy,
+                         passes=passes)
+    plans, plan = build_core_programs(prog, part, icfg, banks=cfg.banks)
+    root_gid = prog.root_slot - prog.m
+    root_core = next(i for i, cp in enumerate(plans)
+                     if root_gid in set(int(g) for g in cp.gid_of_op))
+
+    def recompile(cp: CorePlan) -> None:
+        # only the root-owning core stores a root row; every other
+        # core's outputs are its SENDs (skipping the pseudo-root store
+        # shaves the fixed epilogue off short worker streams)
+        cp.vprog = compile_program(cp.prog, cfg, comm=cp.comm,
+                                   store_root=(cp.core ==
+                                               plans[root_core].core),
+                                   **compile_kwargs)
+
+    for cp in plans:
+        recompile(cp)
+    mcp = MultiCoreProgram(prog=prog, cfg=cfg, icfg=icfg, n_cores=n_cores,
+                           cores=plans, plan=plan, partition=part,
+                           root_core=root_core)
+
+    probe_leaves = np.ones((1, prog.m_ind), np.float32)
+    best_vprogs, best_res = None, None
+    for it in range(max(0, eta_iters) + 1):
+        res = simulate_multicore(mcp, probe_leaves)
+        if best_res is None or res.cycles < best_res.cycles:
+            best_vprogs = [cp.vprog for cp in plans]
+            best_res = res
+        if it == eta_iters or not plan.rows:
+            break
+        etas = res.comm["row_arrivals"]
+        for cp in plans:
+            cp.comm.row_eta = dict(etas)
+            recompile(cp)
+    for cp, v in zip(plans, best_vprogs):
+        cp.vprog = v
+
+    mcp.meta = {
+        "n_cores": n_cores, "effective_cores": len(plans),
+        "cut_values": part.cut_values,
+        "strategy": part.strategy,
+        "comm": dict(plan.stats(), **best_res.comm),
+        "cycles": best_res.cycles,
+        "core_cycles": [cp.vprog.num_cycles for cp in plans],
+        "core_ops": [int(len(cp.gid_of_op)) for cp in plans],
+        "stall_cycles": best_res.stall_cycles,
+        "barrier_idle": best_res.barrier_idle,
+        "ops_per_cycle": best_res.ops_per_cycle,
+    }
+    return mcp

@@ -1,0 +1,127 @@
+"""Merged dense decode of a multi-core program.
+
+Each core's VLIW stream is replayed symbolically
+(:func:`repro.core.processor.fastsim.symbolic_replay`): SEND rows record
+which SSA value each (channel row, position) exports, RECV rows
+introduce import placeholders. Because every channel value has exactly
+one producer, the per-core graphs stitch together in one resolution
+pass — no lockstep interleaving is needed at decode time — and the
+merged graph is then level-sorted and segmented by the same
+:func:`~repro.core.processor.fastsim.densify` the single-core fast-sim
+uses.
+
+The merged dataflow is, op for op, the global program's binary DAG (the
+partition only renames slots), executed with the same f32 ufuncs — so
+:func:`repro.core.processor.fastsim.run` on the merged program is
+**bit-identical** both to the lockstep checked simulator and to the
+single-core fast-sim oracle. Leaf indicator columns feed multiple
+per-core duplicate cells via ``DenseProgram.input_slots``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..compiler import isa
+from ..processor.config import ProcessorConfig
+from ..processor.fastsim import densify, symbolic_replay
+from ..processor.sim import SimError
+from .compile import MultiCoreProgram
+
+
+def decode_multicore(mcp: MultiCoreProgram,
+                     cfg: ProcessorConfig | None = None,
+                     cycles: int | None = None) -> isa.DenseProgram:
+    """Merge all cores' streams into one :class:`DenseProgram`.
+
+    ``cycles`` should be the lockstep simulator's calibrated global
+    cycle count (stalls included); it defaults to the slowest core's
+    instruction count (a lower bound).
+    """
+    cfg = cfg or mcp.cfg
+    members = mcp.plan.members
+    reps = [symbolic_replay(cp.vprog, cfg, members_of=members)
+            for cp in mcp.cores]
+
+    init_off = np.cumsum([0] + [r.n_init for r in reps])
+    op_off = np.cumsum([0] + [len(r.opcode) for r in reps])
+    n_init = int(init_off[-1])
+
+    def shift(core: int, v: int) -> int:
+        if v < reps[core].n_init:
+            return int(init_off[core]) + v
+        return n_init + int(op_off[core]) + (v - reps[core].n_init)
+
+    exports: dict[tuple[int, int], int] = {}
+    for k, r in enumerate(reps):
+        for key, v in r.exports.items():
+            exports[key] = shift(k, v)
+
+    o_parts, a_parts, b_parts = [], [], []
+    cell_parts, slot_parts = [], []
+    for k, r in enumerate(reps):
+        def resolve(arr: np.ndarray) -> np.ndarray:
+            out = np.empty(len(arr), np.int64)
+            for i, v in enumerate(arr):
+                v = int(v)
+                if v >= 0:
+                    out[i] = shift(k, v)
+                else:
+                    key = r.imports[-v - 1]
+                    if key not in exports:
+                        raise SimError(f"channel value {key} recv'd on core "
+                                       f"{k} but never sent")
+                    out[i] = exports[key]
+            return out
+
+        o_parts.append(r.opcode)
+        a_parts.append(resolve(r.a))
+        b_parts.append(resolve(r.b))
+        cell_parts.append(init_off[k] + r.input_cells)
+        slot_parts.append(mcp.cores[k].leaf_map)
+
+    root = shift(mcp.root_core, reps[mcp.root_core].root)
+    if cycles is None:
+        cycles = max(len(cp.vprog.instrs) for cp in mcp.cores)
+
+    o = np.concatenate(o_parts).astype(np.uint8)
+    a = np.concatenate(a_parts).astype(np.int64)
+    b = np.concatenate(b_parts).astype(np.int64)
+
+    # cross-core operands may point *forward* in the concatenation order;
+    # densify's level computation assumes producers precede consumers, so
+    # topologically re-sort (Kahn — also proves the merged DAG is acyclic)
+    n = len(o)
+    indeg = np.zeros(n, np.int64)
+    adj: list[list[int]] = [[] for _ in range(n)]
+    for i in range(n):
+        for s in (int(a[i]), int(b[i])):
+            if s >= n_init:
+                adj[s - n_init].append(i)
+                indeg[i] += 1
+    queue = [i for i in range(n) if indeg[i] == 0]
+    order: list[int] = []
+    while queue:
+        u = queue.pop()
+        order.append(u)
+        for v in adj[u]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                queue.append(v)
+    if len(order) != n:
+        raise SimError("cycle in merged multi-core dataflow")
+    perm = np.asarray(order, np.int64)
+    new_idx = np.empty(n, np.int64)
+    new_idx[perm] = np.arange(n)
+    remap = lambda x: np.where(x >= n_init, new_idx[np.maximum(x - n_init, 0)]
+                               + n_init, x)
+    o, a, b = o[perm], remap(a[perm]), remap(b[perm])
+    if root >= n_init:
+        root = int(n_init + new_idx[root - n_init])
+
+    return densify(
+        o, a, b, n_init,
+        np.concatenate([r.init_values for r in reps]),
+        np.concatenate(cell_parts).astype(np.int32),
+        root, int(cycles), sum(r.n_useful_ops for r in reps),
+        input_slots=np.concatenate(slot_parts).astype(np.int32)
+        if slot_parts else None)

@@ -1,0 +1,302 @@
+"""Level-aware balanced min-cut partitioning of an SPN program.
+
+The unit of placement is the segment scheduler's *fused node*
+(:func:`repro.core.segments.fusion_info`): a whole k-ary reduction tree
+whose interior values never escape. Cutting inside a fused node would
+turn register-local PE-tree traffic into interconnect traffic, so only
+fused-node *outputs* ever cross cores — the cut values of the partition
+are exactly the fused roots with a consumer on another core.
+
+The objective is the lockstep multi-core schedule's makespan. Two
+placement strategies share the refinement machinery:
+
+- ``"subtree"`` (default) — bottom-up cluster growth in topological
+  order: each fused node joins the core owning its heaviest operand
+  cluster unless that core is full, so whole SPN subtrees stay
+  core-local and only the combining cone near the root crosses cores.
+  SPN DAGs are tree-dominated, which makes this the min-cut shape: the
+  cut size approaches the core count instead of the level width, and
+  with it the number of latency-paying cross-core hops on the critical
+  path.
+- ``"cone"`` — the root cone (the narrow top levels whose combined
+  weight fits one core's fair share) is pinned whole to the last core;
+  the leaf forest below it is LPT-distributed over all cores (the cone
+  core starts with the cone as its load). The serial combining path
+  then lives on ONE core and overlaps the other cores' subtree
+  computation as their results stream in, instead of hopping core to
+  core and paying transfer latency per hop.
+- ``"level"`` — per-fused-level LPT balance with operand-affinity
+  tie-breaks; every level is spread across all cores. Maximal level
+  parallelism, but every level boundary becomes interconnect traffic —
+  kept for machines whose interconnect is effectively free.
+
+``subtree`` and ``level`` enforce the load bound
+``max_core_load ≤ ceil(total / K) + max_node_weight`` (level strategy:
+additionally per level); ``cone`` pins the crown whole regardless of
+its weight — on chain-dominated DAGs the crown can dwarf the fair
+share, which is why ``subtree`` is the default. All strategies then run
+``passes`` rounds of cut-reducing single-node moves (rng order,
+deterministic under ``seed``) within the bound.
+
+Communication volume counts (value, destination-core) pairs — the
+multicast unrolling the interconnect actually ships.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .. import segments
+from ..program import TensorProgram
+
+
+@dataclasses.dataclass
+class Partition:
+    """Assignment of a program's fused nodes (and binary ops) to cores."""
+    n_cores: int
+    core_of_node: np.ndarray      # (n_fused,) int32
+    core_of_op: np.ndarray        # (n_binary_ops,) int32
+    node_of_root: dict            # fused root op id -> fused node index
+    roots: list                   # fused node index -> fused root op id
+    node_level: np.ndarray        # (n_fused,) fused level (1-based)
+    node_weight: np.ndarray       # (n_fused,) binary ops inside the node
+    op_level: np.ndarray          # (n_binary_ops,) binary level (1-based)
+    loads: np.ndarray             # (K,) binary ops per core
+    cut_values: int               # (value, destination-core) pairs
+    seed: int
+    strategy: str = "subtree"
+
+    @property
+    def used_cores(self) -> np.ndarray:
+        return np.unique(self.core_of_node)
+
+
+def _fused_graph(prog: TensorProgram):
+    """Fused nodes, their levels/weights and the fused dependence edges."""
+    m = prog.m
+    info = segments.fusion_info(prog)
+    roots = sorted(info.leaves)             # ascending = topological
+    node_of_root = {r: j for j, r in enumerate(roots)}
+    weight = np.bincount(
+        [node_of_root[int(info.root_of[i])] for i in range(prog.n_ops)],
+        minlength=len(roots)).astype(np.int64)
+
+    in_nodes: list[list[int]] = []
+    level = np.zeros(len(roots), np.int64)
+    for j, r in enumerate(roots):
+        srcs = sorted({node_of_root[int(info.root_of[s - m])]
+                       for s in info.leaves[r] if s >= m})
+        in_nodes.append(srcs)
+        level[j] = 1 + max((int(level[u]) for u in srcs), default=0)
+
+    out_nodes: list[list[int]] = [[] for _ in roots]
+    for j, srcs in enumerate(in_nodes):
+        for u in srcs:
+            out_nodes[u].append(j)
+    return info, roots, node_of_root, weight, level, in_nodes, out_nodes
+
+
+def _cut_volume(core_of_node: np.ndarray, out_nodes) -> int:
+    """(value, destination-core) pairs crossing the partition."""
+    vol = 0
+    for u, consumers in enumerate(out_nodes):
+        dsts = {int(core_of_node[v]) for v in consumers}
+        dsts.discard(int(core_of_node[u]))
+        vol += len(dsts)
+    return vol
+
+
+def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
+                  passes: int = 2, strategy: str = "subtree") -> Partition:
+    """Partition ``prog`` onto ``n_cores`` cores (see module doc)."""
+    if n_cores < 1:
+        raise ValueError(f"n_cores must be >= 1, got {n_cores}")
+    if strategy not in ("subtree", "cone", "level"):
+        raise ValueError(f"unknown strategy {strategy!r}")
+    info, roots, node_of_root, weight, level, in_nodes, out_nodes = \
+        _fused_graph(prog)
+    n_nodes = len(roots)
+    core_of_node = np.zeros(n_nodes, np.int32)
+    num_levels = int(level.max()) if n_nodes else 0
+    total_w = int(weight.sum())
+    wmax = int(weight.max()) if n_nodes else 0
+    bound = -(-total_w // n_cores) + wmax     # ceil(total/K) + max weight
+
+    if n_cores > 1 and n_nodes:
+        if strategy == "subtree":
+            # ---- post-order linear clustering (min-cut on trees) -------
+            # SPN fused DAGs are tree-dominated (out-degree ≤ 1 almost
+            # everywhere): a post-order walk lists every subtree
+            # contiguously, so cutting the walk into K weight-balanced
+            # chunks keeps whole subtrees core-local and only the chunk
+            # boundaries (≈ the combining path) cross cores. DAG edges
+            # outside the spanning forest just become extra cut edges.
+            visited = np.zeros(n_nodes, bool)
+            order: list[int] = []
+            sinks = [j for j in range(n_nodes) if not out_nodes[j]]
+            for sink in sinks:
+                stack: list[tuple[int, bool]] = [(sink, False)]
+                while stack:
+                    j, expanded = stack.pop()
+                    if visited[j]:
+                        continue
+                    if expanded:
+                        visited[j] = True
+                        order.append(j)
+                        continue
+                    stack.append((j, True))
+                    for u in reversed(in_nodes[j]):
+                        if not visited[u]:
+                            stack.append((u, False))
+            assert len(order) == n_nodes
+            cum, core = 0, 0
+            for j in order:
+                core_of_node[j] = core
+                cum += int(weight[j])
+                if core < n_cores - 1 and \
+                        cum * n_cores >= (core + 1) * total_w:
+                    core += 1
+        elif strategy == "cone":
+            # ---- grain decomposition: streamed units + a crown core ----
+            # Units are maximal subtrees of weight ≤ grain; everything
+            # above them (the *crown* — the combining cone whose every
+            # node spans multiple units) goes to the last core. Unit
+            # roots stream onto the interconnect as each unit finishes,
+            # so the crown ascends concurrently with unit production
+            # instead of hopping core-to-core like nested-prefix chunks.
+            spar = np.full(n_nodes, -1, np.int64)   # spanning parent
+            for j in range(n_nodes):
+                if out_nodes[j]:
+                    spar[j] = out_nodes[j][0]
+            subw = weight.astype(np.int64).copy()
+            for j in range(n_nodes):                # children before parents
+                if spar[j] >= 0:
+                    subw[spar[j]] += subw[j]
+            grain = max(1, total_w // (3 * n_cores))
+            crown = subw > grain
+            cone_core = n_cores - 1
+            core_of_node[crown] = cone_core
+            unit = np.full(n_nodes, -1, np.int64)
+            for j in range(n_nodes - 1, -1, -1):    # parents first
+                if crown[j]:
+                    continue
+                p = int(spar[j])
+                unit[j] = j if (p < 0 or crown[p]) else unit[p]
+            unit_w: dict[int, int] = {}
+            for j in range(n_nodes):
+                if not crown[j]:
+                    unit_w[int(unit[j])] = unit_w.get(int(unit[j]), 0) \
+                        + int(weight[j])
+            load = np.zeros(n_cores, np.int64)
+            load[cone_core] = int(weight[crown].sum())
+            for u in sorted(unit_w, key=lambda x: (-unit_w[x], x)):
+                best = int(np.argmin(load))
+                load[best] += unit_w[u]
+                core_of_node[(unit == u) & ~crown] = best
+        else:
+            # ---- per-level LPT with operand-affinity tie-breaks --------
+            for lv in range(1, num_levels + 1):
+                idx = np.flatnonzero(level == lv)
+                idx = idx[np.argsort(-weight[idx], kind="stable")]
+                lv_total = int(weight[idx].sum())
+                lv_bound = -(-lv_total // n_cores)
+                load = np.zeros(n_cores, np.int64)
+                for j in idx:
+                    w = int(weight[j])
+                    safe = [c for c in range(n_cores)
+                            if load[c] + w <= lv_bound]
+                    if not safe:
+                        safe = [int(np.argmin(load))]
+                    aff = {c: 0 for c in safe}
+                    for u in in_nodes[j]:
+                        c = int(core_of_node[u])
+                        if c in aff:
+                            aff[c] += int(weight[u])
+                    best = max(safe, key=lambda c: (aff[c], -load[c], -c))
+                    core_of_node[j] = best
+                    load[best] += w
+
+        # ---- refinement: cut-reducing single-node moves ----------------
+        core_load = np.zeros(n_cores, np.int64)
+        for j in range(n_nodes):
+            core_load[int(core_of_node[j])] += int(weight[j])
+
+        def move_gain(j: int, dst: int) -> int:
+            """Drop in (value, dst-core) pairs if ``j`` moves to ``dst``."""
+            src = int(core_of_node[j])
+            gain = 0
+            for u in in_nodes[j]:                 # edges into j
+                cu = int(core_of_node[u])
+                before = {int(core_of_node[v]) for v in out_nodes[u]}
+                after = {int(core_of_node[v]) for v in out_nodes[u]
+                         if v != j} | {dst}
+                before.discard(cu)
+                after.discard(cu)
+                gain += len(before) - len(after)
+            dsts = {int(core_of_node[v]) for v in out_nodes[j]}  # edges out
+            gain += len(dsts - {src}) - len(dsts - {dst})
+            return gain
+
+        rng = np.random.default_rng(seed)
+        for _ in range(passes):
+            improved = False
+            for j in rng.permutation(n_nodes):
+                j = int(j)
+                w, src = int(weight[j]), int(core_of_node[j])
+                best_dst, best_gain = -1, 0
+                for dst in range(n_cores):
+                    if dst == src:
+                        continue
+                    if core_load[dst] + w > bound:
+                        continue
+                    g = move_gain(j, dst)
+                    if g > best_gain:
+                        best_gain, best_dst = g, dst
+                if best_dst >= 0:
+                    core_of_node[j] = best_dst
+                    core_load[src] -= w
+                    core_load[best_dst] += w
+                    improved = True
+            if not improved:
+                break
+
+    core_of_op = np.asarray(
+        [core_of_node[node_of_root[int(info.root_of[i])]]
+         for i in range(prog.n_ops)], np.int32)
+    op_level = np.searchsorted(prog.level_offsets[1:], np.arange(prog.n_ops),
+                               side="right") + 1
+    loads = np.bincount(core_of_op, minlength=n_cores).astype(np.int64)
+    part = Partition(
+        n_cores=n_cores, core_of_node=core_of_node.astype(np.int32),
+        core_of_op=core_of_op, node_of_root=node_of_root, roots=list(roots),
+        node_level=level, node_weight=weight,
+        op_level=op_level.astype(np.int64),
+        loads=loads, cut_values=_cut_volume(core_of_node, out_nodes),
+        seed=seed, strategy=strategy)
+    validate_partition(prog, part)
+    return part
+
+
+def validate_partition(prog: TensorProgram, part: Partition) -> None:
+    """Scope-completeness, fused-node integrity and acyclicity.
+
+    Acyclicity at (core, level) granularity: every cross-core edge goes
+    from a strictly lower binary level to a higher one, which is what
+    makes the lockstep schedule's level grading deadlock-free.
+    """
+    m = prog.m
+    assert part.core_of_op.shape == (prog.n_ops,)
+    assert ((part.core_of_op >= 0) & (part.core_of_op < part.n_cores)).all()
+    info = segments.fusion_info(prog)
+    # fused-node integrity: every binary op lives with its fused root
+    for i in range(prog.n_ops):
+        r = int(info.root_of[i])
+        assert part.core_of_op[i] == part.core_of_op[r], \
+            "fused reduction tree split across cores"
+    # cross-core edges strictly increase binary level
+    for i in range(prog.n_ops):
+        for s in (int(prog.b[i]), int(prog.c[i])):
+            if s >= m and part.core_of_op[s - m] != part.core_of_op[i]:
+                assert part.op_level[s - m] < part.op_level[i]
+    assert int(part.loads.sum()) == prog.n_ops

@@ -19,8 +19,16 @@ aliases), root values are **bit-identical** to the cycle-accurate model
 — asserted in ``tests/test_runtime.py`` — while the per-request cost
 drops from O(cycles × machine state) Python work to O(levels) numpy
 calls. Cycle/throughput accounting still comes from the real stream.
+
+The replay (:func:`symbolic_replay`) and the densification
+(:func:`densify`) are exposed separately so the multi-core decoder
+(:mod:`repro.core.multicore.fastsim`) can replay each core's stream —
+``SEND`` rows record exported SSA ids, ``RECV`` rows introduce import
+placeholders — and merge the per-core graphs into ONE dense program.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -31,8 +39,38 @@ from .config import ProcessorConfig
 from .sim import SimError, SimResult
 
 
-def decode(vprog: isa.VLIWProgram, cfg: ProcessorConfig) -> isa.DenseProgram:
-    """Pre-decode a compiled VLIW program into its dense encoding."""
+@dataclasses.dataclass
+class Replay:
+    """Symbolic replay of one core's VLIW stream.
+
+    SSA ids: ``[0, n_init)`` are memory-image cells, ``[n_init, ...)``
+    are PE outputs in emission order. *Negative* operand ids ``-(k+1)``
+    reference ``imports[k] = (channel_row_id, position)`` — values that
+    arrive over the interconnect (multi-core only).
+    """
+    init_values: np.ndarray                  # (n_init,) f32
+    input_cells: np.ndarray                  # (m_ind_local,) int32
+    opcode: np.ndarray                       # (n_ops,) uint8 D_* codes
+    a: np.ndarray                            # (n_ops,) int32 (or negative)
+    b: np.ndarray                            # (n_ops,) int32 (or negative)
+    root: int                                # SSA id of the root cell
+    imports: list                            # [(row_id, pos), ...]
+    exports: dict                            # (row_id, pos) -> SSA id
+    cycles: int
+    n_useful_ops: int
+
+    @property
+    def n_init(self) -> int:
+        return len(self.init_values)
+
+
+def symbolic_replay(vprog: isa.VLIWProgram, cfg: ProcessorConfig,
+                    members_of=None) -> Replay:
+    """Replay one instruction stream symbolically into SSA form.
+
+    ``members_of`` maps channel-row id -> member count (required when the
+    stream carries RECV rows).
+    """
     banks = cfg.banks
 
     # initial SSA values: the constant data-memory image, cell by cell
@@ -53,6 +91,8 @@ def decode(vprog: isa.VLIWProgram, cfg: ProcessorConfig) -> isa.DenseProgram:
     ops_o: list[int] = []
     ops_a: list[int] = []
     ops_b: list[int] = []
+    imports: list[tuple[int, int]] = []
+    exports: dict[tuple[int, int], int] = {}
 
     def new_op(code: int, a: int, b: int) -> int:
         ops_o.append(code)
@@ -128,22 +168,59 @@ def decode(vprog: isa.VLIWProgram, cfg: ProcessorConfig) -> isa.DenseProgram:
                     mem_sym[(mi.addr, bank)] = reg_sym.get((bank, mi.reg),
                                                            zero_id)
 
+        # comm op (multi-core): exports snapshot, imports placeholder
+        if instr.comm is not None:
+            ci = instr.comm
+            if ci.kind == "send":
+                for (pos, bank, reg) in vprog.send_specs[ci.addr]:
+                    v = reg_sym.get((bank, reg))
+                    if v is None:
+                        raise SimError(f"cycle {t}: send row {ci.addr} "
+                                       f"snapshots invalid cell "
+                                       f"({bank},{reg})")
+                    exports[(ci.addr, pos)] = v
+            else:   # recv: member position p lands in bank p
+                if members_of is None:
+                    raise SimError("recv row in a stream decoded without "
+                                   "channel metadata")
+                for pos in range(members_of[ci.addr]):
+                    imports.append((ci.addr, pos))
+                    reg_sym[(pos, ci.reg)] = -len(imports)
+
     if pending:
         raise SimError(f"program ended with pending commits: "
                        f"{sorted(pending)}")
     root_row, root_bank = vprog.root_loc
-    root = mem_sym.get((root_row, root_bank))
-    if root is None:
-        raise SimError("root row never stored")
+    if root_row < 0:          # storeless worker core: outputs are SENDs
+        root = -1
+    else:
+        root = mem_sym.get((root_row, root_bank))
+        if root is None:
+            raise SimError("root row never stored")
 
+    return Replay(init_values=np.asarray(init_vals, np.float32),
+                  input_cells=input_cells,
+                  opcode=np.asarray(ops_o, np.uint8),
+                  a=np.asarray(ops_a, np.int32),
+                  b=np.asarray(ops_b, np.int32),
+                  root=int(root), imports=imports, exports=exports,
+                  cycles=len(vprog.instrs),
+                  n_useful_ops=vprog.n_useful_ops)
+
+
+def densify(o: np.ndarray, a: np.ndarray, b: np.ndarray, n_init: int,
+            init_values: np.ndarray, input_cells: np.ndarray,
+            root: int, cycles: int, n_useful_ops: int,
+            input_slots: np.ndarray | None = None) -> isa.DenseProgram:
+    """Level-sort an SSA op graph and cut it into ufunc segments.
+
+    ``a``/``b`` must be fully resolved (no negative import ids).
+    """
     # sort ops by (dependence level, opcode): levels make every range
     # independent (vectorizable), the within-level opcode sort makes each
     # level a handful of contiguous single-ufunc runs — reordering inside
     # a level is free because same-level ops never feed each other
-    n = len(ops_o)
-    o = np.asarray(ops_o, np.uint8)
-    a = np.asarray(ops_a, np.int32)
-    b = np.asarray(ops_b, np.int32)
+    n = len(o)
     lvl = levelize.op_levels(a, b, n_init)
     order = np.lexsort((o, lvl))
     new_slot_of_old = np.empty(n, np.int64)
@@ -173,13 +250,23 @@ def decode(vprog: isa.VLIWProgram, cfg: ProcessorConfig) -> isa.DenseProgram:
         root = int(n_init + new_slot_of_old[root - n_init])
     return isa.DenseProgram(
         n_init=n_init,
-        init_values=np.asarray(init_vals, np.float32),
-        input_cells=input_cells,
+        init_values=np.asarray(init_values, np.float32),
+        input_cells=np.asarray(input_cells, np.int32),
         opcode=new_o, a=new_a, b=new_b,
         level_offsets=offsets, segments=segments,
         root=int(root),
-        cycles=len(vprog.instrs),
-        n_useful_ops=vprog.n_useful_ops)
+        cycles=cycles,
+        n_useful_ops=n_useful_ops,
+        input_slots=input_slots)
+
+
+def decode(vprog: isa.VLIWProgram, cfg: ProcessorConfig) -> isa.DenseProgram:
+    """Pre-decode a compiled (single-core) VLIW program."""
+    r = symbolic_replay(vprog, cfg)
+    assert not r.imports and not r.exports, \
+        "multi-core streams decode via repro.core.multicore.fastsim"
+    return densify(r.opcode, r.a, r.b, r.n_init, r.init_values,
+                   r.input_cells, r.root, r.cycles, r.n_useful_ops)
 
 
 def run(dense: isa.DenseProgram, leaf_ind: np.ndarray,
@@ -202,7 +289,10 @@ def run(dense: isa.DenseProgram, leaf_ind: np.ndarray,
         V[:n_init] = dense.init_values[:, None]
         if workspace is not None:
             workspace[batch] = V
-    V[dense.input_cells] = leaf_ind.T
+    if dense.input_slots is None:
+        V[dense.input_cells] = leaf_ind.T
+    else:   # multi-core: leaf columns fan out to per-core duplicate cells
+        V[dense.input_cells] = leaf_ind.T[dense.input_slots]
     for lo, hi, code, ab in dense.segments:
         if type(ab) is tuple:           # single op: zero-copy row views
             va, vb = V[ab[0]], V[ab[1]]

@@ -13,6 +13,14 @@ the hardware imposes:
   crossbar ports), with sum/product/max/forward opcodes,
 - data memory moves whole 32-wide vector rows.
 
+The model is packaged as a *steppable* :class:`CoreSim` so that the
+multi-core simulator (:mod:`repro.core.multicore.sim`) can clock N cores
+in lockstep: each ``step(now)`` call executes one VLIW instruction at
+global cycle ``now``, or stalls (returns ``False``) when a PE reads a
+shared-register-window cell whose RECV data has not arrived yet
+(full/empty-bit flow control). Single-core simulation
+(:func:`simulate_leaves`) is the trivial driver loop and never stalls.
+
 Values carry a batch dimension, so one simulation validates a whole batch
 of SPN evaluations bit-for-bit against the numpy oracle while costing the
 same number of machine cycles as a single one (the throughput metric is
@@ -63,60 +71,121 @@ def build_input_memory(vprog: isa.VLIWProgram, prog: TensorProgram,
         vprog, prog.leaves_from_evidence(X), cfg)
 
 
-def simulate(vprog: isa.VLIWProgram, prog: TensorProgram, X: np.ndarray,
-             cfg: ProcessorConfig) -> SimResult:
-    """Checked simulation of evidence rows ``X`` (batch, num_vars)."""
-    return simulate_leaves(vprog,
-                           prog.leaves_from_evidence(np.atleast_2d(X)), cfg)
+class CoreSim:
+    """Checked simulation of one core, one VLIW instruction per ``step``.
 
+    ``interconnect`` (see :class:`repro.core.multicore.comm.Interconnect`)
+    is only consulted for ``send``/``recv`` comm ops; single-core
+    programs never carry those, so ``None`` is fine there.
+    """
 
-def simulate_leaves(vprog: isa.VLIWProgram, leaf_ind: np.ndarray,
-                    cfg: ProcessorConfig) -> SimResult:
-    """Checked simulation from indicator-leaf inputs (batch, m_ind)."""
-    leaf_ind = np.atleast_2d(leaf_ind)
-    batch = leaf_ind.shape[0]
-    mem = input_memory_from_leaves(vprog, leaf_ind, cfg)
-    nan = np.full(batch, np.nan, np.float32)
+    def __init__(self, vprog: isa.VLIWProgram, leaf_ind: np.ndarray,
+                 cfg: ProcessorConfig, *, core_id: int = 0,
+                 interconnect=None):
+        leaf_ind = np.atleast_2d(leaf_ind)
+        self.vprog, self.cfg, self.core_id = vprog, cfg, core_id
+        self.net = interconnect
+        self.batch = leaf_ind.shape[0]
+        self.mem = input_memory_from_leaves(vprog, leaf_ind, cfg)
+        self.nan = np.full(self.batch, np.nan, np.float32)
+        self.regs = np.full((cfg.banks, cfg.regs_per_bank, self.batch),
+                            np.nan, np.float32)
+        self.valid = np.zeros((cfg.banks, cfg.regs_per_bank), bool)
+        # pending commits: local cycle -> list of (bank, reg, value)
+        self.pending: dict[int, list] = {}
+        # write-port reservations by COMMIT cycle — global across issue
+        # cycles, since pipelined writebacks from different issues can
+        # land together
+        self.write_res: dict[int, set[int]] = {}
+        # in-flight RECV rows: reg row -> (channel row id, member count);
+        # cells land through the window's dedicated fill port when the
+        # row arrives, reads of them stall the core until then
+        self.inflight: dict[int, tuple[int, int]] = {}
+        self.t = 0                   # local cycle == instructions executed
+        self.useful = 0
+        self.stall_cycles = 0
+        self.finish_at: int | None = None   # global cycle of last instr
+        self.checks = {"read_conflicts_checked": 0,
+                       "write_conflicts_checked": 0}
 
-    regs = np.full((cfg.banks, cfg.regs_per_bank, batch), np.nan, np.float32)
-    valid = np.zeros((cfg.banks, cfg.regs_per_bank), bool)
-    # pending commits: cycle -> list of (bank, reg, value or ("row", row_vals))
-    pending: dict[int, list] = {}
+    # ------------------------------------------------------------------ #
+    def finished(self) -> bool:
+        return self.t >= len(self.vprog.instrs)
 
-    useful = 0
-    checks = {"read_conflicts_checked": 0, "write_conflicts_checked": 0}
-    # write-port reservations by COMMIT cycle — global across issue cycles,
-    # since pipelined writebacks from different issues can land together
-    write_res: dict[int, set[int]] = {}
+    def _reserve_write(self, commit: int, bank: int) -> None:
+        busy = self.write_res.setdefault(commit, set())
+        if bank == -1:
+            if busy:
+                raise SimError(
+                    f"cycle {self.t}: vload write collides @ {commit}")
+            busy.add(-1)
+        else:
+            if bank in busy or -1 in busy:
+                raise SimError(
+                    f"cycle {self.t}: write-port conflict bank {bank} "
+                    f"@ {commit}")
+            busy.add(bank)
+        self.checks["write_conflicts_checked"] += 1
 
-    def make_reserver(t: int):
-        def reserve_write(commit: int, bank: int) -> None:
-            busy = write_res.setdefault(commit, set())
-            if bank == -1:
-                if busy:
-                    raise SimError(f"cycle {t}: vload write collides @ {commit}")
-                busy.add(-1)
-            else:
-                if bank in busy or -1 in busy:
-                    raise SimError(
-                        f"cycle {t}: write-port conflict bank {bank} @ {commit}")
-                busy.add(bank)
-            checks["write_conflicts_checked"] += 1
-        return reserve_write
+    def _deliver(self, now: int) -> None:
+        """Land arrived in-flight window rows (dedicated fill port)."""
+        if not self.inflight:
+            return
+        for reg, (row_id, members) in list(self.inflight.items()):
+            payload = self.net.arrived(row_id, now)
+            if payload is None:
+                continue
+            self.regs[:members, reg] = payload
+            self.valid[:members, reg] = True
+            del self.inflight[reg]
 
-    for t, instr in enumerate(vprog.instrs):
-        # 1) commits for this cycle land at cycle start
-        for (bank, reg, val) in pending.pop(t, []):
+    def _stalled_read(self, src: isa.ReadSrc) -> bool:
+        return src.reg in self.inflight and not self.valid[src.bank, src.reg]
+
+    # ------------------------------------------------------------------ #
+    def step(self, now: int | None = None) -> bool:
+        """Execute the next instruction at global cycle ``now``.
+
+        Returns ``False`` (and leaves all state untouched) when the
+        instruction reads a window cell still in flight — the core
+        stalls this cycle and retries the same instruction next cycle.
+        """
+        if now is None:
+            now = self.t
+        t, instr = self.t, self.vprog.instrs[self.t]
+        self._deliver(now)
+
+        # 1) commits for this cycle land at cycle start — even on a
+        # stalled cycle: the pipeline drains while issue is frozen (and a
+        # whole-row commit legitimately retires a stale in-flight window
+        # fill, which the stall check below must observe)
+        for (bank, reg, val) in self.pending.pop(t, []):
             if bank == -1:  # whole-row vector load
-                regs[:, reg] = val
-                valid[:, reg] = True
+                self.regs[:, reg] = val
+                self.valid[:, reg] = True
+                # reusing the row retires any stale in-flight window fill
+                self.inflight.pop(reg, None)
+            elif bank == -2:  # window row: only the member cells land
+                members = val.shape[0]
+                self.regs[:members, reg] = val
+                self.valid[:members, reg] = True
             else:
-                regs[bank, reg] = val
-                valid[bank, reg] = True
-        write_res.pop(t - 1, None)
-        reserve_write = make_reserver(t)
+                self.regs[bank, reg] = val
+                self.valid[bank, reg] = True
+        self.write_res.pop(t - 1, None)
 
-        # 2) crossbar reads (global ≤1 address per bank)
+        # 2) flow control: stall before any issue-side state changes if a
+        # crossbar read targets an in-flight window cell
+        if self.inflight:
+            for ti in instr.trees:
+                if ti is None:
+                    continue
+                for src in ti.reads.values():
+                    if self._stalled_read(src):
+                        self.stall_cycles += 1
+                        return False
+
+        # 3) crossbar reads (global ≤1 address per bank)
         bank_addr: dict[int, int] = {}
         port_vals: dict[tuple[int, int], np.ndarray] = {}
         for ti in instr.trees:
@@ -129,26 +198,26 @@ def simulate_leaves(vprog: isa.VLIWProgram, leaf_ind: np.ndarray,
                         f"cycle {t}: bank {src.bank} read conflict "
                         f"(regs {prev} and {src.reg})")
                 bank_addr[src.bank] = src.reg
-                checks["read_conflicts_checked"] += 1
-                if not valid[src.bank, src.reg]:
+                self.checks["read_conflicts_checked"] += 1
+                if not self.valid[src.bank, src.reg]:
                     raise SimError(
                         f"cycle {t}: read of invalid cell "
                         f"({src.bank},{src.reg})")
-                port_vals[(ti.tree, port)] = regs[src.bank, src.reg]
+                port_vals[(ti.tree, port)] = self.regs[src.bank, src.reg]
 
-        # 3) evaluate trees
+        # 4) evaluate trees
         for ti in instr.trees:
             if ti is None:
                 continue
             level_vals: dict[tuple[int, int], np.ndarray] = {}
-            for port in range(cfg.leaf_ports_per_tree):
+            for port in range(self.cfg.leaf_ports_per_tree):
                 v = port_vals.get((ti.tree, port))
-                level_vals[(0, port)] = v if v is not None else nan
-            for level in range(1, cfg.tree_levels + 1):
-                for pos in range(cfg.level_pes(level)):
+                level_vals[(0, port)] = v if v is not None else self.nan
+            for level in range(1, self.cfg.tree_levels + 1):
+                for pos in range(self.cfg.level_pes(level)):
                     code = ti.pe_ops.get((level, pos), isa.PE_NOP)
                     if code == isa.PE_NOP:
-                        level_vals[(level, pos)] = nan
+                        level_vals[(level, pos)] = self.nan
                         continue
                     a = level_vals[(level - 1, 2 * pos)]
                     b = level_vals[(level - 1, 2 * pos + 1)]
@@ -163,36 +232,94 @@ def simulate_leaves(vprog: isa.VLIWProgram, leaf_ind: np.ndarray,
                     else:
                         v = b
                     level_vals[(level, pos)] = v
-            useful += ti.num_useful_ops
-            # 4) writebacks
+            self.useful += ti.num_useful_ops
+            # 5) writebacks
             for wb in ti.writes:
-                commit = t + wb.level * cfg.pe_latency
+                commit = t + wb.level * self.cfg.pe_latency
                 val = level_vals[(wb.level, wb.pos)]
                 if np.isnan(val).all():
                     raise SimError(f"cycle {t}: writeback of NOP output")
-                reserve_write(commit, wb.bank)
-                pending.setdefault(commit, []).append((wb.bank, wb.reg, val.copy()))
+                self._reserve_write(commit, wb.bank)
+                self.pending.setdefault(commit, []).append(
+                    (wb.bank, wb.reg, val.copy()))
 
-        # 5) memory op
+        # 6) memory op (data-memory port)
         if instr.mem is not None:
             mi = instr.mem
             if mi.kind == "load":
-                if mi.addr not in mem:
-                    raise SimError(f"cycle {t}: load of unwritten row {mi.addr}")
-                reserve_write(t + 1, -1)
-                pending.setdefault(t + 1, []).append((-1, mi.reg, mem[mi.addr].copy()))
+                if mi.addr not in self.mem:
+                    raise SimError(
+                        f"cycle {t}: load of unwritten row {mi.addr}")
+                self._reserve_write(t + 1, -1)
+                self.pending.setdefault(t + 1, []).append(
+                    (-1, mi.reg, self.mem[mi.addr].copy()))
+            elif mi.kind == "store":
+                row = np.where(self.valid[:, mi.reg][:, None],
+                               self.regs[:, mi.reg], 0.0).astype(np.float32)
+                self.mem[mi.addr] = row
             else:
-                row = np.where(valid[:, mi.reg][:, None],
-                               regs[:, mi.reg], 0.0).astype(np.float32)
-                mem[mi.addr] = row
+                raise SimError(f"cycle {t}: {mi.kind!r} on the memory port")
 
-    if pending:
-        raise SimError(f"program ended with pending commits: {sorted(pending)}")
+        # 7) comm op (network-interface port)
+        if instr.comm is not None:
+            ci = instr.comm
+            if ci.kind == "send":
+                spec = self.vprog.send_specs.get(ci.addr)
+                if not spec:
+                    raise SimError(f"cycle {t}: send of unknown row {ci.addr}")
+                payload = np.empty((len(spec), self.batch), np.float32)
+                for (pos, bank, reg) in spec:
+                    if not self.valid[bank, reg]:
+                        raise SimError(
+                            f"cycle {t}: send row {ci.addr} snapshots "
+                            f"invalid cell ({bank},{reg})")
+                    payload[pos] = self.regs[bank, reg]
+                self.net.push(ci.addr, payload, now)
+            elif ci.kind == "recv":
+                members = self.net.members(ci.addr)
+                payload = self.net.arrived(ci.addr, now)
+                self.valid[:, ci.reg] = False
+                self.inflight.pop(ci.reg, None)
+                if payload is not None:
+                    # already arrived: behaves like a vector load (t+1)
+                    self.pending.setdefault(t + 1, []).append(
+                        (-2, ci.reg, payload.copy()))
+                else:
+                    self.inflight[ci.reg] = (ci.addr, members)
+            else:
+                raise SimError(f"cycle {t}: {ci.kind!r} on the comm port")
 
-    root_row, root_bank = vprog.root_loc
-    if root_row not in mem:
-        raise SimError("root row never stored")
-    root = mem[root_row][root_bank]
+        self.t += 1
+        if self.finished():
+            self.finish_at = now
+            if self.pending:
+                raise SimError(
+                    f"program ended with pending commits: "
+                    f"{sorted(self.pending)}")
+        return True
+
+    def root_values(self) -> np.ndarray:
+        root_row, root_bank = self.vprog.root_loc
+        if root_row not in self.mem:
+            raise SimError("root row never stored")
+        return self.mem[root_row][root_bank]
+
+
+def simulate(vprog: isa.VLIWProgram, prog: TensorProgram, X: np.ndarray,
+             cfg: ProcessorConfig) -> SimResult:
+    """Checked simulation of evidence rows ``X`` (batch, num_vars)."""
+    return simulate_leaves(vprog,
+                           prog.leaves_from_evidence(np.atleast_2d(X)), cfg)
+
+
+def simulate_leaves(vprog: isa.VLIWProgram, leaf_ind: np.ndarray,
+                    cfg: ProcessorConfig) -> SimResult:
+    """Checked simulation from indicator-leaf inputs (batch, m_ind)."""
+    core = CoreSim(vprog, leaf_ind, cfg)
+    while not core.finished():
+        core.step()
     cycles = len(vprog.instrs)
-    return SimResult(root_values=root, cycles=cycles, useful_ops=useful,
-                     ops_per_cycle=useful / max(cycles, 1), checks=checks)
+    return SimResult(root_values=core.root_values(), cycles=cycles,
+                     useful_ops=core.useful,
+                     ops_per_cycle=core.useful / max(cycles, 1),
+                     checks=core.checks)

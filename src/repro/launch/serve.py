@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-SPN_SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim")
+SPN_SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim",
+                  "vliw-mc")
 
 
 def bench(fn, n_batches: int, batch: int) -> dict:
@@ -59,7 +60,8 @@ def bench(fn, n_batches: int, batch: int) -> dict:
 def serve_spn(dataset: str, batch: int, n_batches: int,
               substrate: str = "all", query: str = "joint",
               mask_frac: float = 0.3,
-              interpret: bool | None = None) -> dict:
+              interpret: bool | None = None,
+              cores: int = 2) -> dict:
     from ..core import learn
     from ..data import spn_datasets
     from ..queries import (mpe_backtrace, random_mask, sample_ancestral_jax,
@@ -68,7 +70,7 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
 
     X = spn_datasets.load(dataset, "train", 400)
     spn = learn.learn_spn(X, min_instances=64)
-    server = Server(spn, interpret=interpret)
+    server = Server(spn, interpret=interpret, cores=cores)
     names = SPN_SUBSTRATES if substrate in ("all", None) else (substrate,)
     print(f"SPN[{dataset}] query={query}: {server.prog.n_ops} ops, "
           f"{server.prog.num_levels} levels; substrates: {', '.join(names)}")
@@ -107,6 +109,15 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
                                     "cycles": meta["cycles"]}
             extra = (f"  [{meta['ops_per_cycle']:.2f} ops/cycle, "
                      f"{meta['cycles']} cycles/eval-batch]")
+        elif name == "vliw-mc":
+            meta = server.artifact(query, name).meta
+            mc = meta["multicore"]
+            out["processor_mc"] = {"cycles": meta["cycles"],
+                                   "cores": mc["effective_cores"],
+                                   "cut_values": mc["cut_values"]}
+            extra = (f"  [{mc['effective_cores']} cores, "
+                     f"{meta['cycles']} cycles/eval-batch, "
+                     f"{mc['comm']['values']} values crossed]")
         elif name == "pallas":
             meta = server.artifact(query, name).meta
             out["pallas_interpret"] = meta["interpret"]
@@ -141,6 +152,12 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
     cs = out["runtime_stats"]["cache"]
     print(f"  artifact cache: {cs['hits']} hits / {cs['misses']} misses "
           f"({cs['size']} artifacts resident)")
+    for key, mc in out["runtime_stats"]["multicore"].items():
+        print(f"  multicore[{key}]: {mc['cores']} cores, "
+              f"{mc['cycles']} cycles, util={mc['core_utilization']}, "
+              f"{mc['comm_values_per_batch']} values/batch crossed, "
+              f"stalls={mc['stall_cycles']}, "
+              f"barrier_idle={mc['barrier_idle_cycles']}")
     return out
 
 
@@ -197,6 +214,9 @@ def main() -> None:
                     default="auto",
                     help="Pallas kernel mode: 'auto' compiles on TPU and "
                          "interprets elsewhere; 'on'/'off' force it")
+    ap.add_argument("--cores", type=int, default=2,
+                    help="core count for the vliw-mc substrate "
+                         "(N replicated VLIW cores + interconnect)")
     ap.add_argument("--dataset", default="nltcs")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=256)
@@ -209,7 +229,8 @@ def main() -> None:
                   substrate=args.substrate, query=args.query,
                   mask_frac=args.mask_frac,
                   interpret={"auto": None, "on": True,
-                             "off": False}[args.interpret])
+                             "off": False}[args.interpret],
+                  cores=args.cores)
     else:
         serve_lm(args.arch, min(args.batch, 8), args.prompt_len,
                  args.gen_len)

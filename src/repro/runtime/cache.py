@@ -1,11 +1,16 @@
 """Content-addressed LRU cache of compiled substrate artifacts.
 
-Repeated requests for the same (SPN, query, substrate, batch tile)
-quadruple must never re-levelize, re-pad, re-trace or re-run the VLIW
-compiler: keys are built from :meth:`TensorProgram.digest` — a *content*
-hash — so even a structurally identical program re-learned into a fresh
-object hits. Capacity-bounded LRU with hit/miss/eviction counters
-(`stats()`), shared by the query engine, the server and the benchmarks.
+Repeated requests for the same (SPN, query, substrate + configuration,
+batch tile) tuple must never re-levelize, re-pad, re-trace or re-run the
+VLIW compiler: keys are built from :meth:`TensorProgram.digest` — a
+*content* hash — so even a structurally identical program re-learned
+into a fresh object hits. The key also carries the substrate's
+:meth:`~repro.runtime.substrates.Substrate.config_fingerprint`:
+recompiling the same program under a different substrate configuration
+(``vliw-mc`` core count, Pallas interpret mode, processor geometry) is a
+*different* artifact and must miss instead of returning a stale one.
+Capacity-bounded LRU with hit/miss/eviction counters (`stats()`), shared
+by the query engine, the server and the benchmarks.
 """
 from __future__ import annotations
 
@@ -26,18 +31,22 @@ class ArtifactCache:
         self.evictions = 0
 
     @staticmethod
-    def key(prog: TensorProgram, query: str, substrate: str,
+    def key(prog: TensorProgram, query: str, substrate: Substrate,
             batch_tile: int, log_domain: bool) -> tuple:
         # the query component is normalized to its semiring: joint,
         # marginal and sample all execute the identical sum-product
-        # program, so they share one compiled artifact per substrate
+        # program, so they share one compiled artifact per substrate;
+        # the substrate contributes its name AND its config fingerprint
+        # (a bare name would build keys that can never match a stored
+        # entry for any substrate with a non-empty fingerprint)
         return (prog.digest(), SEMIRING_OF_QUERY.get(query, query),
-                substrate, batch_tile, log_domain)
+                substrate.name, substrate.config_fingerprint(),
+                batch_tile, log_domain)
 
     def get_or_compile(self, substrate: Substrate, prog: TensorProgram, *,
                        query: str = "joint", log_domain: bool = True,
                        batch_tile: int = LANE):
-        k = self.key(prog, query, substrate.name, batch_tile, log_domain)
+        k = self.key(prog, query, substrate, batch_tile, log_domain)
         art = self._entries.get(k)
         if art is not None:
             self.hits += 1
@@ -51,6 +60,10 @@ class ArtifactCache:
             self._entries.popitem(last=False)
             self.evictions += 1
         return art
+
+    def artifacts(self):
+        """Resident artifacts, LRU order (introspection, e.g. stats)."""
+        return iter(self._entries.values())
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -34,7 +34,8 @@ from .cache import ArtifactCache
 from .substrates import (LANE, QUERIES, Artifact, Substrate, canonical,
                          make_substrate)
 
-DEFAULT_SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim")
+DEFAULT_SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim",
+                      "vliw-mc")
 
 
 class ParityError(AssertionError):
@@ -49,6 +50,7 @@ class Server:
                  substrates: tuple[str, ...] | None = None,
                  processor: ProcessorConfig = PTREE,
                  interpret: bool | None = None,
+                 cores: int = 2,
                  cache_capacity: int = 32,
                  batch_tile: int = LANE,
                  max_rows: int = 4096):
@@ -63,10 +65,12 @@ class Server:
         self.cache = ArtifactCache(cache_capacity)
         self._processor = processor
         self._interpret = interpret
+        self._cores = cores
         names = tuple(canonical(n)
                       for n in (substrates or DEFAULT_SUBSTRATES))
         self.substrates: dict[str, Substrate] = {
-            n: make_substrate(n, processor=processor, interpret=interpret)
+            n: make_substrate(n, processor=processor, interpret=interpret,
+                              cores=cores)
             for n in names}
         self._batchers: weakref.WeakKeyDictionary[Artifact, MicroBatcher] = \
             weakref.WeakKeyDictionary()
@@ -133,11 +137,32 @@ class Server:
                "compiles": {n: s.compile_count
                             for n, s in self.substrates.items()},
                "padded_rows": 0,
-               "batchers": {}}
+               "batchers": {},
+               "multicore": {}}
         for art, b in self._batchers.items():
             out["batchers"][f"{art.semiring}/{art.substrate}"] = dict(
                 b.stats, pad_waste=round(b.pad_waste, 4))
             out["padded_rows"] += b.stats["padded_rows"]
+        # per-core utilization / communication / barrier accounting of
+        # every resident multi-core artifact (calibrated at compile time)
+        for art in self.cache.artifacts():
+            mc = art.meta.get("multicore")
+            if not mc:
+                continue
+            cycles = max(int(mc["cycles"]), 1)
+            ops = mc["core_ops"]
+            peak = self._processor.num_pes
+            out["multicore"][f"{art.semiring}/{art.substrate}"] = {
+                "cores": mc["effective_cores"],
+                "cycles": mc["cycles"],
+                "core_utilization": [round(o / cycles / peak, 4)
+                                     for o in ops],
+                "comm_values_per_batch": mc["comm"]["values"],
+                "comm_rows": mc["comm"]["rows"],
+                "stall_cycles": mc["stall_cycles"],
+                "barrier_idle_cycles": mc["barrier_idle"],
+                "cut_values": mc["cut_values"],
+            }
         return out
 
 
@@ -178,15 +203,17 @@ def verify_parity(server: Server, x: np.ndarray, *, query: str = "marginal",
             continue
         vals = server.query(x, query, name)
         against_ref(name, vals)
-        if name == "vliw-sim":
+        sub = server.substrate(name)
+        if hasattr(sub, "execute_checked"):
+            # vliw-sim / vliw-mc: the vectorized fast-sim must be
+            # bit-identical to the cycle-accurate checked simulator
             art = server.artifact(query, name)
-            sub = server.substrate(name)
             leaves = art.prog.leaves_from_evidence(np.atleast_2d(x))
             checked = sub.execute_checked(art, leaves)
             fast = sub.execute(art, leaves)
             if not np.array_equal(checked, fast):
                 raise ParityError(
-                    "vliw fast-sim root values are not bit-identical to "
-                    "the checked cycle-accurate simulator")
-            devs["vliw-sim/checked"] = 0.0
+                    f"{name} fast-sim root values are not bit-identical "
+                    "to the checked cycle-accurate simulator")
+            devs[f"{name}/checked"] = 0.0
     return devs

@@ -13,18 +13,23 @@ this module extracts them behind a single :class:`Substrate` interface —
     the per-request hot path: (batch, m_ind) linear indicator inputs →
     (batch,) root values (log-domain when the artifact says so).
 
-Four registered implementations:
+Five registered implementations:
 
 ==============  ==========================================================
 ``numpy``       float64 alg.-1 oracle (:func:`~repro.core.executors.eval_ops_numpy`)
 ``leveled-jax`` group-decomposed jit'd JAX executor
 ``pallas``      Pallas TPU kernel (interpret-mode off-TPU)
 ``vliw-sim``    VLIW compile + vectorized fast-sim (checked sim as oracle)
+``vliw-mc``     N-core partitioned VLIW: DAG min-cut, SEND/RECV streams,
+                lockstep checked sim + merged fast-sim (``cores=N``)
 ==============  ==========================================================
 
-Artifacts are content-addressed via :meth:`TensorProgram.digest` and
-cached by :class:`repro.runtime.cache.ArtifactCache`; the registry is
-open — new backends (sharded, async, remote) register themselves with
+Artifacts are content-addressed via :meth:`TensorProgram.digest` *plus*
+each substrate's :meth:`~Substrate.config_fingerprint` (core count,
+interconnect, Pallas interpret mode, processor geometry — anything that
+changes the compiled artifact without changing the program) and cached
+by :class:`repro.runtime.cache.ArtifactCache`; the registry is open —
+new backends (sharded, async, remote) register themselves with
 :func:`register` and every consumer (query engine, server, benchmarks)
 picks them up by name.
 """
@@ -35,7 +40,7 @@ import dataclasses
 import jax
 import numpy as np
 
-from ..core import executors, program, segments
+from ..core import executors, multicore, program, segments
 from ..core.processor import fastsim, sim
 from ..core.processor.config import PTREE, ProcessorConfig
 
@@ -109,6 +114,14 @@ class Substrate:
         """Row multiple the micro-batcher should pad requests to."""
         return 1    # most substrates take any batch; the kernel overrides
 
+    def config_fingerprint(self) -> str:
+        """Stable id of every configuration knob that changes the
+        compiled artifact. Part of the :class:`ArtifactCache` key: the
+        same program compiled under a different substrate configuration
+        (core count, interpret mode, processor geometry) must MISS, not
+        return a stale artifact."""
+        return ""
+
     def _build(self, prog: program.TensorProgram, log_domain: bool,
                batch_tile: int):
         raise NotImplementedError
@@ -139,12 +152,18 @@ def get_substrate(name: str, **kwargs) -> Substrate:
 
 
 def make_substrate(name: str, *, processor: ProcessorConfig = PTREE,
-                   interpret: bool | None = None) -> Substrate:
+                   interpret: bool | None = None,
+                   cores: int = 2,
+                   interconnect=None) -> Substrate:
     """Instantiate a substrate, routing the shared runtime options to the
     constructors that take them (the one place this mapping lives)."""
     cname = canonical(name)
     kwargs = {"pallas": {"interpret": interpret},
-              "vliw-sim": {"processor": processor}}.get(cname, {})
+              "vliw-sim": {"processor": processor},
+              "vliw-mc": {"processor": processor, "cores": cores,
+                          **({"interconnect": interconnect}
+                             if interconnect is not None else {})},
+              }.get(cname, {})
     return get_substrate(cname, **kwargs)
 
 
@@ -195,6 +214,14 @@ class PallasSubstrate(Substrate):
         super().__init__()
         self.interpret = interpret
 
+    def config_fingerprint(self) -> str:
+        # None resolves at build time via the backend — the *backend* is
+        # the stable fact, so fingerprint what auto mode will pick
+        from ..kernels.spn_eval.kernel import default_interpret
+        interpret = (default_interpret() if self.interpret is None
+                     else bool(self.interpret))
+        return f"interpret={interpret}"
+
     def _build(self, prog, log_domain, batch_tile):
         from ..kernels.spn_eval import build_eval
         from ..kernels.spn_eval.kernel import default_interpret
@@ -232,6 +259,9 @@ class VliwSimSubstrate(Substrate):
         super().__init__()
         self.processor = processor
 
+    def config_fingerprint(self) -> str:
+        return self.processor.name
+
     def _build(self, prog, log_domain, batch_tile):
         from ..core.compiler.pipeline import compile_program
         vprog = compile_program(prog, self.processor)
@@ -258,4 +288,69 @@ class VliwSimSubstrate(Substrate):
         vprog, _, _ = artifact.payload
         res = sim.simulate_leaves(vprog, np.asarray(leaves, np.float32),
                                   self.processor)
+        return self._finish(artifact, res.root_values)
+
+
+@register
+class VliwMultiCoreSubstrate(VliwSimSubstrate):
+    """N replicated VLIW cores + modeled interconnect (``cores=N``).
+
+    The SPN DAG is min-cut partitioned across ``cores`` copies of the
+    paper's processor (:mod:`repro.core.multicore`); cut values travel
+    as shared-register-window rows with explicit SEND/RECV instructions
+    and cycle-accounted latency. The artifact payload is
+    ``(MultiCoreProgram, merged DenseProgram, workspace)``:
+
+    - ``execute`` runs the *merged* fast-sim — all cores' streams
+      decoded into one dense numpy program, bit-identical to both the
+      lockstep checked simulator and the single-core fast-sim oracle;
+    - ``execute_checked`` clocks the N checked cores in lockstep with
+      flow-control stalls — the conformance oracle, whose calibrated
+      cycle count (value-independent) is recorded in the artifact meta
+      as the serving cycle cost.
+    """
+
+    name = "vliw-mc"
+
+    def __init__(self, processor: ProcessorConfig = PTREE, cores: int = 2,
+                 interconnect: multicore.InterconnectConfig = multicore.comm.XBAR,
+                 seed: int = 0, strategy: str = "subtree",
+                 eta_iters: int = 2) -> None:
+        super().__init__(processor)
+        if cores < 1:
+            raise ValueError(f"cores must be >= 1, got {cores}")
+        self.cores = cores
+        self.interconnect = interconnect
+        self.seed = seed
+        self.strategy = strategy
+        self.eta_iters = eta_iters
+
+    def config_fingerprint(self) -> str:
+        return (f"{self.processor.name}/cores={self.cores}"
+                f"/{self.interconnect.fingerprint()}"
+                f"/{self.strategy}/seed={self.seed}"
+                f"/eta={self.eta_iters}")
+
+    def _build(self, prog, log_domain, batch_tile):
+        mcp = multicore.compile_multicore(
+            prog, self.processor, self.cores, self.interconnect,
+            seed=self.seed, strategy=self.strategy,
+            eta_iters=self.eta_iters)
+        dense = multicore.decode_multicore(mcp, cycles=mcp.meta["cycles"])
+        meta = {"cycles": mcp.meta["cycles"],
+                "ops_per_cycle": mcp.meta["ops_per_cycle"],
+                "n_useful_ops": dense.n_useful_ops,
+                "processor": self.processor.name,
+                "multicore": mcp.meta}
+        return (mcp, dense, {}), meta
+
+    def execute(self, artifact, leaves):
+        _, dense, workspace = artifact.payload
+        return self._finish(artifact, fastsim.run(dense, leaves, workspace))
+
+    def execute_checked(self, artifact, leaves):
+        """Lockstep N-core cycle-accurate simulation."""
+        mcp, _, _ = artifact.payload
+        res = multicore.simulate_multicore(
+            mcp, np.asarray(leaves, np.float32))
         return self._finish(artifact, res.root_values)

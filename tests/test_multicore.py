@@ -1,0 +1,233 @@
+"""Multi-core subsystem conformance: partitioner invariants, per-core
+program extraction, lockstep checked-sim vs merged fast-sim
+bit-identity, cross-core parity against the single-core oracle on the
+benchmark suite (both domains), cycle accounting, and the substrate
+configuration fingerprint in the artifact cache."""
+import numpy as np
+import pytest
+
+from repro.core import multicore as mc
+from repro.core import program
+from repro.core.compiler.pipeline import compile_program
+from repro.core.processor import fastsim
+from repro.core.processor.config import PTREE
+from repro.data.spn_datasets import BENCH_SUITE
+from repro.runtime import ArtifactCache, Server, get_substrate
+from repro.data import spn_datasets
+from repro.core import learn
+
+_SUITE_CACHE: dict = {}
+
+
+def suite_prog(name: str):
+    """Learned suite SPN (cached per session, small learn for speed)."""
+    if name not in _SUITE_CACHE:
+        X = spn_datasets.load(name, "train", 300)
+        spn = learn.learn_spn(X, min_instances=64, seed=0)
+        _SUITE_CACHE[name] = (spn, program.lower(spn))
+    return _SUITE_CACHE[name]
+
+
+def _leaves(prog, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, 2, (n, prog.num_vars))
+    return prog.leaves_from_evidence(X).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# partitioner invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", ["subtree", "cone", "level"])
+@pytest.mark.parametrize("cores", [2, 4])
+def test_partition_invariants(nltcs_prog, strategy, cores):
+    part = mc.partition_ops(nltcs_prog, cores, strategy=strategy)
+    # scope-completeness: every binary op on exactly one core
+    assert part.core_of_op.shape == (nltcs_prog.n_ops,)
+    assert int(part.loads.sum()) == nltcs_prog.n_ops
+    # validate_partition (runs in partition_ops) re-checked explicitly:
+    # acyclicity — cross-core edges strictly increase binary level
+    m = nltcs_prog.m
+    for i in range(nltcs_prog.n_ops):
+        for s in (int(nltcs_prog.b[i]), int(nltcs_prog.c[i])):
+            if s >= m and part.core_of_op[s - m] != part.core_of_op[i]:
+                assert part.op_level[s - m] < part.op_level[i]
+
+
+def test_partition_load_balance_bound(nltcs_prog):
+    part = mc.partition_ops(nltcs_prog, 4, strategy="subtree")
+    total = int(part.node_weight.sum())
+    wmax = int(part.node_weight.max())
+    assert part.loads.max() <= -(-total // 4) + wmax
+
+
+def test_partition_deterministic_under_seed(nltcs_prog):
+    a = mc.partition_ops(nltcs_prog, 4, seed=7, passes=2)
+    b = mc.partition_ops(nltcs_prog, 4, seed=7, passes=2)
+    np.testing.assert_array_equal(a.core_of_op, b.core_of_op)
+    assert a.cut_values == b.cut_values
+
+
+def test_comm_plan_rows_are_level_homogeneous(nltcs_prog):
+    """Level-homogeneous channel rows are the deadlock-freedom grading."""
+    part = mc.partition_ops(nltcs_prog, 4)
+    core_index = {int(c): i for i, c in enumerate(
+        sorted(np.unique(part.core_of_op)))}
+    plan = mc.build_comm_plan(nltcs_prog, part, core_index,
+                              banks=PTREE.banks)
+    for row in plan.rows:
+        assert 1 <= len(row.gids) <= plan.icfg.row_capacity
+        for pos, g in enumerate(row.gids):
+            assert part.op_level[g] == row.level
+            assert plan.value_pos[(g, row.dst)] == (row.row_id, pos)
+        assert row.src != row.dst
+
+
+# ---------------------------------------------------------------------------
+# cores=1 degenerates to the single-core program
+# ---------------------------------------------------------------------------
+def test_single_core_partition_is_identity(nltcs_prog):
+    plans, plan = mc.build_core_programs(
+        nltcs_prog, mc.partition_ops(nltcs_prog, 1), banks=PTREE.banks)
+    assert len(plans) == 1 and not plan.rows
+    sub = plans[0].prog
+    # structurally the original program, slot for slot (weight groups are
+    # learning metadata the per-core build intentionally drops)
+    assert (sub.m_ind, sub.m_param) == (nltcs_prog.m_ind,
+                                        nltcs_prog.m_param)
+    np.testing.assert_array_equal(sub.opcode, nltcs_prog.opcode)
+    np.testing.assert_array_equal(sub.b, nltcs_prog.b)
+    np.testing.assert_array_equal(sub.c, nltcs_prog.c)
+    np.testing.assert_array_equal(sub.param_values,
+                                  nltcs_prog.param_values)
+    assert sub.root_slot == nltcs_prog.root_slot
+
+
+def test_cores1_cycles_match_single_core(nltcs_prog):
+    """Acceptance: cores=1 within 5% of vliw-sim cycle counts."""
+    single = compile_program(nltcs_prog, PTREE).num_cycles
+    mcp = mc.compile_multicore(nltcs_prog, PTREE, 1)
+    assert abs(mcp.meta["cycles"] - single) / single <= 0.05
+
+
+# ---------------------------------------------------------------------------
+# lockstep checked sim vs merged fast-sim vs single-core oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cores", [2, 4])
+def test_multicore_bit_identical_nltcs(nltcs_prog, cores):
+    vprog = compile_program(nltcs_prog, PTREE)
+    ref = fastsim.run(fastsim.decode(vprog, PTREE), _leaves(nltcs_prog, 16))
+    mcp = mc.compile_multicore(nltcs_prog, PTREE, cores)
+    leaves = _leaves(nltcs_prog, 16)
+    res = mc.simulate_multicore(mcp, leaves)
+    fast = fastsim.run(mc.decode_multicore(mcp, cycles=res.cycles), leaves)
+    np.testing.assert_array_equal(res.root_values, fast)
+    np.testing.assert_array_equal(fast, ref)
+    # stall accounting: every global cycle of a core is either one
+    # executed instruction or one flow-control stall
+    for finish, stream, stalls in zip(res.core_finish, res.core_cycles,
+                                      res.stall_cycles):
+        assert finish == stream + stalls
+    assert res.cycles == max(res.core_finish)
+
+
+@pytest.mark.parametrize("dataset", BENCH_SUITE)
+def test_cross_core_parity_suite(dataset):
+    """Acceptance: vliw-mc roots bit-identical to single-core vliw-sim
+    on the BENCH_SUITE datasets."""
+    _spn, prog = suite_prog(dataset)
+    vprog = compile_program(prog, PTREE)
+    leaves = _leaves(prog, 8, seed=3)
+    ref = fastsim.run(fastsim.decode(vprog, PTREE), leaves)
+    mcp = mc.compile_multicore(prog, PTREE, 2, eta_iters=0)
+    res = mc.simulate_multicore(mcp, leaves)
+    fast = fastsim.run(mc.decode_multicore(mcp, cycles=res.cycles), leaves)
+    np.testing.assert_array_equal(fast, res.root_values)
+    np.testing.assert_array_equal(fast, ref)
+
+
+@pytest.mark.parametrize("log_domain", [True, False])
+def test_multicore_substrate_both_domains(nltcs_prog, log_domain):
+    """Substrate-level parity in both domains, fast vs checked."""
+    mc_sub = get_substrate("vliw-mc", cores=2)
+    sc_sub = get_substrate("vliw-sim")
+    art_mc = mc_sub.compile(nltcs_prog, query="marginal",
+                            log_domain=log_domain)
+    art_sc = sc_sub.compile(nltcs_prog, query="marginal",
+                            log_domain=log_domain)
+    leaves = _leaves(nltcs_prog, 8, seed=5)
+    fast = mc_sub.execute(art_mc, leaves)
+    np.testing.assert_array_equal(fast, mc_sub.execute_checked(art_mc,
+                                                               leaves))
+    np.testing.assert_array_equal(fast, sc_sub.execute(art_sc, leaves))
+
+
+def test_multicore_mpe_semiring(nltcs_prog):
+    """The max-product twin partitions and executes identically."""
+    sub = get_substrate("vliw-mc", cores=2)
+    art = sub.compile(nltcs_prog, query="mpe", log_domain=True)
+    ref = get_substrate("numpy").compile(nltcs_prog, query="mpe",
+                                         log_domain=True)
+    leaves = _leaves(nltcs_prog, 6, seed=2)
+    got = sub.execute(art, leaves)
+    want = get_substrate("numpy").execute(ref, leaves)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# cycle accounting / scaling
+# ---------------------------------------------------------------------------
+def test_multicore_speedup_at_four_cores():
+    """Cycle-count scaling floor on the bench-sized nltcs SPN (the
+    benchmark records the full 1/2/4-core curve in BENCH_serve.json)."""
+    X = spn_datasets.load("nltcs", "train", 600)
+    prog = program.lower(learn.learn_spn(X, min_instances=60, seed=0))
+    single = compile_program(prog, PTREE).num_cycles
+    mcp = mc.compile_multicore(prog, PTREE, 4)
+    assert mcp.meta["cycles"] * 2 < single     # ≥ 2x, deterministic
+    assert mcp.meta["cut_values"] > 0
+    assert mcp.meta["comm"]["values"] >= mcp.meta["cut_values"]
+
+
+def test_calibrated_cycles_are_value_independent(nltcs_prog):
+    mcp = mc.compile_multicore(nltcs_prog, PTREE, 2)
+    a = mc.simulate_multicore(mcp, _leaves(nltcs_prog, 1, seed=0))
+    b = mc.simulate_multicore(mcp, _leaves(nltcs_prog, 32, seed=9))
+    assert a.cycles == b.cycles == mcp.meta["cycles"]
+
+
+# ---------------------------------------------------------------------------
+# cache fingerprint + server integration
+# ---------------------------------------------------------------------------
+def test_cache_distinguishes_substrate_config(small_prog):
+    """Acceptance: same program, different substrate configuration must
+    MISS — the key carries config_fingerprint(), not just the name."""
+    cache = ArtifactCache(capacity=8)
+    two = get_substrate("vliw-mc", cores=2)
+    four = get_substrate("vliw-mc", cores=4)
+    a2 = cache.get_or_compile(two, small_prog, query="marginal")
+    a4 = cache.get_or_compile(four, small_prog, query="marginal")
+    assert a2 is not a4
+    assert cache.stats()["misses"] == 2
+    assert a2.meta["multicore"]["n_cores"] == 2
+    assert a4.meta["multicore"]["n_cores"] == 4
+    # and the same config hits
+    assert cache.get_or_compile(two, small_prog, query="marginal") is a2
+    # pallas interpret modes are distinct configurations too
+    on = get_substrate("pallas", interpret=True)
+    off = get_substrate("pallas", interpret=False)
+    assert (ArtifactCache.key(small_prog, "marginal", on, 128, True)
+            != ArtifactCache.key(small_prog, "marginal", off, 128, True))
+
+
+def test_server_reports_multicore_stats(small_spn):
+    srv = Server(small_spn, substrates=("numpy", "vliw-mc"), cores=2)
+    x = np.abs(np.random.default_rng(0).integers(
+        0, 2, (5, srv.prog.num_vars)))
+    np.testing.assert_allclose(srv.query(x, "joint", "vliw-mc"),
+                               srv.query(x, "joint", "numpy"), atol=1e-4)
+    stats = srv.stats()["multicore"]
+    assert len(stats) == 1
+    entry = next(iter(stats.values()))
+    assert entry["cycles"] > 0 and len(entry["core_utilization"]) >= 1
+    assert entry["comm_values_per_batch"] >= 0
+    assert "stall_cycles" in entry and "barrier_idle_cycles" in entry

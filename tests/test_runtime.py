@@ -15,7 +15,7 @@ from repro.runtime import (ArtifactCache, MicroBatcher, ParityError, Server,
 from repro.runtime.substrates import NumpySubstrate
 
 QUERIES = ("joint", "marginal", "mpe", "sample")
-SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim")
+SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim", "vliw-mc")
 
 
 @pytest.fixture(scope="module")
