@@ -21,9 +21,19 @@ speedup-vs-cores curve plus the communication/compute cycle ratio, per
 dataset. The default run records the 1/2/4-core points so the scaling
 trajectory accumulates in ``BENCH_serve.json`` alongside throughput.
 
+``--topology {xbar,ring,mesh,torus}`` selects the NoC the served
+``vliw-mc`` substrate models. Independently of it, every run records a
+**NoC topology sweep** (``record["noc"]``): per topology the calibrated
+cycle count, per-link contention (link-stall cycles, busiest-link
+occupancy) and — for physical topologies — the topology-aware vs naive
+placement delta, at the sweep's largest core count. Those cycle counts
+are value- and machine-independent, so the ``--compare`` gate holds
+them exactly — any increase fails (wall-clock throughput keeps its
+noise-tolerant >25% gate).
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--dataset nltcs]
         [--batch 256] [--out BENCH_serve.json] [--compare BENCH_serve.json]
-        [--cores 1,2,4,8]
+        [--cores 1,2,4,8] [--topology mesh]
 """
 from __future__ import annotations
 
@@ -125,18 +135,97 @@ def compare_records(new: dict, baseline: dict,
                 and baseline.get("pallas_interpret")
                 != new.get("pallas_interpret")):
             continue
+        if (name == "vliw-mc"
+                and baseline.get("mc_topology", "xbar")
+                != new.get("mc_topology", "xbar")):
+            continue    # different NoC configs are incommensurable
         slowdown = cur["us_per_batch"] / (old["us_per_batch"] * scale) - 1.0
         if slowdown > tolerance:
             failures.append(
                 f"{name}: {cur['us_per_batch']:.0f} us/batch vs baseline "
                 f"{old['us_per_batch']:.0f} x{scale:.2f} machine-speed "
                 f"scale (+{slowdown:.0%} > {tolerance:.0%} tolerance)")
+
+    # NoC topology-sweep cycle counts are deterministic and machine-
+    # independent, so they are held EXACTLY: any increase fails (a
+    # decrease is an improvement and passes). A sweep-shape mismatch is
+    # announced loudly instead of silently shrinking the gate.
+    for ds, old_sweep in (baseline.get("noc") or {}).items():
+        new_sweep = (new.get("noc") or {}).get(ds)
+        if not new_sweep or new_sweep.get("cores") != old_sweep.get("cores"):
+            print(f"  WARNING: noc gate skipped for {ds!r} — sweep shape "
+                  f"changed vs baseline (cores "
+                  f"{old_sweep.get('cores')} -> "
+                  f"{(new_sweep or {}).get('cores')}); regenerate the "
+                  f"baseline to restore coverage")
+            continue
+        for topo, old_t in old_sweep.get("topologies", {}).items():
+            cur_t = new_sweep.get("topologies", {}).get(topo)
+            if cur_t is None:
+                print(f"  WARNING: noc gate skipped for {ds}/{topo} — "
+                      f"topology missing from the new sweep")
+                continue
+            if cur_t["cycles"] > old_t["cycles"]:
+                failures.append(
+                    f"noc {ds}/{topo}@{old_sweep['cores']}c: "
+                    f"{cur_t['cycles']} modeled cycles vs baseline "
+                    f"{old_t['cycles']} (deterministic counts are held "
+                    f"exactly; update the baseline deliberately)")
     return failures
+
+
+def noc_sweep(dataset: str, prog, cores: int,
+              topologies: tuple = ("xbar", "ring", "mesh", "torus"),
+              rows: list[str] | None = None) -> dict:
+    """Modeled NoC comparison at one core count, per topology.
+
+    Records the calibrated lockstep cycle count, the flat and
+    hop-weighted cut, per-link contention (link-stall cycles and
+    busiest-link occupancy from the probe simulation) and — for
+    physical topologies — the cycle delta of topology-aware core
+    placement vs the naive flat partition. All numbers are
+    value-independent modeled cycles: deterministic and machine-free,
+    so :func:`compare_records` holds them exactly (any increase over
+    the baseline fails the gate).
+    """
+    out: dict = {"cores": cores, "topologies": {}}
+    for topo in topologies:
+        icfg = multicore.named_interconnect(topo)
+        meta = multicore.compile_multicore(prog, PTREE, cores, icfg).meta
+        comm = meta["comm"]
+        entry = {
+            "cycles": int(meta["cycles"]),
+            "cut_values": meta["cut_values"],
+            "hop_cut": meta["hop_cut"],
+            "link_stall_cycles": comm.get("link_stall_cycles", 0),
+            "inject_stall_cycles": comm.get("inject_stall_cycles", 0),
+            "busiest_link_occupancy": comm.get("busiest_link_occupancy",
+                                               0.0),
+        }
+        extra = ""
+        if topo != "xbar":
+            naive = multicore.compile_multicore(
+                prog, PTREE, cores, icfg, placement="naive").meta
+            entry["naive_cycles"] = int(naive["cycles"])
+            entry["placement_gain"] = round(
+                1.0 - entry["cycles"] / max(entry["naive_cycles"], 1), 4)
+            extra = (f", naive-place {entry['naive_cycles']} "
+                     f"({entry['placement_gain']:+.0%} from placement)")
+        out["topologies"][topo] = entry
+        if rows is not None:
+            rows.append(csv_row(f"noc_{dataset}_{topo}_c{cores}",
+                                entry["cycles"],
+                                f"hop_cut={entry['hop_cut']}"))
+        print(f"  [{dataset}] noc {topo}@{cores}c: {entry['cycles']} "
+              f"cycles, hop_cut={entry['hop_cut']}, "
+              f"link_stalls={entry['link_stall_cycles']}, busiest_link="
+              f"{entry['busiest_link_occupancy']}{extra}")
+    return out
 
 
 def multicore_scaling(dataset: str, cores_list: list[int],
                       rows: list[str] | None = None,
-                      prog=None) -> dict:
+                      prog=None, icfg=None) -> dict:
     """Speedup-vs-cores curve of ``vliw-mc`` against single-core VLIW.
 
     Cycle counts come from the calibrated lockstep checked simulation
@@ -150,11 +239,13 @@ def multicore_scaling(dataset: str, cores_list: list[int],
 
     if prog is None:
         _spn, prog = bench_spn(dataset)
+    icfg = icfg or multicore.XBAR
     base = compile_program(prog, PTREE)
-    out: dict = {"single_core_cycles": base.num_cycles, "cores": {}}
+    out: dict = {"single_core_cycles": base.num_cycles,
+                 "topology": icfg.topology, "cores": {}}
     print(f"  [{dataset}] single-core vliw-sim: {base.num_cycles} cycles")
     for k in cores_list:
-        mcp = multicore.compile_multicore(prog, PTREE, k)
+        mcp = multicore.compile_multicore(prog, PTREE, k, icfg)
         meta = mcp.meta
         cycles = int(meta["cycles"])
         n_eff = meta["effective_cores"]
@@ -189,7 +280,9 @@ def multicore_scaling(dataset: str, cores_list: list[int],
 def main(dataset: str = "nltcs", batch: int = 256,
          out_path: str = "BENCH_serve.json",
          compare_path: str | None = None,
-         cores_list: list[int] | None = None) -> list[str]:
+         cores_list: list[int] | None = None,
+         topology: str = "xbar",
+         noc_datasets: list[str] | None = None) -> list[str]:
     baseline = None
     if compare_path:
         try:
@@ -199,12 +292,13 @@ def main(dataset: str = "nltcs", batch: int = 256,
             print(f"  (no baseline at {compare_path}; gate skipped)")
 
     spn, prog = bench_spn(dataset)
-    server = Server(spn)
+    server = Server(spn, topology=topology)
     Xq = random_mask(
         np.random.default_rng(0).integers(0, 2, (batch, prog.num_vars)),
         0.3, seed=0)
     record: dict = {"dataset": dataset, "batch": batch, "query": "marginal",
-                    "n_ops": prog.n_ops, "substrates": {}}
+                    "n_ops": prog.n_ops, "mc_topology": topology,
+                    "substrates": {}}
     rows: list[str] = []
 
     # round-robin over substrates so CPU-throttle phases hit all of them
@@ -244,9 +338,21 @@ def main(dataset: str = "nltcs", batch: int = 256,
 
     # multi-core scaling points (calibrated lockstep cycle counts), on
     # the same program the throughput numbers above were measured on
+    cores_list = cores_list or [1, 2, 4]
     record["multicore_scaling"] = {
-        dataset: multicore_scaling(dataset, cores_list or [1, 2, 4], rows,
-                                   prog=server.prog)}
+        dataset: multicore_scaling(
+            dataset, cores_list, rows, prog=server.prog,
+            icfg=multicore.named_interconnect(topology))}
+
+    # NoC topology sweep at the largest swept core count: modeled
+    # mesh/torus/ring vs ideal-crossbar cycles, per-link contention and
+    # the topology-aware placement delta, per dataset (the main bench
+    # dataset plus larger suite SPNs whose traffic makes placement bite)
+    noc_cores = max(cores_list)
+    record["noc"] = {}
+    for ds in dict.fromkeys(noc_datasets or [dataset, "kdd"]):
+        ds_prog = server.prog if ds == dataset else bench_spn(ds)[1]
+        record["noc"][ds] = noc_sweep(ds, ds_prog, noc_cores, rows=rows)
 
     # fast-sim vs checked-sim: same artifact, same leaves, bit-identical
     art = server.artifact("marginal", "vliw-sim")
@@ -296,8 +402,19 @@ if __name__ == "__main__":
     ap.add_argument("--cores", default=None, metavar="1,2,4,8",
                     help="multi-core scaling sweep: comma-separated core "
                          "counts for the vliw-mc cycle-count curve "
-                         "(default 1,2,4)")
+                         "(default 1,2,4); the NoC topology sweep runs "
+                         "at the largest count")
+    ap.add_argument("--topology", default="xbar",
+                    choices=["xbar", "ring", "mesh", "torus"],
+                    help="NoC topology for the served vliw-mc substrate "
+                         "and the scaling sweep")
+    ap.add_argument("--noc-datasets", default=None, metavar="nltcs,kdd",
+                    help="datasets for the NoC topology sweep "
+                         "(default: the bench dataset + kdd)")
     args = ap.parse_args()
     cores = ([int(c) for c in args.cores.split(",")]
              if args.cores else None)
-    main(args.dataset, args.batch, args.out, args.compare, cores)
+    main(args.dataset, args.batch, args.out, args.compare, cores,
+         topology=args.topology,
+         noc_datasets=(args.noc_datasets.split(",")
+                       if args.noc_datasets else None))

@@ -22,18 +22,23 @@ The ``vliw-mc`` substrate (:mod:`repro.runtime.substrates`) packages it
 for serving: throughput becomes a function of ``cores=N`` instead of a
 single-datapath constant.
 """
-from .comm import (ChannelRow, CommPlan, Interconnect, InterconnectConfig,
-                   build_comm_plan)
+from .comm import (MESH, RING, TOPOLOGIES, TORUS, XBAR, ChannelRow,
+                   CommPlan, Interconnect, InterconnectConfig,
+                   build_comm_plan, named_interconnect)
 from .compile import CorePlan, MultiCoreProgram, build_core_programs, \
     compile_multicore
 from .fastsim import decode_multicore
-from .partition import Partition, partition_ops, validate_partition
+from .partition import (Partition, partition_ops, place_cores,
+                        traffic_matrix, validate_partition)
 from .sim import MCSimResult, simulate_multicore
 
 __all__ = [
     "ChannelRow", "CommPlan", "Interconnect", "InterconnectConfig",
-    "build_comm_plan", "CorePlan", "MultiCoreProgram",
+    "build_comm_plan", "named_interconnect",
+    "TOPOLOGIES", "XBAR", "RING", "MESH", "TORUS",
+    "CorePlan", "MultiCoreProgram",
     "build_core_programs", "compile_multicore", "decode_multicore",
-    "Partition", "partition_ops", "validate_partition",
+    "Partition", "partition_ops", "place_cores", "traffic_matrix",
+    "validate_partition",
     "MCSimResult", "simulate_multicore",
 ]

@@ -15,39 +15,167 @@ they give the lockstep schedule a strictly decreasing wait-level
 ordering, which is what makes it deadlock-free (see
 :mod:`repro.core.compiler.pipeline`).
 
-Transfer latency is cycle-accounted per row:
-``hop_latency(src, dst) + ceil(members / link_width)`` — a flat crossbar
-by default (``hops=1``); ring distances model cheaper NoCs.
+Transfer latency is cycle-accounted per transfer:
+``hops(src, dst) * hop_latency + ceil(members / link_width)`` in the
+uncontended case. Four topologies are modeled:
+
+``xbar``
+    The *ideal* flat crossbar: every (src, dst) pair owns a dedicated
+    wire, so hops ≡ 1 and concurrent transfers never interact. This is
+    the optimistic pre-NoC model and is kept bit-exact (the golden
+    cycle fixtures pin it).
+``ring``
+    Cores on a bidirectional ring; hop count is the shorter arc. Links
+    are physical and shared: transfers whose arcs overlap serialize.
+``mesh`` / ``torus``
+    Cores on a near-square 2-D grid (largest divisor ``h ≤ √n`` when
+    one exists, else the ragged ``ceil``-grid — unoccupied positions
+    still carry routers, as on a partially-populated SoC). Routing is
+    dimension-ordered (XY): the full x-leg in the source row, then the
+    y-leg in the destination column. ``torus`` adds per-axis wraparound
+    links and picks the shorter direction per axis.
+
+For the physical topologies the runtime :class:`Interconnect` charges
+*per-link occupancy*: each directed physical link is busy for
+``ceil(members / link_width)`` cycles per transfer crossing it, the
+head flit pays ``hop_latency`` per hop, transfers whose routes share a
+link serialize on it, and each core's injection port admits one row's
+flits at a time (injection arbitration). ``xbar`` bypasses all of this
+by construction.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
 from ..program import TensorProgram
 from .partition import Partition
 
+TOPOLOGIES = ("xbar", "ring", "mesh", "torus")
+
 
 @dataclasses.dataclass(frozen=True)
 class InterconnectConfig:
     """Modeled interconnect between cores."""
     name: str = "xbar"
-    topology: str = "xbar"      # "xbar" (flat) | "ring"
+    topology: str = "xbar"      # "xbar" | "ring" | "mesh" | "torus"
     hop_latency: int = 1        # cycles per hop, SEND issue -> visibility
     link_width: int = 32        # values serialized per cycle per link
     row_capacity: int = 32      # max values per channel row (≤ banks)
 
+    # ---------------- geometry ---------------------------------------- #
+    def grid_shape(self, n_cores: int) -> tuple[int, int]:
+        """(w, h) of the mesh/torus grid for ``n_cores`` cores.
+
+        Prefers the most square exact factorization (``h`` = largest
+        divisor ≤ √n); prime-ish counts fall back to the ragged
+        ``w = ceil(√n)`` grid whose unoccupied tail positions are
+        router-only nodes.
+        """
+        n = max(n_cores, 1)
+        h = max((d for d in range(1, int(math.isqrt(n)) + 1)
+                 if n % d == 0), default=1)
+        if h == 1 and n > 3:          # prime: avoid a degenerate 1-D chain
+            w = math.ceil(math.sqrt(n))
+            return w, math.ceil(n / w)
+        return n // h, h
+
+    def coords(self, core: int, n_cores: int) -> tuple[int, int]:
+        w, _h = self.grid_shape(n_cores)
+        return core % w, core // w
+
+    # ---------------- hop metric -------------------------------------- #
     def hops(self, src: int, dst: int, n_cores: int) -> int:
+        if src == dst:
+            return 0
         if self.topology == "ring" and n_cores > 1:
             d = abs(src - dst)
             return min(d, n_cores - d)
-        return 1
+        if self.topology in ("mesh", "torus"):
+            w, h = self.grid_shape(n_cores)
+            (x0, y0), (x1, y1) = (self.coords(src, n_cores),
+                                  self.coords(dst, n_cores))
+            dx, dy = abs(x0 - x1), abs(y0 - y1)
+            if self.topology == "torus":
+                dx, dy = min(dx, w - dx), min(dy, h - dy)
+            return dx + dy
+        if self.topology == "xbar":
+            return 1
+        raise ValueError(f"unknown topology {self.topology!r}; "
+                         f"pick from {TOPOLOGIES}")
+
+    # ---------------- routing ----------------------------------------- #
+    def route(self, src: int, dst: int,
+              n_cores: int) -> tuple[tuple[int, int], ...]:
+        """Directed physical links the transfer crosses, in order.
+
+        ``xbar`` returns the dedicated (src, dst) wire. ``ring`` walks
+        the shorter arc (ties break toward ascending indices).
+        ``mesh``/``torus`` use XY dimension-ordered routing over grid
+        node ids ``y * w + x`` (which equal core ids on exact grids;
+        ragged grids route through router-only tail nodes the same
+        way). ``len(route) == hops`` for every physical topology.
+        """
+        if src == dst:
+            return ()
+        if self.topology == "xbar":
+            return ((src, dst),)
+        if self.topology == "ring":
+            n = n_cores
+            fwd = (dst - src) % n
+            step = 1 if fwd <= n - fwd else -1
+            path, cur = [], src
+            while cur != dst:
+                nxt = (cur + step) % n
+                path.append((cur, nxt))
+                cur = nxt
+            return tuple(path)
+        if self.topology in ("mesh", "torus"):
+            w, h = self.grid_shape(n_cores)
+            (x0, y0), (x1, y1) = (self.coords(src, n_cores),
+                                  self.coords(dst, n_cores))
+            path: list[tuple[int, int]] = []
+
+            def shorter(delta: int, size: int) -> int:
+                if self.topology == "torus" and abs(delta) > size - abs(delta):
+                    return delta - size if delta > 0 else delta + size
+                return delta
+
+            wrap = self.topology == "torus"
+            dx, cur = shorter(x1 - x0, w), x0
+            for _ in range(abs(dx)):                # x-leg in the src row
+                nxt = (cur + (1 if dx > 0 else -1)) % w if wrap \
+                    else cur + (1 if dx > 0 else -1)
+                path.append((y0 * w + cur, y0 * w + nxt))
+                cur = nxt
+            dy, cur = shorter(y1 - y0, h), y0
+            for _ in range(abs(dy)):                # y-leg in the dst column
+                nxt = (cur + (1 if dy > 0 else -1)) % h if wrap \
+                    else cur + (1 if dy > 0 else -1)
+                path.append((cur * w + x1, nxt * w + x1))
+                cur = nxt
+            return tuple(path)
+        raise ValueError(f"unknown topology {self.topology!r}; "
+                         f"pick from {TOPOLOGIES}")
+
+    # ---------------- latency ----------------------------------------- #
+    def serial_cycles(self, members: int) -> int:
+        return -(-members // self.link_width)
 
     def transfer_cycles(self, members: int, src: int = 0, dst: int = 1,
                         n_cores: int = 2) -> int:
-        serial = -(-members // self.link_width)
-        return self.hops(src, dst, n_cores) * self.hop_latency + serial
+        """Uncontended transfer latency (contention is charged by the
+        runtime :class:`Interconnect`, which sees concurrent traffic)."""
+        return (self.hops(src, dst, n_cores) * self.hop_latency
+                + self.serial_cycles(members))
+
+    def hop_matrix(self, n_cores: int) -> np.ndarray:
+        """(n_cores, n_cores) all-pairs hop counts."""
+        return np.asarray([[self.hops(a, b, n_cores)
+                            for b in range(n_cores)]
+                           for a in range(n_cores)], np.int64)
 
     def fingerprint(self) -> str:
         return (f"{self.topology}/hop={self.hop_latency}"
@@ -55,6 +183,17 @@ class InterconnectConfig:
 
 
 XBAR = InterconnectConfig()
+RING = InterconnectConfig(name="ring", topology="ring")
+MESH = InterconnectConfig(name="mesh", topology="mesh")
+TORUS = InterconnectConfig(name="torus", topology="torus")
+
+
+def named_interconnect(topology: str, **overrides) -> InterconnectConfig:
+    """Build an :class:`InterconnectConfig` for a topology name."""
+    if topology not in TOPOLOGIES:
+        raise ValueError(f"unknown topology {topology!r}; "
+                         f"pick from {TOPOLOGIES}")
+    return InterconnectConfig(name=topology, topology=topology, **overrides)
 
 
 @dataclasses.dataclass
@@ -69,12 +208,23 @@ class ChannelRow:
 
 @dataclasses.dataclass
 class CommPlan:
-    """All channel rows of one partition + their latency accounting."""
+    """All channel rows of one partition + their latency accounting.
+
+    Channel-row ``src``/``dst`` are *effective* (compacted) core
+    indices — the window/recv layout space. Routing geometry, however,
+    lives on the **physical** core grid the partitioner placed onto:
+    ``label_of`` maps effective indices back to the partition's core
+    labels and ``geom_cores`` is the machine's full core count, so hop
+    counts and link routes agree with what topology-aware placement
+    optimized even when some physical cores ended up empty.
+    """
     rows: list                              # [ChannelRow, ...]
     icfg: InterconnectConfig
-    n_cores: int
+    n_cores: int                            # effective cores
     # (gid, dst core) -> (row_id, position): consumer-side lookup
     value_pos: dict = dataclasses.field(default_factory=dict)
+    geom_cores: int = 0                     # physical cores (0 = n_cores)
+    label_of: dict = dataclasses.field(default_factory=dict)
 
     @property
     def members(self) -> dict:
@@ -85,9 +235,22 @@ class CommPlan:
         """Values crossed per batch (multicast unrolled)."""
         return sum(len(r.gids) for r in self.rows)
 
+    def geometry(self, core: int) -> int:
+        """Physical core label of effective core index ``core``."""
+        return self.label_of.get(core, core)
+
+    @property
+    def n_geom(self) -> int:
+        return self.geom_cores or self.n_cores
+
     def latency(self, row: ChannelRow) -> int:
-        return self.icfg.transfer_cycles(len(row.gids), row.src, row.dst,
-                                         self.n_cores)
+        return self.icfg.transfer_cycles(
+            len(row.gids), self.geometry(row.src), self.geometry(row.dst),
+            self.n_geom)
+
+    def route(self, row: ChannelRow) -> tuple:
+        return self.icfg.route(self.geometry(row.src),
+                               self.geometry(row.dst), self.n_geom)
 
     def stats(self) -> dict:
         return {"rows": len(self.rows), "values": self.volume,
@@ -144,7 +307,9 @@ def build_comm_plan(prog: TensorProgram, part: Partition,
             for pos, g in enumerate(chunk):
                 value_pos[(g, dst)] = (row.row_id, pos)
     return CommPlan(rows=rows, icfg=icfg, n_cores=len(core_index) or 1,
-                    value_pos=value_pos)
+                    value_pos=value_pos,
+                    geom_cores=int(part.n_cores),
+                    label_of={v: int(k) for k, v in core_index.items()})
 
 
 def global_heights(prog: TensorProgram) -> np.ndarray:
@@ -163,25 +328,82 @@ class Interconnect:
 
     Arrived rows stay readable (window memory, AIA register-sharing
     semantics), so consumers may evict and re-RECV a row freely.
+
+    Physical topologies (``ring``/``mesh``/``torus``) charge per-link
+    occupancy: a transfer's head flit pays ``hop_latency`` per hop and
+    each link on the route is busy ``serial`` cycles, so concurrent
+    transfers whose routes share a link serialize on it; a core's
+    injection port admits one row's flits at a time. ``xbar`` keeps the
+    ideal dedicated-wire model (arrival = push + uncontended latency),
+    bit-exact with the pre-NoC interconnect.
     """
 
     def __init__(self, plan: CommPlan):
         self.plan = plan
+        icfg = plan.icfg
         self._members = plan.members
         self._latency = {r.row_id: plan.latency(r) for r in plan.rows}
+        self._serial = {r.row_id: icfg.serial_cycles(len(r.gids))
+                        for r in plan.rows}
+        # routes + injection ports live on the physical core grid the
+        # partitioner placed onto (see CommPlan.geometry)
+        self._src = {r.row_id: plan.geometry(r.src) for r in plan.rows}
+        self._route = ({} if icfg.topology == "xbar" else
+                       {r.row_id: plan.route(r) for r in plan.rows})
         self.rows: dict[int, tuple[int, np.ndarray]] = {}
         self.sends = 0
         self.values_sent = 0
         self.max_resident = 0
+        # per-link contention state (empty under the ideal crossbar)
+        self.link_free: dict[tuple[int, int], int] = {}
+        self.link_busy: dict[tuple[int, int], int] = {}
+        self.inject_free: dict[int, int] = {}
+        self.link_stall_cycles = 0      # waits for a busy route link
+        self.inject_stall_cycles = 0    # waits for the injection port
 
     def members(self, row_id: int) -> int:
         return self._members[row_id]
 
     def push(self, row_id: int, payload: np.ndarray, now: int) -> None:
-        self.rows[row_id] = (now + self._latency[row_id], payload)
+        route = self._route.get(row_id)
+        if route is None:
+            # ideal crossbar: dedicated wires, no shared resources
+            arrival = now + self._latency[row_id]
+        else:
+            icfg, serial = self.plan.icfg, self._serial[row_id]
+            src = self._src[row_id]
+            start = max(now, self.inject_free.get(src, 0))
+            self.inject_stall_cycles += start - now
+            self.inject_free[src] = start + serial
+            head = start
+            for link in route:
+                t = max(head, self.link_free.get(link, 0))
+                self.link_free[link] = t + serial
+                self.link_busy[link] = self.link_busy.get(link, 0) + serial
+                head = t + icfg.hop_latency
+            arrival = head + serial
+            self.link_stall_cycles += \
+                arrival - (start + len(route) * icfg.hop_latency + serial)
+        self.rows[row_id] = (arrival, payload)
         self.sends += 1
         self.values_sent += payload.shape[0]
         self.max_resident = max(self.max_resident, len(self.rows))
+
+    def link_stats(self, total_cycles: int | None = None) -> dict:
+        """Per-link occupancy accounting (all zeros under ``xbar``)."""
+        busiest = max(self.link_busy.values(), default=0)
+        out = {
+            "links_used": len(self.link_busy),
+            "busiest_link_busy_cycles": busiest,
+            "link_stall_cycles": self.link_stall_cycles,
+            "inject_stall_cycles": self.inject_stall_cycles,
+            "link_busy_cycles": {f"{a}->{b}": c for (a, b), c
+                                 in sorted(self.link_busy.items())},
+        }
+        if total_cycles:
+            out["busiest_link_occupancy"] = round(
+                busiest / max(total_cycles, 1), 4)
+        return out
 
     def arrived(self, row_id: int, now: int):
         entry = self.rows.get(row_id)

@@ -174,21 +174,28 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
                       n_cores: int = 2, icfg: InterconnectConfig = XBAR,
                       *, seed: int = 0, strategy: str = "subtree",
                       eta_iters: int = 2, passes: int = 0,
+                      placement: str = "aware",
                       **compile_kwargs) -> MultiCoreProgram:
     """Partition, build and VLIW-compile ``prog`` for ``n_cores`` cores.
 
     After the optimistic first compile, ``eta_iters`` rounds of
     *timing-probe feedback* run: a 1-row lockstep simulation (cycle
     counts are value-independent) measures when every channel row
-    actually arrives, and each core is recompiled scheduling its remote
-    reads at those ETAs — local work fills what used to be flow-control
-    stalls. The best-cycle iteration wins (the probe is exact, so this
-    is a monotone ratchet on the real serving cost).
+    actually arrives — per-link NoC contention included — and each core
+    is recompiled scheduling its remote reads at those ETAs: local work
+    fills what used to be flow-control stalls, and schedules adapt to
+    measured link contention. The best-cycle iteration wins (the probe
+    is exact, so this is a monotone ratchet on the real serving cost).
+
+    ``placement="aware"`` (default) lets the partitioner permute core
+    labels on physical topologies so chatty core pairs land adjacent
+    (see :func:`~repro.core.multicore.partition.place_cores`);
+    ``"naive"`` keeps the flat partition for comparison.
     """
     from .sim import simulate_multicore   # local import: cycle avoidance
 
     part = partition_ops(prog, n_cores, seed=seed, strategy=strategy,
-                         passes=passes)
+                         passes=passes, icfg=icfg, placement=placement)
     plans, plan = build_core_programs(prog, part, icfg, banks=cfg.banks)
     root_gid = prog.root_slot - prog.m
     root_core = next(i for i, cp in enumerate(plans)
@@ -228,7 +235,12 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
     mcp.meta = {
         "n_cores": n_cores, "effective_cores": len(plans),
         "cut_values": part.cut_values,
+        "hop_cut": part.hop_cut,
         "strategy": part.strategy,
+        "topology": icfg.topology,
+        "interconnect": icfg.fingerprint(),
+        "placement": placement,
+        "core_placement": part.core_placement,
         "comm": dict(plan.stats(), **best_res.comm),
         "cycles": best_res.cycles,
         "core_cycles": [cp.vprog.num_cycles for cp in plans],

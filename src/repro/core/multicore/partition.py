@@ -40,6 +40,18 @@ deterministic under ``seed``) within the bound.
 
 Communication volume counts (value, destination-core) pairs — the
 multicast unrolling the interconnect actually ships.
+
+**Topology awareness** (``icfg`` + ``placement="aware"``): on a
+physical NoC (ring/mesh/torus) not every cut edge costs the same — a
+value shipped across the mesh diagonal pays more hops and occupies more
+links than one between neighbors. After the flat min-cut, two extra
+steps run: (1) *core placement* — the core labels are permuted on the
+topology so chatty core pairs land adjacent, minimizing hop-weighted
+traffic plus the busiest-link load (:func:`place_cores`); (2) a second
+round of single-node moves whose gain weighs each cut edge by
+``hops(src, dst)``. Under ``icfg=None`` or the ideal ``xbar`` both
+steps are skipped and the result is bit-identical to the flat
+partitioner (the golden cycle fixtures pin this).
 """
 from __future__ import annotations
 
@@ -66,6 +78,9 @@ class Partition:
     cut_values: int               # (value, destination-core) pairs
     seed: int
     strategy: str = "subtree"
+    topology: str = "xbar"        # topology the placement was tuned for
+    hop_cut: int = 0              # Σ hops(src,dst) over cut pairs
+    core_placement: list | None = None   # applied label permutation
 
     @property
     def used_cores(self) -> np.ndarray:
@@ -107,17 +122,113 @@ def _cut_volume(core_of_node: np.ndarray, out_nodes) -> int:
     return vol
 
 
+def _hop_cut_volume(core_of_node: np.ndarray, out_nodes,
+                    hops: np.ndarray) -> int:
+    """Hop-weighted (value, destination-core) cut volume."""
+    n_cores = hops.shape[0]
+    return int((traffic_matrix(core_of_node, out_nodes, n_cores)
+                * hops).sum())
+
+
+def traffic_matrix(core_of_node: np.ndarray, out_nodes,
+                   n_cores: int) -> np.ndarray:
+    """(K, K) values shipped core→core (multicast unrolled)."""
+    T = np.zeros((n_cores, n_cores), np.int64)
+    for u, consumers in enumerate(out_nodes):
+        cu = int(core_of_node[u])
+        for d in {int(core_of_node[v]) for v in consumers} - {cu}:
+            T[cu, d] += 1
+    return T
+
+
+def place_cores(traffic: np.ndarray, icfg, n_cores: int) -> np.ndarray:
+    """Core-label permutation placing chatty core pairs adjacent.
+
+    Minimizes ``Σ traffic[a,b] · hops(π(a), π(b))`` plus the busiest
+    physical link's load under the topology's routing (the congestion
+    term breaks hop-cost ties toward spreading traffic over disjoint
+    routes). Greedy constructive placement — chattiest cores first,
+    each at the position minimizing its incremental hop cost — followed
+    by deterministic pairwise-swap descent on the full objective.
+    Returns ``perm`` with ``perm[old_label] = new_label``.
+    """
+    hops = icfg.hop_matrix(n_cores)
+    routes = {(a, b): icfg.route(a, b, n_cores)
+              for a in range(n_cores) for b in range(n_cores) if a != b}
+
+    def cost(perm: np.ndarray) -> int:
+        hop_cost = int((traffic * hops[perm[:, None], perm[None, :]]).sum())
+        load: dict = {}
+        for a in range(n_cores):
+            for b in range(n_cores):
+                t = int(traffic[a, b])
+                if t and a != b:
+                    for link in routes[(int(perm[a]), int(perm[b]))]:
+                        load[link] = load.get(link, 0) + t
+        return hop_cost + (max(load.values()) if load else 0)
+
+    sym = traffic + traffic.T
+    perm = np.full(n_cores, -1, np.int64)
+    free = list(range(n_cores))
+    placed: list[int] = []
+    for _ in range(n_cores):
+        if not placed:
+            c = max(range(n_cores), key=lambda c: (int(sym[c].sum()), -c))
+            pos = free[0]
+        else:
+            c = max((c for c in range(n_cores) if perm[c] < 0),
+                    key=lambda c: (int(sym[c, placed].sum()), -c))
+            pos = min(free, key=lambda p: (
+                sum(int(sym[c, q]) * int(hops[p, perm[q]]) for q in placed),
+                p))
+        perm[c] = pos
+        free.remove(pos)
+        placed.append(c)
+
+    def descend(perm: np.ndarray) -> tuple[np.ndarray, int]:
+        best = cost(perm)
+        improved = True
+        while improved:
+            improved = False
+            for i in range(n_cores):
+                for j in range(i + 1, n_cores):
+                    perm[i], perm[j] = perm[j], perm[i]
+                    cand = cost(perm)
+                    if cand < best:
+                        best, improved = cand, True
+                    else:
+                        perm[i], perm[j] = perm[j], perm[i]
+        return perm, best
+
+    # descend from the greedy start AND from the identity; the identity
+    # (= the flat labeling) guarantees the result never costs more than
+    # doing nothing
+    perm, best = descend(perm)
+    ident, ibest = descend(np.arange(n_cores, dtype=np.int64))
+    return ident if ibest < best else perm
+
+
 def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
-                  passes: int = 2, strategy: str = "subtree") -> Partition:
-    """Partition ``prog`` onto ``n_cores`` cores (see module doc)."""
+                  passes: int = 2, strategy: str = "subtree",
+                  icfg=None, placement: str = "aware") -> Partition:
+    """Partition ``prog`` onto ``n_cores`` cores (see module doc).
+
+    ``icfg`` (an :class:`~repro.core.multicore.comm.InterconnectConfig`)
+    plus ``placement="aware"`` enables topology-aware core placement and
+    hop-weighted move refinement on physical NoCs; ``placement="naive"``
+    (or ``icfg=None`` / the ideal ``xbar``) keeps the flat partition.
+    """
     if n_cores < 1:
         raise ValueError(f"n_cores must be >= 1, got {n_cores}")
     if strategy not in ("subtree", "cone", "level"):
         raise ValueError(f"unknown strategy {strategy!r}")
+    if placement not in ("aware", "naive"):
+        raise ValueError(f"unknown placement {placement!r}")
     info, roots, node_of_root, weight, level, in_nodes, out_nodes = \
         _fused_graph(prog)
     n_nodes = len(roots)
     core_of_node = np.zeros(n_nodes, np.int32)
+    placement_perm: list | None = None
     num_levels = int(level.max()) if n_nodes else 0
     total_w = int(weight.sum())
     wmax = int(weight.max()) if n_nodes else 0
@@ -222,44 +333,73 @@ def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
         for j in range(n_nodes):
             core_load[int(core_of_node[j])] += int(weight[j])
 
-        def move_gain(j: int, dst: int) -> int:
-            """Drop in (value, dst-core) pairs if ``j`` moves to ``dst``."""
-            src = int(core_of_node[j])
-            gain = 0
-            for u in in_nodes[j]:                 # edges into j
-                cu = int(core_of_node[u])
-                before = {int(core_of_node[v]) for v in out_nodes[u]}
-                after = {int(core_of_node[v]) for v in out_nodes[u]
-                         if v != j} | {dst}
-                before.discard(cu)
-                after.discard(cu)
-                gain += len(before) - len(after)
-            dsts = {int(core_of_node[v]) for v in out_nodes[j]}  # edges out
-            gain += len(dsts - {src}) - len(dsts - {dst})
-            return gain
+        def refine(H: np.ndarray, rounds: int) -> None:
+            """Single-node moves reducing the H-weighted cut within the
+            load bound (H = all-ones ⇒ the flat (value, dst-core) cut,
+            identical to the pre-NoC refinement; H = hop matrix ⇒ cut
+            edges cost their route length)."""
 
-        rng = np.random.default_rng(seed)
-        for _ in range(passes):
-            improved = False
-            for j in rng.permutation(n_nodes):
-                j = int(j)
-                w, src = int(weight[j]), int(core_of_node[j])
-                best_dst, best_gain = -1, 0
-                for dst in range(n_cores):
-                    if dst == src:
-                        continue
-                    if core_load[dst] + w > bound:
-                        continue
-                    g = move_gain(j, dst)
-                    if g > best_gain:
-                        best_gain, best_dst = g, dst
-                if best_dst >= 0:
-                    core_of_node[j] = best_dst
-                    core_load[src] -= w
-                    core_load[best_dst] += w
-                    improved = True
-            if not improved:
-                break
+            def move_gain(j: int, dst: int) -> int:
+                src = int(core_of_node[j])
+                gain = 0
+                for u in in_nodes[j]:                 # edges into j
+                    cu = int(core_of_node[u])
+                    before = {int(core_of_node[v]) for v in out_nodes[u]}
+                    after = {int(core_of_node[v]) for v in out_nodes[u]
+                             if v != j} | {dst}
+                    before.discard(cu)
+                    after.discard(cu)
+                    gain += int(sum(H[cu][d] for d in before)
+                                - sum(H[cu][d] for d in after))
+                dsts = {int(core_of_node[v]) for v in out_nodes[j]}
+                gain += int(sum(H[src][d] for d in dsts - {src})
+                            - sum(H[dst][d] for d in dsts - {dst}))
+                return gain
+
+            rng = np.random.default_rng(seed)
+            for _ in range(rounds):
+                improved = False
+                for j in rng.permutation(n_nodes):
+                    j = int(j)
+                    w, src = int(weight[j]), int(core_of_node[j])
+                    best_dst, best_gain = -1, 0
+                    for dst in range(n_cores):
+                        if dst == src:
+                            continue
+                        if core_load[dst] + w > bound:
+                            continue
+                        g = move_gain(j, dst)
+                        if g > best_gain:
+                            best_gain, best_dst = g, dst
+                    if best_dst >= 0:
+                        core_of_node[j] = best_dst
+                        core_load[src] -= w
+                        core_load[best_dst] += w
+                        improved = True
+                if not improved:
+                    break
+
+        refine(np.ones((n_cores, n_cores), np.int64), passes)
+
+        # ---- topology-aware placement + hop-weighted refinement --------
+        # Skipped for the ideal crossbar (every pair is one hop, so both
+        # steps would be no-ops): xbar partitions stay bit-identical to
+        # the flat partitioner.
+        if (icfg is not None and placement == "aware"
+                and icfg.topology != "xbar"):
+            perm = place_cores(
+                traffic_matrix(core_of_node, out_nodes, n_cores),
+                icfg, n_cores)
+            core_of_node = perm[core_of_node].astype(np.int32)
+            relabeled = np.zeros_like(core_load)
+            relabeled[perm] = core_load
+            core_load = relabeled
+            placement_perm = [int(p) for p in perm]
+            if passes > 0:
+                # explicit opt-in: node moves trading flat cut for hop
+                # cut (the label permutation alone never changes the
+                # partition shape, only where each part physically sits)
+                refine(icfg.hop_matrix(n_cores), passes)
 
     core_of_op = np.asarray(
         [core_of_node[node_of_root[int(info.root_of[i])]]
@@ -267,13 +407,21 @@ def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
     op_level = np.searchsorted(prog.level_offsets[1:], np.arange(prog.n_ops),
                                side="right") + 1
     loads = np.bincount(core_of_op, minlength=n_cores).astype(np.int64)
+    cut = _cut_volume(core_of_node, out_nodes)
+    if icfg is not None and icfg.topology != "xbar":
+        hop_cut = _hop_cut_volume(core_of_node, out_nodes,
+                                  icfg.hop_matrix(n_cores))
+    else:
+        hop_cut = cut           # every xbar pair is exactly one hop
     part = Partition(
         n_cores=n_cores, core_of_node=core_of_node.astype(np.int32),
         core_of_op=core_of_op, node_of_root=node_of_root, roots=list(roots),
         node_level=level, node_weight=weight,
         op_level=op_level.astype(np.int64),
-        loads=loads, cut_values=_cut_volume(core_of_node, out_nodes),
-        seed=seed, strategy=strategy)
+        loads=loads, cut_values=cut,
+        seed=seed, strategy=strategy,
+        topology=icfg.topology if icfg is not None else "xbar",
+        hop_cut=hop_cut, core_placement=placement_perm)
     validate_partition(prog, part)
     return part
 

@@ -5,8 +5,11 @@ core attempts one VLIW instruction (:meth:`CoreSim.step`); a core whose
 crossbar reads hit a shared-register-window cell still in flight stalls
 that cycle (full/empty-bit flow control) and retries. SENDs push window
 rows onto the :class:`~repro.core.multicore.comm.Interconnect` with
-cycle-accounted arrival times; arrived rows land through the window fill
-port even while a core is frozen.
+cycle-accounted arrival times — including per-link NoC contention and
+injection-port arbitration on physical topologies (ring/mesh/torus) —
+and arrived rows land through the window fill port even while a core is
+frozen. The result's ``comm`` section carries the link occupancy
+accounting (busiest-link occupancy, link/inject stall cycles).
 
 Cores that finish early idle at the implicit end-of-program barrier; the
 result separates *flow-control stalls* (waiting for a row in transit)
@@ -90,8 +93,9 @@ def simulate_multicore(mcp: MultiCoreProgram, leaf_ind: np.ndarray,
         core_finish=finish,
         stall_cycles=[c.stall_cycles for c in cores],
         barrier_idle=[g - f for f in finish],
-        comm={"rows_sent": net.sends, "values_sent": net.values_sent,
-              "max_window_rows": net.max_resident,
-              "row_arrivals": {rid: int(arr)
-                               for rid, (arr, _p) in net.rows.items()}},
+        comm=dict({"rows_sent": net.sends, "values_sent": net.values_sent,
+                   "max_window_rows": net.max_resident,
+                   "row_arrivals": {rid: int(arr)
+                                    for rid, (arr, _p) in net.rows.items()}},
+                  **net.link_stats(total_cycles=g)),
         checks=checks)

@@ -18,8 +18,12 @@ multi-core simulator (:mod:`repro.core.multicore.sim`) can clock N cores
 in lockstep: each ``step(now)`` call executes one VLIW instruction at
 global cycle ``now``, or stalls (returns ``False``) when a PE reads a
 shared-register-window cell whose RECV data has not arrived yet
-(full/empty-bit flow control). Single-core simulation
-(:func:`simulate_leaves`) is the trivial driver loop and never stalls.
+(full/empty-bit flow control). Arrival times come from the modeled
+interconnect — on physical NoC topologies they include per-link
+contention and injection-port arbitration, so flow-control stalls here
+are where link congestion becomes visible as core cycles. Single-core
+simulation (:func:`simulate_leaves`) is the trivial driver loop and
+never stalls.
 
 Values carry a batch dimension, so one simulation validates a whole batch
 of SPN evaluations bit-for-bit against the numpy oracle while costing the

@@ -61,16 +61,21 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
               substrate: str = "all", query: str = "joint",
               mask_frac: float = 0.3,
               interpret: bool | None = None,
-              cores: int = 2) -> dict:
+              cores: int = 2, topology: str = "xbar",
+              link_width: int = 32) -> dict:
     from ..core import learn
     from ..data import spn_datasets
     from ..queries import (mpe_backtrace, random_mask, sample_ancestral_jax,
                            sample_ancestral_numpy)
     from ..runtime import Server, verify_parity
 
+    from ..core.multicore import named_interconnect
+
     X = spn_datasets.load(dataset, "train", 400)
     spn = learn.learn_spn(X, min_instances=64)
-    server = Server(spn, interpret=interpret, cores=cores)
+    server = Server(spn, interpret=interpret, cores=cores,
+                    interconnect=named_interconnect(topology,
+                                                    link_width=link_width))
     names = SPN_SUBSTRATES if substrate in ("all", None) else (substrate,)
     print(f"SPN[{dataset}] query={query}: {server.prog.n_ops} ops, "
           f"{server.prog.num_levels} levels; substrates: {', '.join(names)}")
@@ -114,8 +119,11 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
             mc = meta["multicore"]
             out["processor_mc"] = {"cycles": meta["cycles"],
                                    "cores": mc["effective_cores"],
-                                   "cut_values": mc["cut_values"]}
-            extra = (f"  [{mc['effective_cores']} cores, "
+                                   "cut_values": mc["cut_values"],
+                                   "topology": mc["topology"],
+                                   "hop_cut": mc["hop_cut"]}
+            extra = (f"  [{mc['effective_cores']} cores/"
+                     f"{mc['topology']}, "
                      f"{meta['cycles']} cycles/eval-batch, "
                      f"{mc['comm']['values']} values crossed]")
         elif name == "pallas":
@@ -153,11 +161,13 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
     print(f"  artifact cache: {cs['hits']} hits / {cs['misses']} misses "
           f"({cs['size']} artifacts resident)")
     for key, mc in out["runtime_stats"]["multicore"].items():
-        print(f"  multicore[{key}]: {mc['cores']} cores, "
+        print(f"  multicore[{key}]: {mc['cores']} cores/{mc['topology']}, "
               f"{mc['cycles']} cycles, util={mc['core_utilization']}, "
               f"{mc['comm_values_per_batch']} values/batch crossed, "
               f"stalls={mc['stall_cycles']}, "
-              f"barrier_idle={mc['barrier_idle_cycles']}")
+              f"barrier_idle={mc['barrier_idle_cycles']}, "
+              f"link_stalls={mc['link_stall_cycles']}, "
+              f"busiest_link={mc['busiest_link_occupancy']}")
     return out
 
 
@@ -217,6 +227,14 @@ def main() -> None:
     ap.add_argument("--cores", type=int, default=2,
                     help="core count for the vliw-mc substrate "
                          "(N replicated VLIW cores + interconnect)")
+    ap.add_argument("--topology",
+                    choices=["xbar", "ring", "mesh", "torus"],
+                    default="xbar",
+                    help="NoC topology of the vliw-mc interconnect: ideal "
+                         "crossbar, or a physical ring/mesh/torus with "
+                         "per-link contention + topology-aware placement")
+    ap.add_argument("--link-width", type=int, default=32,
+                    help="values serialized per cycle per NoC link")
     ap.add_argument("--dataset", default="nltcs")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=256)
@@ -230,7 +248,8 @@ def main() -> None:
                   mask_frac=args.mask_frac,
                   interpret={"auto": None, "on": True,
                              "off": False}[args.interpret],
-                  cores=args.cores)
+                  cores=args.cores, topology=args.topology,
+                  link_width=args.link_width)
     else:
         serve_lm(args.arch, min(args.batch, 8), args.prompt_len,
                  args.gen_len)

@@ -51,6 +51,8 @@ class Server:
                  processor: ProcessorConfig = PTREE,
                  interpret: bool | None = None,
                  cores: int = 2,
+                 topology: str | None = None,
+                 interconnect=None,
                  cache_capacity: int = 32,
                  batch_tile: int = LANE,
                  max_rows: int = 4096):
@@ -66,11 +68,15 @@ class Server:
         self._processor = processor
         self._interpret = interpret
         self._cores = cores
+        if interconnect is None and topology is not None:
+            from ..core.multicore import named_interconnect
+            interconnect = named_interconnect(topology)
+        self._interconnect = interconnect
         names = tuple(canonical(n)
                       for n in (substrates or DEFAULT_SUBSTRATES))
         self.substrates: dict[str, Substrate] = {
             n: make_substrate(n, processor=processor, interpret=interpret,
-                              cores=cores)
+                              cores=cores, interconnect=interconnect)
             for n in names}
         self._batchers: weakref.WeakKeyDictionary[Artifact, MicroBatcher] = \
             weakref.WeakKeyDictionary()
@@ -162,6 +168,15 @@ class Server:
                 "stall_cycles": mc["stall_cycles"],
                 "barrier_idle_cycles": mc["barrier_idle"],
                 "cut_values": mc["cut_values"],
+                # NoC accounting (all zeros under the ideal crossbar)
+                "topology": mc.get("topology", "xbar"),
+                "hop_cut": mc.get("hop_cut", mc["cut_values"]),
+                "busiest_link_occupancy":
+                    mc["comm"].get("busiest_link_occupancy", 0.0),
+                "link_stall_cycles":
+                    mc["comm"].get("link_stall_cycles", 0),
+                "inject_stall_cycles":
+                    mc["comm"].get("inject_stall_cycles", 0),
             }
         return out
 

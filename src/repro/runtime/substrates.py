@@ -293,12 +293,14 @@ class VliwSimSubstrate(Substrate):
 
 @register
 class VliwMultiCoreSubstrate(VliwSimSubstrate):
-    """N replicated VLIW cores + modeled interconnect (``cores=N``).
+    """N replicated VLIW cores + modeled NoC interconnect (``cores=N``).
 
     The SPN DAG is min-cut partitioned across ``cores`` copies of the
     paper's processor (:mod:`repro.core.multicore`); cut values travel
     as shared-register-window rows with explicit SEND/RECV instructions
-    and cycle-accounted latency. The artifact payload is
+    and cycle-accounted latency over the configured topology (ideal
+    ``xbar``, or a physical ``ring``/``mesh``/``torus`` with per-link
+    contention and topology-aware core placement). The artifact payload is
     ``(MultiCoreProgram, merged DenseProgram, workspace)``:
 
     - ``execute`` runs the *merged* fast-sim — all cores' streams
@@ -315,7 +317,7 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
     def __init__(self, processor: ProcessorConfig = PTREE, cores: int = 2,
                  interconnect: multicore.InterconnectConfig = multicore.comm.XBAR,
                  seed: int = 0, strategy: str = "subtree",
-                 eta_iters: int = 2) -> None:
+                 eta_iters: int = 2, placement: str = "aware") -> None:
         super().__init__(processor)
         if cores < 1:
             raise ValueError(f"cores must be >= 1, got {cores}")
@@ -324,18 +326,19 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
         self.seed = seed
         self.strategy = strategy
         self.eta_iters = eta_iters
+        self.placement = placement
 
     def config_fingerprint(self) -> str:
         return (f"{self.processor.name}/cores={self.cores}"
                 f"/{self.interconnect.fingerprint()}"
                 f"/{self.strategy}/seed={self.seed}"
-                f"/eta={self.eta_iters}")
+                f"/eta={self.eta_iters}/place={self.placement}")
 
     def _build(self, prog, log_domain, batch_tile):
         mcp = multicore.compile_multicore(
             prog, self.processor, self.cores, self.interconnect,
             seed=self.seed, strategy=self.strategy,
-            eta_iters=self.eta_iters)
+            eta_iters=self.eta_iters, placement=self.placement)
         dense = multicore.decode_multicore(mcp, cycles=mcp.meta["cycles"])
         meta = {"cycles": mcp.meta["cycles"],
                 "ops_per_cycle": mcp.meta["ops_per_cycle"],

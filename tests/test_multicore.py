@@ -130,15 +130,19 @@ def test_multicore_bit_identical_nltcs(nltcs_prog, cores):
     assert res.cycles == max(res.core_finish)
 
 
+@pytest.mark.parametrize("topology", mc.TOPOLOGIES)
 @pytest.mark.parametrize("dataset", BENCH_SUITE)
-def test_cross_core_parity_suite(dataset):
+def test_cross_core_parity_suite(dataset, topology):
     """Acceptance: vliw-mc roots bit-identical to single-core vliw-sim
-    on the BENCH_SUITE datasets."""
+    on the BENCH_SUITE datasets, across the full NoC topology matrix
+    (cores {2,4,8} are additionally covered in test_noc)."""
     _spn, prog = suite_prog(dataset)
     vprog = compile_program(prog, PTREE)
     leaves = _leaves(prog, 8, seed=3)
     ref = fastsim.run(fastsim.decode(vprog, PTREE), leaves)
-    mcp = mc.compile_multicore(prog, PTREE, 2, eta_iters=0)
+    mcp = mc.compile_multicore(prog, PTREE, 2,
+                               mc.named_interconnect(topology),
+                               eta_iters=0)
     res = mc.simulate_multicore(mcp, leaves)
     fast = fastsim.run(mc.decode_multicore(mcp, cycles=res.cycles), leaves)
     np.testing.assert_array_equal(fast, res.root_values)
@@ -219,6 +223,23 @@ def test_cache_distinguishes_substrate_config(small_prog):
             != ArtifactCache.key(small_prog, "marginal", off, 128, True))
 
 
+def test_server_reports_noc_stats_mesh(small_spn):
+    """Acceptance: per-link contention is visible in
+    Server.stats()["multicore"] when serving over a physical NoC."""
+    srv = Server(small_spn, substrates=("numpy", "vliw-mc"), cores=4,
+                 topology="mesh")
+    x = np.abs(np.random.default_rng(1).integers(
+        0, 2, (5, srv.prog.num_vars)))
+    np.testing.assert_allclose(srv.query(x, "joint", "vliw-mc"),
+                               srv.query(x, "joint", "numpy"), atol=1e-4)
+    entry = next(iter(srv.stats()["multicore"].values()))
+    assert entry["topology"] == "mesh"
+    assert entry["hop_cut"] >= entry["cut_values"] >= 0
+    assert 0.0 <= entry["busiest_link_occupancy"] <= 1.0
+    assert entry["link_stall_cycles"] >= 0
+    assert entry["inject_stall_cycles"] >= 0
+
+
 def test_server_reports_multicore_stats(small_spn):
     srv = Server(small_spn, substrates=("numpy", "vliw-mc"), cores=2)
     x = np.abs(np.random.default_rng(0).integers(
@@ -231,3 +252,7 @@ def test_server_reports_multicore_stats(small_spn):
     assert entry["cycles"] > 0 and len(entry["core_utilization"]) >= 1
     assert entry["comm_values_per_batch"] >= 0
     assert "stall_cycles" in entry and "barrier_idle_cycles" in entry
+    # NoC accounting is always present (zeros under the ideal crossbar)
+    assert entry["topology"] == "xbar"
+    assert entry["busiest_link_occupancy"] == 0.0
+    assert entry["link_stall_cycles"] == 0

@@ -1,0 +1,472 @@
+"""NoC topology model conformance & property suite.
+
+Covers the mesh/torus/ring/xbar interconnect models end to end:
+
+- property-based invariants of the hop metric and XY routing (symmetry,
+  bounds, route/metric agreement, torus wraparound),
+- the per-link contention model (ideal-crossbar exactness, shared-link
+  serialization, injection-port arbitration, transfer monotonicity),
+- topology-aware core placement (hop-weighted traffic never worse than
+  the flat labeling, partition shape preserved),
+- deadlock-freedom stress: seeded random SPN programs x partition
+  strategies x {xbar, ring, mesh, torus} x cores {2, 4, 8} run to
+  completion in the lockstep simulator with bit-parity against the
+  single-core fast-sim,
+- the golden cycle-count regression fixture ``golden_cycles.json``:
+  checked-sim cycle counts for nltcs/kdd/plants at cores {1, 2, 4} x
+  topology, asserted EXACTLY. A deliberate scheduler or contention-model
+  change must regenerate the file:
+
+      PYTHONPATH=src python tests/test_noc.py --regen
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import learn, multicore as mc, program
+from repro.core.compiler.pipeline import compile_program
+from repro.core.multicore.comm import (TOPOLOGIES, XBAR, ChannelRow,
+                                       CommPlan, Interconnect,
+                                       named_interconnect)
+from repro.core.processor import fastsim
+from repro.core.processor.config import PTREE
+from repro.data import spn_datasets
+from repro.runtime import get_substrate
+
+PHYSICAL = ("ring", "mesh", "torus")
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden_cycles.json"
+GOLDEN_DATASETS = ("nltcs", "kdd", "plants")
+GOLDEN_CORES = (1, 2, 4)
+GOLDEN_LEARN = {"rows": 300, "min_instances": 64, "seed": 0}
+
+_PROG_CACHE: dict = {}
+
+
+def golden_prog(name: str):
+    if name not in _PROG_CACHE:
+        X = spn_datasets.load(name, "train", GOLDEN_LEARN["rows"])
+        spn = learn.learn_spn(X, min_instances=GOLDEN_LEARN["min_instances"],
+                              seed=GOLDEN_LEARN["seed"])
+        _PROG_CACHE[name] = program.lower(spn)
+    return _PROG_CACHE[name]
+
+
+def _leaves(prog, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, 2, (n, prog.num_vars))
+    return prog.leaves_from_evidence(X).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# hop metric: symmetry, bounds, topology relations
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(n_cores=st.integers(1, 9), topology=st.sampled_from(TOPOLOGIES))
+def test_hop_metric_symmetry_and_identity(n_cores, topology):
+    icfg = named_interconnect(topology)
+    for a in range(n_cores):
+        for b in range(n_cores):
+            h = icfg.hops(a, b, n_cores)
+            assert h == icfg.hops(b, a, n_cores)
+            if a == b:
+                assert h == 0
+            else:
+                assert 1 <= h <= max(n_cores - 1, 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_cores=st.integers(2, 9))
+def test_hop_bounds_per_topology(n_cores):
+    ring = named_interconnect("ring")
+    mesh = named_interconnect("mesh")
+    torus = named_interconnect("torus")
+    w, h = mesh.grid_shape(n_cores)
+    for a in range(n_cores):
+        for b in range(n_cores):
+            if a == b:
+                continue
+            # ring: exactly the shorter arc, never longer than the chain
+            assert ring.hops(a, b, n_cores) == min(abs(a - b),
+                                                   n_cores - abs(a - b))
+            assert ring.hops(a, b, n_cores) <= n_cores // 2
+            # mesh: bounded by the grid diameter
+            assert mesh.hops(a, b, n_cores) <= (w - 1) + (h - 1)
+            # torus wrap links can only shorten mesh routes
+            assert torus.hops(a, b, n_cores) <= mesh.hops(a, b, n_cores)
+            assert XBAR.hops(a, b, n_cores) == 1
+
+
+def test_total_hops_mesh_le_ring_le_chain():
+    """mesh <= ring <= worst-case chain, summed over all pairs, on the
+    power-of-two core counts the substrate actually serves."""
+    mesh = named_interconnect("mesh")
+    ring = named_interconnect("ring")
+    for n in (2, 4, 8, 16):
+        pairs = [(a, b) for a in range(n) for b in range(n) if a != b]
+        mesh_sum = sum(mesh.hops(a, b, n) for a, b in pairs)
+        ring_sum = sum(ring.hops(a, b, n) for a, b in pairs)
+        chain_sum = sum(abs(a - b) for a, b in pairs)
+        assert mesh_sum <= ring_sum <= chain_sum
+
+
+def test_torus_wraparound():
+    mesh, torus = named_interconnect("mesh"), named_interconnect("torus")
+    # 8 cores -> 4x2 grid: the x wrap link turns 3 mesh hops into 1
+    assert mesh.grid_shape(8) == (4, 2)
+    assert mesh.hops(0, 3, 8) == 3 and torus.hops(0, 3, 8) == 1
+    assert torus.route(0, 3, 8) == ((0, 3),)
+    # 16 cores -> 4x4: column wrap
+    assert mesh.grid_shape(16) == (4, 4)
+    assert mesh.hops(0, 12, 16) == 3 and torus.hops(0, 12, 16) == 1
+    # wrap never helps on a 2-wide axis
+    assert torus.hops(0, 4, 8) == mesh.hops(0, 4, 8) == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(topology=st.sampled_from(PHYSICAL), n_cores=st.integers(2, 9))
+def test_route_agrees_with_hop_metric(topology, n_cores):
+    """len(route) == hops; routes are contiguous link chains src->dst."""
+    icfg = named_interconnect(topology)
+    for a in range(n_cores):
+        for b in range(n_cores):
+            r = icfg.route(a, b, n_cores)
+            assert len(r) == icfg.hops(a, b, n_cores)
+            if a == b:
+                assert r == ()
+                continue
+            assert r[0][0] == a and r[-1][1] == b
+            for (x, y) in zip(r, r[1:]):
+                assert x[1] == y[0]
+            assert all(u != v for (u, v) in r)
+
+
+# ---------------------------------------------------------------------------
+# transfer latency + contention model
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(topology=st.sampled_from(TOPOLOGIES), members=st.integers(1, 63),
+       link_width=st.integers(1, 64), hop_latency=st.integers(1, 4))
+def test_transfer_cycles_monotone(topology, members, link_width,
+                                  hop_latency):
+    """transfer_cycles is monotone in members and in hop distance."""
+    icfg = named_interconnect(topology, link_width=link_width,
+                              hop_latency=hop_latency)
+    n = 8
+    assert (icfg.transfer_cycles(members, 0, 1, n)
+            <= icfg.transfer_cycles(members + 1, 0, 1, n))
+    pairs = sorted(((a, b) for a in range(n) for b in range(n) if a != b),
+                   key=lambda p: icfg.hops(p[0], p[1], n))
+    cycles = [icfg.transfer_cycles(members, a, b, n) for a, b in pairs]
+    assert cycles == sorted(cycles)
+
+
+def _plan(icfg, n_cores, rows_spec):
+    """Synthetic CommPlan: rows_spec = [(src, dst, members), ...]."""
+    rows = [ChannelRow(row_id=i, src=s, dst=d, level=1,
+                       gids=list(range(g)))
+            for i, (s, d, g) in enumerate(rows_spec)]
+    return CommPlan(rows=rows, icfg=icfg, n_cores=n_cores)
+
+
+def test_xbar_is_ideal_no_contention():
+    """Concurrent xbar transfers never interact — the pre-NoC model."""
+    plan = _plan(XBAR, 4, [(0, 1, 32), (0, 1, 32), (2, 1, 32), (0, 3, 7)])
+    net = Interconnect(plan)
+    for r in plan.rows:
+        net.push(r.row_id, np.zeros((len(r.gids), 1), np.float32), 0)
+    for r in plan.rows:
+        assert net.rows[r.row_id][0] == XBAR.transfer_cycles(
+            len(r.gids), r.src, r.dst, 4)
+    assert net.link_stall_cycles == 0
+    assert net.inject_stall_cycles == 0
+    assert not net.link_busy
+    stats = net.link_stats(total_cycles=10)
+    assert stats["busiest_link_occupancy"] == 0.0
+
+
+def test_mesh_shared_link_serializes():
+    """Two transfers whose XY routes share a physical link serialize."""
+    mesh = named_interconnect("mesh")
+    # 2x2 grid: 0->3 goes (0,1) then (1,3); 1->3 uses (1,3) directly
+    assert mesh.route(0, 3, 4) == ((0, 1), (1, 3))
+    assert mesh.route(1, 3, 4) == ((1, 3),)
+    plan = _plan(mesh, 4, [(0, 3, 32), (1, 3, 32)])
+    net = Interconnect(plan)
+    net.push(0, np.zeros((32, 1), np.float32), 0)
+    net.push(1, np.zeros((32, 1), np.float32), 0)
+    assert net.rows[0][0] == mesh.transfer_cycles(32, 0, 3, 4) == 3
+    # row 1 uncontended would arrive at 2; link (1,3) is busy until 2
+    assert net.rows[1][0] == 4
+    assert net.link_stall_cycles == 2
+    assert net.link_busy[(1, 3)] == 2
+    assert net.link_stats(total_cycles=4)["busiest_link_occupancy"] == 0.5
+
+
+def test_disjoint_mesh_routes_do_not_interact():
+    mesh = named_interconnect("mesh")
+    plan = _plan(mesh, 4, [(0, 1, 32), (2, 3, 32)])
+    net = Interconnect(plan)
+    net.push(0, np.zeros((32, 1), np.float32), 0)
+    net.push(1, np.zeros((32, 1), np.float32), 0)
+    for r in plan.rows:
+        assert net.rows[r.row_id][0] == mesh.transfer_cycles(
+            32, r.src, r.dst, 4)
+    assert net.link_stall_cycles == 0
+
+
+def test_injection_port_arbitration():
+    """A core streams one row's flits at a time onto the NoC."""
+    mesh = named_interconnect("mesh", link_width=8)   # 32 members -> 4 cy
+    plan = _plan(mesh, 4, [(0, 1, 32), (0, 2, 32)])
+    net = Interconnect(plan)
+    net.push(0, np.zeros((32, 1), np.float32), 0)
+    net.push(1, np.zeros((32, 1), np.float32), 0)
+    assert net.rows[0][0] == mesh.transfer_cycles(32, 0, 1, 4) == 5
+    # second transfer waits 4 cycles for the injection port, then takes
+    # its own uncontended 1 hop + 4 serialization cycles
+    assert net.inject_stall_cycles == 4
+    assert net.rows[1][0] == 4 + 5
+    assert net.link_stall_cycles == 0     # disjoint links: port-only wait
+
+
+# ---------------------------------------------------------------------------
+# topology-aware placement
+# ---------------------------------------------------------------------------
+def test_place_cores_moves_chatty_pairs_adjacent():
+    """Diagonal-chatting cores on a 2x2 mesh get relabeled adjacent."""
+    mesh = named_interconnect("mesh")
+    traffic = np.zeros((4, 4), np.int64)
+    traffic[0, 3] = 10                    # 2 hops apart on the flat grid
+    traffic[3, 0] = 10
+    traffic[1, 2] = 8                     # the other diagonal
+    perm = mc.place_cores(traffic, mesh, 4)
+    hop_cost = lambda p: sum(
+        int(traffic[a, b]) * mesh.hops(int(p[a]), int(p[b]), 4)
+        for a in range(4) for b in range(4))
+    ident = np.arange(4)
+    assert hop_cost(perm) < hop_cost(ident)
+    assert mesh.hops(int(perm[0]), int(perm[3]), 4) == 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_cores=st.integers(2, 8), seed=st.integers(0, 5),
+       topology=st.sampled_from(PHYSICAL))
+def test_place_cores_never_worse_than_identity(n_cores, seed, topology):
+    icfg = named_interconnect(topology)
+    rng = np.random.default_rng(seed)
+    traffic = rng.integers(0, 20, (n_cores, n_cores)).astype(np.int64)
+    np.fill_diagonal(traffic, 0)
+    perm = mc.place_cores(traffic, icfg, n_cores)
+    assert sorted(int(p) for p in perm) == list(range(n_cores))
+    hop = lambda p: sum(
+        int(traffic[a, b]) * icfg.hops(int(p[a]), int(p[b]), n_cores)
+        for a in range(n_cores) for b in range(n_cores))
+    # the full objective adds a congestion term, but the identity start
+    # of the swap descent guarantees hop cost parity at worst
+    assert hop(perm) <= hop(np.arange(n_cores)) + _congestion_slack(
+        traffic, icfg, n_cores)
+
+
+def _congestion_slack(traffic, icfg, n_cores) -> int:
+    """Max congestion-term difference the placement may trade hops for."""
+    load: dict = {}
+    for a in range(n_cores):
+        for b in range(n_cores):
+            t = int(traffic[a, b])
+            if t and a != b:
+                for link in icfg.route(a, b, n_cores):
+                    load[link] = load.get(link, 0) + t
+    return max(load.values()) if load else 0
+
+
+def test_aware_placement_preserves_partition_shape(nltcs_prog):
+    """Default aware placement only relabels cores: the flat cut, the
+    load distribution and the hop-weighted cut never get worse."""
+    for topology in ("mesh", "torus"):
+        icfg = named_interconnect(topology)
+        aware = mc.partition_ops(nltcs_prog, 4, passes=0, icfg=icfg)
+        naive = mc.partition_ops(nltcs_prog, 4, passes=0, icfg=icfg,
+                                 placement="naive")
+        assert aware.cut_values == naive.cut_values
+        np.testing.assert_array_equal(np.sort(aware.loads),
+                                      np.sort(naive.loads))
+        assert aware.hop_cut <= naive.hop_cut
+        assert aware.topology == topology
+        assert naive.core_placement is None
+
+
+def test_xbar_partition_bit_identical_to_flat(nltcs_prog):
+    """The ideal crossbar must reproduce the pre-NoC partitioner
+    exactly — no silent drift of existing cycle counts."""
+    flat = mc.partition_ops(nltcs_prog, 4, passes=0)
+    xbar = mc.partition_ops(nltcs_prog, 4, passes=0, icfg=XBAR)
+    mesh_naive = mc.partition_ops(nltcs_prog, 4, passes=0,
+                                  icfg=named_interconnect("mesh"),
+                                  placement="naive")
+    np.testing.assert_array_equal(flat.core_of_op, xbar.core_of_op)
+    np.testing.assert_array_equal(flat.core_of_op, mesh_naive.core_of_op)
+    assert xbar.hop_cut == xbar.cut_values
+    assert xbar.core_placement is None
+
+
+# ---------------------------------------------------------------------------
+# deadlock-freedom stress + bit-parity across the full topology matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cores", [2, 4, 8])
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_stress_random_programs_run_to_completion(topology, cores):
+    """Seeded random SPNs x partition strategies x narrow links: the
+    lockstep sim must terminate (deadlock-free) and stay bit-identical
+    to the single-core fast-sim under link contention."""
+    for seed, strategy in ((0, "subtree"), (1, "cone"), (2, "level")):
+        spn = learn.random_spn(12, depth=3, num_sums=2, repetitions=3,
+                               seed=seed)
+        prog = program.lower(spn)
+        # narrow links + multi-cycle hops make contention actually bite
+        icfg = named_interconnect(topology, link_width=4, hop_latency=2) \
+            if topology != "xbar" else XBAR
+        mcp = mc.compile_multicore(prog, PTREE, cores, icfg, seed=seed,
+                                   strategy=strategy, eta_iters=1)
+        leaves = _leaves(prog, 4, seed=seed)
+        res = mc.simulate_multicore(mcp, leaves)   # completes = no deadlock
+        ref = fastsim.run(
+            fastsim.decode(compile_program(prog, PTREE), PTREE), leaves)
+        np.testing.assert_array_equal(res.root_values, ref)
+        fast = fastsim.run(mc.decode_multicore(mcp, cycles=res.cycles),
+                           leaves)
+        np.testing.assert_array_equal(fast, res.root_values)
+
+
+@pytest.mark.parametrize("cores", [2, 4, 8])
+@pytest.mark.parametrize("topology", PHYSICAL)
+def test_nltcs_parity_topology_matrix(nltcs_prog, topology, cores):
+    """nltcs bit-parity vs single-core vliw-sim on every physical
+    topology at cores {2, 4, 8} (xbar is covered by test_multicore)."""
+    vprog = compile_program(nltcs_prog, PTREE)
+    leaves = _leaves(nltcs_prog, 8, seed=3)
+    ref = fastsim.run(fastsim.decode(vprog, PTREE), leaves)
+    mcp = mc.compile_multicore(nltcs_prog, PTREE, cores,
+                               named_interconnect(topology))
+    res = mc.simulate_multicore(mcp, leaves)
+    fast = fastsim.run(mc.decode_multicore(mcp, cycles=res.cycles), leaves)
+    np.testing.assert_array_equal(res.root_values, fast)
+    np.testing.assert_array_equal(fast, ref)
+    # the lockstep result carries the per-link accounting
+    assert "link_stall_cycles" in res.comm
+    assert "busiest_link_occupancy" in res.comm
+
+
+@pytest.mark.parametrize("log_domain", [True, False])
+@pytest.mark.parametrize("topology", PHYSICAL)
+def test_substrate_parity_both_domains(nltcs_prog, topology, log_domain):
+    """Substrate-level parity in both domains on physical topologies."""
+    mc_sub = get_substrate("vliw-mc", cores=4,
+                           interconnect=named_interconnect(topology))
+    sc_sub = get_substrate("vliw-sim")
+    art_mc = mc_sub.compile(nltcs_prog, query="marginal",
+                            log_domain=log_domain)
+    art_sc = sc_sub.compile(nltcs_prog, query="marginal",
+                            log_domain=log_domain)
+    leaves = _leaves(nltcs_prog, 8, seed=5)
+    fast = mc_sub.execute(art_mc, leaves)
+    np.testing.assert_array_equal(
+        fast, mc_sub.execute_checked(art_mc, leaves))
+    np.testing.assert_array_equal(fast, sc_sub.execute(art_sc, leaves))
+    assert art_mc.meta["multicore"]["topology"] == topology
+
+
+def test_routing_geometry_uses_physical_core_labels():
+    """With empty or scattered physical cores, routing must happen on
+    the full grid the placement optimized — not on compacted effective
+    indices (which would be a different, smaller grid)."""
+    spn = learn.random_spn(6, depth=2, num_sums=2, repetitions=1, seed=0)
+    prog = program.lower(spn)
+    icfg = named_interconnect("mesh")
+    mcp = mc.compile_multicore(prog, PTREE, 8, icfg)
+    plan = mcp.plan
+    assert plan.n_geom == 8                 # the machine keeps 8 cores
+    labels = [plan.geometry(c) for c in range(plan.n_cores)]
+    assert all(0 <= l < 8 for l in labels)
+    assert len(set(labels)) == len(labels)
+    for row in plan.rows:
+        src, dst = plan.geometry(row.src), plan.geometry(row.dst)
+        # latency charged == hop metric on the PHYSICAL 8-core grid
+        assert plan.latency(row) == icfg.transfer_cycles(
+            len(row.gids), src, dst, 8)
+        r = plan.route(row)
+        assert len(r) == icfg.hops(src, dst, 8)
+        assert r[0][0] == src and r[-1][1] == dst
+    # and the lockstep sim still runs to completion, bit-identical
+    leaves = _leaves(prog, 4, seed=1)
+    res = mc.simulate_multicore(mcp, leaves)
+    ref = fastsim.run(
+        fastsim.decode(compile_program(prog, PTREE), PTREE), leaves)
+    np.testing.assert_array_equal(res.root_values, ref)
+
+
+def test_contended_cycles_value_independent(nltcs_prog):
+    """Link contention depends only on the static schedule, so the
+    calibrated cycle count stays value-independent on a mesh."""
+    mcp = mc.compile_multicore(nltcs_prog, PTREE, 4,
+                               named_interconnect("mesh", link_width=4))
+    a = mc.simulate_multicore(mcp, _leaves(nltcs_prog, 1, seed=0))
+    b = mc.simulate_multicore(mcp, _leaves(nltcs_prog, 32, seed=9))
+    assert a.cycles == b.cycles == mcp.meta["cycles"]
+    assert a.comm["link_stall_cycles"] == b.comm["link_stall_cycles"]
+
+
+# ---------------------------------------------------------------------------
+# golden cycle-count regression fixture
+# ---------------------------------------------------------------------------
+def _golden_cases():
+    for ds in GOLDEN_DATASETS:
+        for cores in GOLDEN_CORES:
+            for topo in TOPOLOGIES:
+                if cores == 1 and topo != "xbar":
+                    continue    # one core has no interconnect at all
+                yield ds, cores, topo
+
+
+def _golden_cycles(dataset: str, cores: int, topology: str) -> int:
+    mcp = mc.compile_multicore(golden_prog(dataset), PTREE, cores,
+                               named_interconnect(topology))
+    return int(mcp.meta["cycles"])
+
+
+@pytest.mark.parametrize("dataset,cores,topology", list(_golden_cases()))
+def test_golden_cycle_counts(dataset, cores, topology):
+    """Checked-sim cycle counts pinned EXACTLY: any scheduler, placement
+    or contention-model change that shifts cycles fails here and must
+    update tests/golden_cycles.json deliberately
+    (PYTHONPATH=src python tests/test_noc.py --regen)."""
+    golden = json.loads(GOLDEN_PATH.read_text())
+    assert golden["learn"] == GOLDEN_LEARN, "fixture/learn config drift"
+    want = golden["cycles"][dataset][str(cores)][topology]
+    got = _golden_cycles(dataset, cores, topology)
+    assert got == want, (
+        f"{dataset}@{cores}c/{topology}: {got} cycles != golden {want}; "
+        "if this change is deliberate, regenerate via "
+        "`PYTHONPATH=src python tests/test_noc.py --regen`")
+
+
+def regenerate_golden() -> None:
+    data: dict = {"learn": GOLDEN_LEARN, "eta_iters": 2, "cycles": {}}
+    for ds, cores, topo in _golden_cases():
+        cyc = _golden_cycles(ds, cores, topo)
+        data["cycles"].setdefault(ds, {}).setdefault(str(cores), {})[topo] \
+            = cyc
+        print(f"{ds}@{cores}c/{topo}: {cyc}")
+    GOLDEN_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        regenerate_golden()
+    else:
+        print(__doc__)

@@ -101,6 +101,39 @@ def test_cache_lru_eviction():
     assert cache.stats()["misses"] == 4 and sub.compile_count == 4
 
 
+def test_cache_distinguishes_noc_config(small_prog):
+    """Two servers differing only in NoC topology or link width must
+    never share an ArtifactCache entry: InterconnectConfig.fingerprint()
+    flows through vliw-mc's config_fingerprint() into the cache key."""
+    from repro.core.multicore import named_interconnect
+    cache = ArtifactCache(capacity=8)
+    xbar = get_substrate("vliw-mc", cores=2)
+    mesh = get_substrate("vliw-mc", cores=2,
+                         interconnect=named_interconnect("mesh"))
+    narrow = get_substrate("vliw-mc", cores=2,
+                           interconnect=named_interconnect("mesh",
+                                                           link_width=8))
+    a = cache.get_or_compile(xbar, small_prog, query="marginal")
+    b = cache.get_or_compile(mesh, small_prog, query="marginal")
+    c = cache.get_or_compile(narrow, small_prog, query="marginal")
+    assert a is not b and b is not c and a is not c
+    assert cache.stats()["misses"] == 3 and cache.stats()["hits"] == 0
+    # identical configs still hit
+    assert cache.get_or_compile(mesh, small_prog, query="marginal") is b
+    assert cache.stats()["hits"] == 1
+    keys = {ArtifactCache.key(small_prog, "marginal", s, 128, True)
+            for s in (xbar, mesh, narrow)}
+    assert len(keys) == 3
+    # server-level: Server(topology=...) builds distinct cache keys too
+    s1 = Server(prog=small_prog, substrates=("vliw-mc",), cores=2)
+    s2 = Server(prog=small_prog, substrates=("vliw-mc",), cores=2,
+                topology="mesh")
+    assert (ArtifactCache.key(small_prog, "marginal",
+                              s1.substrate("vliw-mc"), 128, True)
+            != ArtifactCache.key(small_prog, "marginal",
+                                 s2.substrate("vliw-mc"), 128, True))
+
+
 # ---------------------------------------------------------------------------
 # micro-batcher
 # ---------------------------------------------------------------------------
