@@ -1,9 +1,13 @@
 """Serving throughput across substrates + VLIW fast-sim speedup.
 
 Runs batched queries through :class:`repro.runtime.Server` on one suite
-SPN and records per-substrate evals/s, plus the vectorized fast-sim vs
+SPN and records per-substrate evals/s **with request-latency p50/p95/p99
+percentiles** (computed by the :mod:`repro.obs.metrics` histogram over
+every measured iteration), plus the vectorized fast-sim vs
 cycle-accurate checked-sim comparison (bit-identity asserted, speedup
-measured). Results are printed as CSV rows and persisted to
+measured). Under ``--compare`` the run also enforces the observability
+overhead budget: the permanently-instrumented request path with tracing
+*disabled* must cost < 2% of a request (see :func:`obs_overhead_check`). Results are printed as CSV rows and persisted to
 ``BENCH_serve.json`` so the throughput trajectory accumulates across
 commits. The record also carries the Pallas kernel mode (``interpret``
 vs compiled) and the segment-scheduler descriptor stats, so numbers are
@@ -47,6 +51,8 @@ import numpy as np
 from repro.core import multicore
 from repro.core.processor import fastsim, sim
 from repro.core.processor.config import PTREE
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.queries import random_mask
 from repro.runtime import DEFAULT_SUBSTRATES, Server, verify_parity
 
@@ -54,13 +60,17 @@ from .common import bench_spn, csv_row
 
 #: per-substrate throughput regression tolerance for ``--compare``
 REGRESSION_TOLERANCE = 0.25
+#: disabled-observability overhead budget: the estimated cost of the
+#: permanently-instrumented hot path with tracing OFF must stay under
+#: this fraction of a request (asserted under ``--compare``)
+OBS_OVERHEAD_BUDGET = 0.02
 #: numpy-canary bound: beyond this machine-speed scale the gate fails
 #: outright instead of normalizing (see :func:`compare_records`)
 MACHINE_SCALE_BOUND = 3.0
 
 
 def _best_round_us(fn, rounds: int = 4, n_iter: int = 5,
-                   warmup: int = 2) -> float:
+                   warmup: int = 2, samples: list | None = None) -> float:
     """Best per-round median wall-time in microseconds.
 
     Shared-machine CPU throttling comes in multi-second phases that can
@@ -69,6 +79,10 @@ def _best_round_us(fn, rounds: int = 4, n_iter: int = 5,
     keeping the best round's median measures the code, not the phase.
     Callers interleave the benchmarked configurations across rounds so
     every configuration gets a shot at the fast phases.
+
+    ``samples`` (optional list) collects every individual iteration
+    time in microseconds — the raw distribution behind the p50/p95/p99
+    latency percentiles recorded in ``BENCH_serve.json``.
     """
     for _ in range(warmup):
         fn()
@@ -79,6 +93,8 @@ def _best_round_us(fn, rounds: int = 4, n_iter: int = 5,
             t0 = time.perf_counter()
             fn()
             times.append(time.perf_counter() - t0)
+        if samples is not None:
+            samples.extend(t * 1e6 for t in times)
         times.sort()
         best = min(best, times[len(times) // 2])
     return best * 1e6
@@ -172,6 +188,53 @@ def compare_records(new: dict, baseline: dict,
                     f"{old_t['cycles']} (deterministic counts are held "
                     f"exactly; update the baseline deliberately)")
     return failures
+
+
+def obs_overhead_check(server: Server, Xq: np.ndarray,
+                       substrate: str = "vliw-sim") -> dict:
+    """Measured cost of the *disabled* observability layer per request.
+
+    The serving stack is permanently instrumented; the contract is that
+    with no tracer installed every span is an allocation-free no-op.
+    This check makes the contract a number: time the disabled span
+    primitive in a tight loop, count the spans one real request emits
+    (by installing a throwaway tracer for a single query), and compare
+    the product against the measured request latency. The estimated
+    overhead fraction must stay under :data:`OBS_OVERHEAD_BUDGET` (2%)
+    — it fails if the disabled path grows allocations or the request
+    path starts emitting hundreds of spans.
+    """
+    assert not obs_trace.active(), \
+        "overhead check must run with tracing disabled"
+    n = 200_000
+    nul = obs_trace.span  # the module-level fast path under test
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with nul("bench.overhead"):
+            pass
+    ns_per_span = (time.perf_counter() - t0) / n * 1e9
+
+    tracer = obs_trace.install()
+    try:
+        server.query(Xq, "marginal", substrate)
+    finally:
+        obs_trace.uninstall()
+    spans_per_request = len(tracer.events)
+
+    request_us = _best_round_us(
+        lambda: server.query(Xq, "marginal", substrate),
+        rounds=2, n_iter=5, warmup=1)
+    frac = ns_per_span * spans_per_request / (request_us * 1e3)
+    out = {"ns_per_span_disabled": round(ns_per_span, 1),
+           "spans_per_request": spans_per_request,
+           "request_us": round(request_us, 1),
+           "overhead_frac": round(frac, 6),
+           "budget": OBS_OVERHEAD_BUDGET}
+    print(f"  obs overhead (disabled): {ns_per_span:.0f} ns/span x "
+          f"{spans_per_request} spans/request = "
+          f"{frac:.4%} of a {request_us:.0f} us request "
+          f"(budget {OBS_OVERHEAD_BUDGET:.0%})")
+    return out
 
 
 def noc_sweep(dataset: str, prog, cores: int,
@@ -307,6 +370,7 @@ def main(dataset: str = "nltcs", batch: int = 256,
     # shared machines last whole seconds — back-to-back rounds would all
     # land in one phase and defeat the best-of aggregation.
     best: dict[str, float] = {n: float("inf") for n in DEFAULT_SUBSTRATES}
+    samples: dict[str, list] = {n: [] for n in DEFAULT_SUBSTRATES}
     for name in DEFAULT_SUBSTRATES:            # warmup / compile
         server.query(Xq, "marginal", name)
     for r in range(6):
@@ -318,19 +382,33 @@ def main(dataset: str = "nltcs", batch: int = 256,
             # baselines were recorded under
             us = _best_round_us(
                 lambda n=name: server.query(Xq, "marginal", n),
-                rounds=1, n_iter=5, warmup=1)
+                rounds=1, n_iter=5, warmup=1, samples=samples[name])
             best[name] = min(best[name], us)
     for name in DEFAULT_SUBSTRATES:
         us = best[name]
         evals_s = batch / (us / 1e6)
-        record["substrates"][name] = {"us_per_batch": us,
-                                      "evals_per_s": evals_s}
+        # request-latency percentiles over every measured iteration,
+        # computed by the obs histogram (the same implementation behind
+        # Server.stats()["metrics"]["serve.latency_us.*"])
+        hist = obs_metrics.Histogram(f"bench.latency_us.{name}",
+                                     obs_metrics.REGISTRY)
+        for t in samples[name]:
+            hist.observe(t)
+        record["substrates"][name] = {
+            "us_per_batch": us, "evals_per_s": evals_s,
+            "latency_us": {"p50": round(hist.percentile(50), 1),
+                           "p95": round(hist.percentile(95), 1),
+                           "p99": round(hist.percentile(99), 1)}}
+        lat = record["substrates"][name]["latency_us"]
         rows.append(csv_row(f"serve_{name}_b{batch}", us,
                             f"evals/s={evals_s:.0f}"))
-        print(f"  {name:12s} {us:10.1f} us/batch ({evals_s:12.0f} evals/s)")
+        print(f"  {name:12s} {us:10.1f} us/batch ({evals_s:12.0f} evals/s) "
+              f"p50={lat['p50']:.0f} p95={lat['p95']:.0f} "
+              f"p99={lat['p99']:.0f} us")
 
     devs = verify_parity(server, Xq[:32], query="marginal")
     record["parity_max_abs_dev"] = max(devs.values())
+    record["obs_overhead"] = obs_overhead_check(server, Xq)
     record["pallas_interpret"] = \
         server.artifact("marginal", "pallas").meta["interpret"]
     record["segments"] = \
@@ -381,6 +459,13 @@ def main(dataset: str = "nltcs", batch: int = 256,
 
     if baseline is not None:
         failures = compare_records(record, baseline)
+        ov = record["obs_overhead"]
+        if ov["overhead_frac"] > OBS_OVERHEAD_BUDGET:
+            failures.append(
+                f"disabled-observability overhead {ov['overhead_frac']:.2%} "
+                f"of a request exceeds the {OBS_OVERHEAD_BUDGET:.0%} budget "
+                f"({ov['ns_per_span_disabled']:.0f} ns/span x "
+                f"{ov['spans_per_request']} spans/request)")
         if failures:
             print(f"  REGRESSION GATE FAILED vs {compare_path}:")
             for line in failures:

@@ -338,13 +338,17 @@ class Interconnect:
     bit-exact with the pre-NoC interconnect.
     """
 
-    def __init__(self, plan: CommPlan):
+    def __init__(self, plan: CommPlan, recorder=None):
         self.plan = plan
         icfg = plan.icfg
         self._members = plan.members
         self._latency = {r.row_id: plan.latency(r) for r in plan.rows}
         self._serial = {r.row_id: icfg.serial_cycles(len(r.gids))
                         for r in plan.rows}
+        # optional cycle-timeline recorder (repro.obs.timeline): captures
+        # per-link busy intervals and row transit windows for profiling
+        self.recorder = recorder
+        self._dst = {r.row_id: plan.geometry(r.dst) for r in plan.rows}
         # routes + injection ports live on the physical core grid the
         # partitioner placed onto (see CommPlan.geometry)
         self._src = {r.row_id: plan.geometry(r.src) for r in plan.rows}
@@ -380,10 +384,16 @@ class Interconnect:
                 t = max(head, self.link_free.get(link, 0))
                 self.link_free[link] = t + serial
                 self.link_busy[link] = self.link_busy.get(link, 0) + serial
+                if self.recorder is not None:
+                    self.recorder.link_busy(link, t, t + serial, row_id)
                 head = t + icfg.hop_latency
             arrival = head + serial
             self.link_stall_cycles += \
                 arrival - (start + len(route) * icfg.hop_latency + serial)
+        if self.recorder is not None:
+            self.recorder.row_transit(row_id, self._src[row_id],
+                                      self._dst[row_id], now, arrival,
+                                      self._members[row_id])
         self.rows[row_id] = (arrival, payload)
         self.sends += 1
         self.values_sent += payload.shape[0]

@@ -192,11 +192,19 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
     (see :func:`~repro.core.multicore.partition.place_cores`);
     ``"naive"`` keeps the flat partition for comparison.
     """
+    from ...obs import trace
     from .sim import simulate_multicore   # local import: cycle avoidance
 
-    part = partition_ops(prog, n_cores, seed=seed, strategy=strategy,
-                         passes=passes, icfg=icfg, placement=placement)
-    plans, plan = build_core_programs(prog, part, icfg, banks=cfg.banks)
+    with trace.span("compile.partition",
+                    lambda: {"cores": n_cores, "strategy": strategy,
+                             "topology": icfg.topology,
+                             "placement": placement, "n_ops": prog.n_ops}):
+        part = partition_ops(prog, n_cores, seed=seed, strategy=strategy,
+                             passes=passes, icfg=icfg, placement=placement)
+    with trace.span("compile.core_programs",
+                    lambda: {"cut_values": part.cut_values,
+                             "hop_cut": part.hop_cut}):
+        plans, plan = build_core_programs(prog, part, icfg, banks=cfg.banks)
     root_gid = prog.root_slot - prog.m
     root_core = next(i for i, cp in enumerate(plans)
                      if root_gid in set(int(g) for g in cp.gid_of_op))
@@ -210,8 +218,10 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
                                                plans[root_core].core),
                                    **compile_kwargs)
 
-    for cp in plans:
-        recompile(cp)
+    with trace.span("compile.schedule",
+                    lambda: {"cores": len(plans)}):
+        for cp in plans:
+            recompile(cp)
     mcp = MultiCoreProgram(prog=prog, cfg=cfg, icfg=icfg, n_cores=n_cores,
                            cores=plans, plan=plan, partition=part,
                            root_core=root_core)
@@ -219,16 +229,18 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
     probe_leaves = np.ones((1, prog.m_ind), np.float32)
     best_vprogs, best_res = None, None
     for it in range(max(0, eta_iters) + 1):
-        res = simulate_multicore(mcp, probe_leaves)
-        if best_res is None or res.cycles < best_res.cycles:
-            best_vprogs = [cp.vprog for cp in plans]
-            best_res = res
-        if it == eta_iters or not plan.rows:
-            break
-        etas = res.comm["row_arrivals"]
-        for cp in plans:
-            cp.comm.row_eta = dict(etas)
-            recompile(cp)
+        with trace.span("compile.eta_round", {"round": it}) as sp:
+            res = simulate_multicore(mcp, probe_leaves)
+            sp.set("cycles", res.cycles)
+            if best_res is None or res.cycles < best_res.cycles:
+                best_vprogs = [cp.vprog for cp in plans]
+                best_res = res
+            if it == eta_iters or not plan.rows:
+                break
+            etas = res.comm["row_arrivals"]
+            for cp in plans:
+                cp.comm.row_eta = dict(etas)
+                recompile(cp)
     for cp, v in zip(plans, best_vprogs):
         cp.vprog = v
 

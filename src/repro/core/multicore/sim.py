@@ -50,18 +50,30 @@ class MCSimResult:
 
 
 def simulate_multicore(mcp: MultiCoreProgram, leaf_ind: np.ndarray,
-                       cfg: ProcessorConfig | None = None) -> MCSimResult:
-    """Checked lockstep simulation from global indicator-leaf inputs."""
+                       cfg: ProcessorConfig | None = None,
+                       recorder=None) -> MCSimResult:
+    """Checked lockstep simulation from global indicator-leaf inputs.
+
+    ``recorder`` (a :class:`repro.obs.timeline.TimelineRecorder`)
+    optionally captures the per-core, per-cycle state timeline — one of
+    ``issue`` / ``stall`` / ``barrier`` per core per global cycle, plus
+    SEND/RECV markers and NoC link-occupancy intervals — for the
+    ``serve --trace`` cycle-timeline export. ``None`` (the default)
+    keeps the simulation loop unchanged.
+    """
     cfg = cfg or mcp.cfg
     leaf_ind = np.atleast_2d(leaf_ind)
     batch = leaf_ind.shape[0]
-    net = Interconnect(mcp.plan)
+    net = Interconnect(mcp.plan, recorder=recorder)
     cores = []
     for cp in mcp.cores:
         local = (leaf_ind[:, cp.leaf_map] if len(cp.leaf_map)
                  else np.zeros((batch, 0), leaf_ind.dtype))
         cores.append(CoreSim(cp.vprog, local, cfg, core_id=cp.core,
                              interconnect=net))
+    if recorder is not None:
+        for c in cores:
+            c.recorder = recorder
 
     g = 0
     while any(not c.finished() for c in cores):
@@ -70,8 +82,14 @@ def simulate_multicore(mcp: MultiCoreProgram, leaf_ind: np.ndarray,
                            "global cycles")
         progressed = False
         for c in cores:
-            if not c.finished():
-                progressed |= c.step(g)
+            if c.finished():
+                if recorder is not None:
+                    recorder.core_state(c.core_id, g, "barrier")
+                continue
+            ok = c.step(g)
+            progressed |= ok
+            if recorder is not None:
+                recorder.core_state(c.core_id, g, "issue" if ok else "stall")
         if not progressed and not net.in_transit(g):
             frozen = [(c.core_id, c.t) for c in cores if not c.finished()]
             raise SimError(f"interconnect deadlock at global cycle {g}: "

@@ -109,6 +109,10 @@ class CoreSim:
         self.useful = 0
         self.stall_cycles = 0
         self.finish_at: int | None = None   # global cycle of last instr
+        # optional cycle-timeline recorder (repro.obs.timeline); the
+        # lockstep driver attaches one for `serve --trace` profiling —
+        # None keeps the hot simulation path branch-cheap
+        self.recorder = None
         self.checks = {"read_conflicts_checked": 0,
                        "write_conflicts_checked": 0}
 
@@ -279,9 +283,15 @@ class CoreSim:
                             f"invalid cell ({bank},{reg})")
                     payload[pos] = self.regs[bank, reg]
                 self.net.push(ci.addr, payload, now)
+                if self.recorder is not None:
+                    self.recorder.comm_event(self.core_id, now, "send",
+                                             ci.addr, len(spec))
             elif ci.kind == "recv":
                 members = self.net.members(ci.addr)
                 payload = self.net.arrived(ci.addr, now)
+                if self.recorder is not None:
+                    self.recorder.comm_event(self.core_id, now, "recv",
+                                             ci.addr, members)
                 self.valid[:, ci.reg] = False
                 self.inflight.pop(ci.reg, None)
                 if payload is not None:

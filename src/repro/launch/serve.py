@@ -62,7 +62,10 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
               mask_frac: float = 0.3,
               interpret: bool | None = None,
               cores: int = 2, topology: str = "xbar",
-              link_width: int = 32) -> dict:
+              link_width: int = 32,
+              trace_path: str | None = None,
+              metrics_dump: bool = False) -> dict:
+    from .. import obs
     from ..core import learn
     from ..data import spn_datasets
     from ..queries import (mpe_backtrace, random_mask, sample_ancestral_jax,
@@ -70,6 +73,12 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
     from ..runtime import Server, verify_parity
 
     from ..core.multicore import named_interconnect
+
+    # ``--trace out.json``: record every request/compile/execute span and
+    # write a Chrome trace_event file (open in https://ui.perfetto.dev);
+    # if vliw-mc is served, the per-core simulated-cycle timelines land
+    # in the same file on a second process track (virtual cycles clock)
+    tracer = obs.trace.install() if trace_path else None
 
     X = spn_datasets.load(dataset, "train", 400)
     spn = learn.learn_spn(X, min_instances=64)
@@ -143,7 +152,8 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
 
     if query == "mpe":
         art = server.artifact("mpe", names[0])
-        assignment, log_value = mpe_backtrace(art.prog, Xq[:4])
+        with obs.trace.span("serve.decode", {"rows": 4}):
+            assignment, log_value = mpe_backtrace(art.prog, Xq[:4])
         dec = server.query(assignment, "joint", names[0])
         # tie-robust self-check: the decoded assignment's max-product
         # value must reproduce the sweep's root value
@@ -168,6 +178,35 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
               f"barrier_idle={mc['barrier_idle_cycles']}, "
               f"link_stalls={mc['link_stall_cycles']}, "
               f"busiest_link={mc['busiest_link_occupancy']}")
+
+    if tracer is not None:
+        extra: list = []
+        if "vliw-mc" in names:
+            # exact per-core cycle timeline from a 1-row lockstep probe
+            # of the artifact actually served (cycle counts are value-
+            # independent, so the probe IS the serving timeline)
+            mcp = server.artifact(query, "vliw-mc").payload[0]
+            recorder, res = obs.timeline.record_multicore(mcp)
+            extra = recorder.to_chrome_events()
+            totals = recorder.core_totals()
+            assert all(sum(t.values()) == res.cycles
+                       for t in totals.values()), \
+                "per-core timeline does not cover the full run"
+            out["cycle_timeline"] = {
+                "cycles": res.cycles,
+                "core_totals": {str(c): t for c, t in totals.items()}}
+        n_events = obs.trace.write_chrome_trace(trace_path, tracer,
+                                                extra_events=extra)
+        obs.trace.uninstall()
+        print(f"  wrote {trace_path}: {n_events} trace events "
+              f"({len(tracer.events)} wall-clock spans"
+              + (f", {len(extra)} cycle-timeline events" if extra else "")
+              + ") — open in https://ui.perfetto.dev")
+    if metrics_dump:
+        print("  metrics registry:")
+        for line in obs.metrics.dump().splitlines():
+            print(f"    {line}")
+    out["metrics"] = obs.metrics.snapshot()
     return out
 
 
@@ -235,6 +274,14 @@ def main() -> None:
                          "per-link contention + topology-aware placement")
     ap.add_argument("--link-width", type=int, default=32,
                     help="values serialized per cycle per NoC link")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome trace_event file of the run: "
+                         "wall-clock request/compile/execute spans plus "
+                         "(for vliw-mc) per-core simulated-cycle "
+                         "timelines; open in https://ui.perfetto.dev")
+    ap.add_argument("--metrics-dump", action="store_true",
+                    help="print the metrics registry (counters, gauges, "
+                         "latency percentiles) after serving")
     ap.add_argument("--dataset", default="nltcs")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=256)
@@ -249,7 +296,8 @@ def main() -> None:
                   interpret={"auto": None, "on": True,
                              "off": False}[args.interpret],
                   cores=args.cores, topology=args.topology,
-                  link_width=args.link_width)
+                  link_width=args.link_width,
+                  trace_path=args.trace, metrics_dump=args.metrics_dump)
     else:
         serve_lm(args.arch, min(args.batch, 8), args.prompt_len,
                  args.gen_len)

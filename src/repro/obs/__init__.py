@@ -1,0 +1,32 @@
+"""End-to-end observability: tracing, metrics, cycle-level timelines.
+
+Zero-dependency (stdlib + numpy only at the edges) subsystem threaded
+through the whole serving path. Three pillars:
+
+:mod:`repro.obs.trace`
+    Lightweight span API with per-request trace ids and a Chrome
+    ``trace_event`` JSON exporter (perfetto-loadable). Disabled spans
+    are allocation-free no-ops; attrs are lazily evaluated.
+:mod:`repro.obs.metrics`
+    Process-global registry of counters / gauges / histograms
+    (p50/p95/p99) replacing the ad-hoc stat dicts; ``Server.stats()``
+    snapshots it read-only and ``serve --metrics-dump`` renders it.
+:mod:`repro.obs.timeline`
+    Per-core, per-cycle timelines (issue / stall / barrier, SEND/RECV
+    markers, NoC link occupancy) of the multi-core lockstep simulator,
+    exported into the same Chrome trace on a virtual cycles clock.
+
+Quick use::
+
+    from repro import obs
+    tracer = obs.trace.install()             # start recording spans
+    ... serve requests ...
+    obs.trace.write_chrome_trace("out.json", tracer)
+    print(obs.metrics.dump())
+"""
+from . import metrics, timeline, trace
+from .metrics import REGISTRY
+from .trace import active, install, instant, span, uninstall
+
+__all__ = ["trace", "metrics", "timeline", "REGISTRY",
+           "span", "instant", "install", "uninstall", "active"]

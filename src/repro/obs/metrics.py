@@ -1,0 +1,207 @@
+"""Process-global metrics registry: counters, gauges, histograms.
+
+Replaces the ad-hoc stat dicts that used to live in ``Server.stats()``
+and one-off bench prints with one uniform, named instrument space:
+
+- :class:`Counter` — monotone event counts (``serve.requests``,
+  ``cache.hits``, ``fault.restarts``);
+- :class:`Gauge` — last-written values (``cache.size``);
+- :class:`Histogram` — sample distributions with exact
+  linearly-interpolated percentiles over a bounded ring of recent
+  samples (``serve.latency_us.<substrate>``, ``batch.fill``) — the
+  p50/p95/p99 source for ``BENCH_serve.json`` and ``metrics.dump()``.
+
+The registry is deliberately zero-dependency and cheap: instruments are
+plain attribute updates, and the whole registry can be switched off
+(``REGISTRY.enabled = False``) making every ``inc``/``observe`` a no-op
+— asserted by the overhead guard in ``benchmarks/serve_bench.py``.
+``Server.stats()`` exposes :meth:`Registry.snapshot` read-only under the
+``"metrics"`` key; ``serve --metrics-dump`` prints :meth:`Registry.dump`.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+__all__ = ["Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
+           "counter", "gauge", "histogram", "snapshot", "dump", "reset"]
+
+
+class Counter:
+    __slots__ = ("name", "value", "_reg")
+
+    def __init__(self, name: str, reg: "Registry"):
+        self.name, self.value, self._reg = name, 0, reg
+
+    def inc(self, n: int = 1) -> None:
+        if self._reg.enabled:
+            self.value += n
+
+
+class Gauge:
+    __slots__ = ("name", "value", "_reg")
+
+    def __init__(self, name: str, reg: "Registry"):
+        self.name, self.value, self._reg = name, 0.0, reg
+
+    def set(self, v: float) -> None:
+        if self._reg.enabled:
+            self.value = v
+
+
+class Histogram:
+    """Exact percentiles over a bounded ring of the newest samples.
+
+    Running ``count``/``sum``/``min``/``max`` cover the full stream;
+    percentiles are computed from the newest ``max_samples`` values
+    (ring overwrite — deterministic, no random reservoir), sorted on
+    demand with numpy-style linear interpolation between order
+    statistics.
+    """
+
+    __slots__ = ("name", "count", "sum", "min", "max",
+                 "_ring", "_cap", "_head", "_reg")
+
+    def __init__(self, name: str, reg: "Registry", max_samples: int = 8192):
+        self.name = name
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._ring: list[float] = []
+        self._cap = max_samples
+        self._head = 0
+        self._reg = reg
+
+    def observe(self, v: float) -> None:
+        if not self._reg.enabled:
+            return
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+        if len(self._ring) < self._cap:
+            self._ring.append(v)
+        else:
+            self._ring[self._head] = v
+            self._head = (self._head + 1) % self._cap
+
+    def percentile(self, p: float) -> float:
+        """Linearly-interpolated percentile ``p`` in [0, 100]."""
+        if not self._ring:
+            return math.nan
+        xs = sorted(self._ring)
+        if len(xs) == 1:
+            return xs[0]
+        rank = (p / 100.0) * (len(xs) - 1)
+        lo = int(math.floor(rank))
+        hi = min(lo + 1, len(xs) - 1)
+        frac = rank - lo
+        return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+    def summary(self) -> dict:
+        if not self.count:
+            return {"count": 0}
+        return {"count": self.count,
+                "sum": round(self.sum, 6),
+                "min": round(self.min, 6),
+                "max": round(self.max, 6),
+                "mean": round(self.sum / self.count, 6),
+                "p50": round(self.percentile(50), 6),
+                "p95": round(self.percentile(95), 6),
+                "p99": round(self.percentile(99), 6)}
+
+
+class Registry:
+    """Named instrument store; get-or-create, type-checked."""
+
+    def __init__(self) -> None:
+        self._metrics: dict[str, object] = {}
+        self.enabled = True
+
+    def _get(self, name: str, cls, **kwargs):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(name, self, **kwargs)
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{type(m).__name__}, not {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str, max_samples: int = 8192) -> Histogram:
+        return self._get(name, Histogram, max_samples=max_samples)
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._metrics))
+
+    def snapshot(self) -> dict:
+        """Read-only value snapshot: name -> number | histogram summary."""
+        out: dict = {}
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            out[name] = m.summary() if isinstance(m, Histogram) else m.value
+        return out
+
+    def dump(self, fmt: str = "text") -> str:
+        """Render the registry: ``text`` (one line per metric) or ``json``."""
+        if fmt == "json":
+            return json.dumps(self.snapshot(), indent=2)
+        if fmt != "text":
+            raise ValueError(f"unknown dump format {fmt!r}")
+        lines = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if isinstance(m, Histogram):
+                s = m.summary()
+                if s["count"]:
+                    lines.append(
+                        f"hist    {name:40s} count={s['count']} "
+                        f"mean={s['mean']:.3f} p50={s['p50']:.3f} "
+                        f"p95={s['p95']:.3f} p99={s['p99']:.3f}")
+                else:
+                    lines.append(f"hist    {name:40s} count=0")
+            elif isinstance(m, Gauge):
+                lines.append(f"gauge   {name:40s} {m.value}")
+            else:
+                lines.append(f"counter {name:40s} {m.value}")
+        return "\n".join(lines)
+
+    def reset(self) -> None:
+        self._metrics.clear()
+
+
+#: the process-global registry every layer of the serving stack writes to
+REGISTRY = Registry()
+
+
+def counter(name: str) -> Counter:
+    return REGISTRY.counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return REGISTRY.gauge(name)
+
+
+def histogram(name: str, max_samples: int = 8192) -> Histogram:
+    return REGISTRY.histogram(name, max_samples)
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()
+
+
+def dump(fmt: str = "text") -> str:
+    return REGISTRY.dump(fmt)
+
+
+def reset() -> None:
+    REGISTRY.reset()

@@ -1,0 +1,166 @@
+"""Cycle-level timeline profiling of the multi-core lockstep simulator.
+
+The checked lockstep sim already *counts* stall/barrier/link/inject
+cycles; this module promotes the counts into a per-core, per-cycle
+timeline: every global cycle each core is in exactly one of the states
+
+- ``issue``   — the core executed one VLIW instruction,
+- ``stall``   — flow-control stall (a crossbar read hit a
+  shared-register-window cell still in flight),
+- ``barrier`` — finished, idling at the implicit end-of-program barrier,
+
+recorded as run-length intervals, plus instant SEND/RECV markers and the
+per-link busy intervals / channel-row transit windows charged by the
+NoC contention model (:class:`repro.core.multicore.comm.Interconnect`).
+
+:meth:`TimelineRecorder.to_chrome_events` renders it all as Chrome
+``trace_event`` rows on a **virtual "cycles" clock** (1 simulated cycle
+= 1 trace microsecond) under a second process track, so one perfetto
+view shows wall-clock request spans and simulated-core timelines side
+by side (see ``serve --trace``).
+
+Because the lockstep cycle count is value-independent, a 1-row probe
+(:func:`record_multicore`) yields the exact serving timeline; the
+per-core interval sums are asserted against the checked sim's cycle
+count — and the golden ``tests/golden_cycles.json`` fixtures — exactly.
+"""
+from __future__ import annotations
+
+__all__ = ["TimelineRecorder", "record_multicore"]
+
+#: tid offsets inside the cycles process track
+_LINK_TID0 = 1000
+_NOC_TID = 900
+
+
+class TimelineRecorder:
+    """Collects per-core states, comm markers and link occupancy."""
+
+    STATES = ("issue", "stall", "barrier")
+
+    def __init__(self) -> None:
+        # core -> [[state, start_cycle, end_cycle], ...] run-length runs
+        self._runs: dict[int, list[list]] = {}
+        # (core, cycle, kind, row_id, members)
+        self.comm_events: list[tuple] = []
+        # ((src_node, dst_node), start, end, row_id)
+        self.link_intervals: list[tuple] = []
+        # (row_id, src_core, dst_core, send_cycle, arrival_cycle, members)
+        self.row_transits: list[tuple] = []
+        self.cycles = 0
+
+    # ------------- recording hooks (called by the sims) ----------------- #
+    def core_state(self, core: int, cycle: int, state: str) -> None:
+        runs = self._runs.setdefault(core, [])
+        if runs and runs[-1][0] == state and runs[-1][2] == cycle:
+            runs[-1][2] = cycle + 1
+        else:
+            runs.append([state, cycle, cycle + 1])
+        if cycle + 1 > self.cycles:
+            self.cycles = cycle + 1
+
+    def comm_event(self, core: int, cycle: int, kind: str,
+                   row_id: int, members: int) -> None:
+        self.comm_events.append((core, cycle, kind, row_id, members))
+
+    def link_busy(self, link: tuple, start: int, end: int,
+                  row_id: int) -> None:
+        self.link_intervals.append((link, start, end, row_id))
+
+    def row_transit(self, row_id: int, src: int, dst: int,
+                    send: int, arrival: int, members: int) -> None:
+        self.row_transits.append((row_id, src, dst, send, arrival, members))
+
+    # ------------- aggregation ------------------------------------------ #
+    @property
+    def cores(self) -> tuple[int, ...]:
+        return tuple(sorted(self._runs))
+
+    def intervals(self, core: int) -> list[tuple]:
+        """[(state, start, end), ...] covering [0, cycles) for ``core``."""
+        return [tuple(r) for r in self._runs.get(core, [])]
+
+    def core_totals(self) -> dict[int, dict[str, int]]:
+        """Per-core cycles in each state; states sum to ``self.cycles``."""
+        out: dict[int, dict[str, int]] = {}
+        for core, runs in sorted(self._runs.items()):
+            tot = {s: 0 for s in self.STATES}
+            for state, start, end in runs:
+                tot[state] += end - start
+            out[core] = tot
+        return out
+
+    # ------------- Chrome trace_event rendering ------------------------- #
+    def to_chrome_events(self, *, pid: int = 2,
+                         process_name: str = "vliw-mc (simulated cycles)",
+                         clock_label: str = "cycles") -> list[dict]:
+        """Chrome events on a virtual clock: 1 cycle = 1 trace us.
+
+        Per-core tracks carry the issue/stall/barrier intervals and
+        SEND/RECV instants; NoC traffic lands on a row-transit track
+        plus one track per physical link.
+        """
+        events: list[dict] = [{
+            "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+            "args": {"name": f"{process_name} [{clock_label}]"},
+        }]
+        for core in self.cores:
+            events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                           "tid": core, "args": {"name": f"core {core}"}})
+            for state, start, end in self._runs[core]:
+                events.append({
+                    "name": state, "ph": "X", "ts": float(start),
+                    "dur": float(end - start), "pid": pid, "tid": core,
+                    "cat": "cycles", "args": {"cycles": end - start},
+                })
+        for core, cycle, kind, row_id, members in self.comm_events:
+            events.append({
+                "name": f"{kind} row {row_id}", "ph": "i",
+                "ts": float(cycle), "pid": pid, "tid": core, "s": "t",
+                "cat": "comm",
+                "args": {"row": row_id, "members": members, "kind": kind},
+            })
+        if self.row_transits:
+            events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                           "tid": _NOC_TID, "args": {"name": "NoC rows"}})
+            for row_id, src, dst, send, arrival, members in self.row_transits:
+                events.append({
+                    "name": f"row {row_id}: {src}->{dst}", "ph": "X",
+                    "ts": float(send), "dur": float(max(arrival - send, 1)),
+                    "pid": pid, "tid": _NOC_TID, "cat": "noc",
+                    "args": {"row": row_id, "src": src, "dst": dst,
+                             "members": members,
+                             "latency": arrival - send},
+                })
+        link_tid: dict[tuple, int] = {}
+        for link, start, end, row_id in self.link_intervals:
+            tid = link_tid.get(link)
+            if tid is None:
+                tid = link_tid[link] = _LINK_TID0 + len(link_tid)
+                events.append({
+                    "ph": "M", "name": "thread_name", "pid": pid, "tid": tid,
+                    "args": {"name": f"link {link[0]}->{link[1]}"},
+                })
+            events.append({
+                "name": f"row {row_id}", "ph": "X", "ts": float(start),
+                "dur": float(max(end - start, 1)), "pid": pid, "tid": tid,
+                "cat": "link", "args": {"row": row_id},
+            })
+        return events
+
+
+def record_multicore(mcp, recorder: TimelineRecorder | None = None):
+    """Exact cycle timeline of ``mcp`` from a 1-row lockstep probe.
+
+    Returns ``(recorder, MCSimResult)``. Cycle counts are
+    value-independent, so this single probe run IS the serving timeline
+    (the same property the compile-time ETA calibration relies on).
+    """
+    import numpy as np
+
+    from ..core.multicore.sim import simulate_multicore
+
+    recorder = recorder or TimelineRecorder()
+    leaves = np.ones((1, mcp.prog.m_ind), np.float32)
+    res = simulate_multicore(mcp, leaves, recorder=recorder)
+    return recorder, res

@@ -17,13 +17,21 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..obs import metrics, trace
+
 
 class PendingResult:
-    """Handle for a submitted request; materializes on first access."""
+    """Handle for a submitted request; materializes on first access.
+
+    ``trace_id`` is the request's trace id (0 when tracing is off) —
+    assigned at submit time and carried into the batch-flush span so a
+    coalesced execution can be attributed back to every request in it.
+    """
 
     def __init__(self, batcher: "MicroBatcher"):
         self._batcher = batcher
         self._value: np.ndarray | None = None
+        self.trace_id = 0
 
     def ready(self) -> bool:
         return self._value is not None
@@ -85,9 +93,20 @@ class MicroBatcher:
         if n_pad > n:   # neutral rows: every indicator 1 (marginalize-all)
             pad = np.ones((n_pad - n, rows.shape[1]), rows.dtype)
             rows = np.concatenate([rows, pad], axis=0)
-        values = np.asarray(self.execute(rows))[:n]
+        # the coalesce span links every member request by trace id, so a
+        # batched execution is attributable request-by-request in the
+        # trace view (attrs stay lazy: nothing built when tracing is off)
+        with trace.span("batch.flush",
+                        lambda: {"requests": len(queue), "rows": n,
+                                 "padded_rows": n_pad - n,
+                                 "trace_ids": [p.trace_id
+                                               for _, p in queue]}):
+            values = np.asarray(self.execute(rows))[:n]
         self.stats["batches"] += 1
         self.stats["padded_rows"] += n_pad - n
+        metrics.counter("batch.flushes").inc()
+        metrics.counter("batch.padded_rows").inc(n_pad - n)
+        metrics.histogram("batch.fill").observe(n / n_pad if n_pad else 1.0)
         off = 0
         for leaves, pending in queue:
             k = leaves.shape[0]

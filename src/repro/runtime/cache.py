@@ -17,6 +17,7 @@ from __future__ import annotations
 from collections import OrderedDict
 
 from ..core.program import TensorProgram
+from ..obs import metrics, trace
 from .substrates import LANE, SEMIRING_OF_QUERY, Substrate
 
 
@@ -47,18 +48,30 @@ class ArtifactCache:
                        query: str = "joint", log_domain: bool = True,
                        batch_tile: int = LANE):
         k = self.key(prog, query, substrate, batch_tile, log_domain)
-        art = self._entries.get(k)
-        if art is not None:
-            self.hits += 1
-            self._entries.move_to_end(k)
-            return art
-        self.misses += 1
-        art = substrate.compile(prog, query=query, log_domain=log_domain,
-                                batch_tile=batch_tile)
+        with trace.span("cache.lookup",
+                        lambda: {"substrate": substrate.name,
+                                 "semiring": k[1]}) as sp:
+            art = self._entries.get(k)
+            if art is not None:
+                self.hits += 1
+                metrics.counter("cache.hits").inc()
+                sp.set("hit", True)
+                self._entries.move_to_end(k)
+                return art
+            self.misses += 1
+            metrics.counter("cache.misses").inc()
+            sp.set("hit", False)
+        with trace.span(f"compile.{substrate.name}",
+                        lambda: {"digest": k[0][:12], "semiring": k[1],
+                                 "config": k[3]}):
+            art = substrate.compile(prog, query=query, log_domain=log_domain,
+                                    batch_tile=batch_tile)
         self._entries[k] = art
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.evictions += 1
+            metrics.counter("cache.evictions").inc()
+        metrics.gauge("cache.size").set(len(self._entries))
         return art
 
     def artifacts(self):

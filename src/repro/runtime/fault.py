@@ -19,6 +19,8 @@ import time
 from collections import deque
 from typing import Any, Callable
 
+from ..obs import metrics, trace
+
 
 # ---------------------------------------------------------------------------
 # heartbeats
@@ -105,6 +107,14 @@ def run_with_restarts(make_state: Callable[[], Any],
     - ``run`` either returns the finished result or raises. On raise, we
       restore and retry (the raised step's work is lost back to the last
       checkpoint — exactly the paper-scale deployment contract).
+
+    Every attempt runs inside a ``fault.attempt`` span, so a failure is
+    recorded as an *error span* carrying the exception type — never a
+    silently dropped span — and counted in the ``fault.restarts``
+    metric. When the restart budget is exhausted the final
+    :class:`TrainingAborted` chains the last real exception (``from
+    exc``) instead of discarding it: the root cause stays in the
+    traceback.
     """
     failures = 0
     while True:
@@ -112,14 +122,21 @@ def run_with_restarts(make_state: Callable[[], Any],
         if state is None:
             state = make_state()
         try:
-            return run(state)
+            with trace.span("fault.attempt", {"attempt": failures}):
+                return run(state)
         except TrainingAborted:
             raise
-        except Exception:
+        except Exception as exc:
             failures += 1
+            metrics.counter("fault.restarts").inc()
+            trace.instant("fault.failure",
+                          {"attempt": failures,
+                           "error": type(exc).__name__,
+                           "message": str(exc)[:200]})
             if failures > policy.max_failures:
                 raise TrainingAborted(
-                    f"exceeded {policy.max_failures} restarts") from None
+                    f"exceeded {policy.max_failures} restarts "
+                    f"(last: {type(exc).__name__}: {exc})") from exc
             if policy.backoff_s:
                 time.sleep(policy.backoff_s)
 

@@ -22,6 +22,7 @@ shared by serve and the tests.
 """
 from __future__ import annotations
 
+import time
 import weakref
 
 import numpy as np
@@ -29,6 +30,7 @@ import numpy as np
 from ..core import program as program_mod
 from ..core.processor.config import PTREE, ProcessorConfig
 from ..core.spn import SPN
+from ..obs import metrics, trace
 from .batcher import MicroBatcher, PendingResult
 from .cache import ArtifactCache
 from .substrates import (LANE, QUERIES, Artifact, Substrate, canonical,
@@ -104,9 +106,25 @@ class Server:
             # value would pin its own key and the WeakKeyDictionary could
             # never release evicted artifacts (payloads included)
             aref = weakref.ref(art)
+
+            def _execute(leaves, _s=sub, _r=aref):
+                a = _r()
+                # an execute failure is recorded as an error span (the
+                # exception type lands in the span attrs) and counted —
+                # never a silently dropped span (see runtime.fault)
+                with trace.span(
+                        "exec." + _s.name,
+                        lambda: {"rows": int(leaves.shape[0]),
+                                 "semiring": a.semiring}):
+                    try:
+                        return _s.execute(a, leaves)
+                    except Exception:
+                        metrics.counter("serve.errors").inc()
+                        raise
+
             batcher = MicroBatcher(
-                lambda leaves, _s=sub, _r=aref: _s.execute(_r(), leaves),
-                tile=sub.pad_tile(art.batch_tile), max_rows=self.max_rows)
+                _execute, tile=sub.pad_tile(art.batch_tile),
+                max_rows=self.max_rows)
             self._batchers[art] = batcher
         return batcher
 
@@ -120,12 +138,25 @@ class Server:
         value of the query's program on the chosen substrate.
         """
         x = np.atleast_2d(x)
-        if query == "joint" and (x < 0).any():
-            raise ValueError("joint queries need full evidence; "
-                             "use query='marginal' for rows containing -1")
-        art = self.artifact(query, substrate)
-        leaves = art.prog.leaves_from_evidence(x)
-        return self._batcher_for(art).submit(leaves)
+        # one root span per request: a fresh trace id is minted here and
+        # propagated via PendingResult into the batch-flush span, so a
+        # coalesced execution is attributable to every member request
+        with trace.span("serve.request",
+                        lambda: {"query": query, "substrate": substrate,
+                                 "rows": int(x.shape[0])},
+                        root=True) as sp:
+            if query == "joint" and (x < 0).any():
+                raise ValueError("joint queries need full evidence; "
+                                 "use query='marginal' for rows "
+                                 "containing -1")
+            art = self.artifact(query, substrate)
+            with trace.span("serve.leaves"):
+                leaves = art.prog.leaves_from_evidence(x)
+            pending = self._batcher_for(art).submit(leaves)
+            pending.trace_id = sp.trace_id
+        metrics.counter("serve.requests").inc()
+        metrics.counter("serve.rows").inc(int(x.shape[0]))
+        return pending
 
     def flush(self) -> None:
         for batcher in list(self._batchers.values()):
@@ -133,13 +164,29 @@ class Server:
 
     def query(self, x: np.ndarray, query: str = "joint",
               substrate: str = "leveled-jax") -> np.ndarray:
-        """Synchronous submit + flush: (batch,) root log values."""
+        """Synchronous submit + flush: (batch,) root log values.
+
+        End-to-end latency (admission through execute) is observed into
+        the per-substrate ``serve.latency_us.<name>`` histogram — the
+        p50/p95/p99 source for ``Server.stats()["metrics"]`` and
+        ``BENCH_serve.json``.
+        """
+        t0 = time.perf_counter()
         pending = self.submit(x, query, substrate)
-        return pending.result()
+        values = pending.result()
+        metrics.histogram(
+            "serve.latency_us." + canonical(substrate)).observe(
+            (time.perf_counter() - t0) * 1e6)
+        return values
 
     # ---------------- introspection ---------------------------------------- #
     def stats(self) -> dict:
-        out = {"cache": self.cache.stats(),
+        """Serving statistics (backward-compatible keys) + a read-only
+        snapshot of the process-global metrics registry (``"metrics"``:
+        request counters, per-substrate latency percentiles, batch fill,
+        cache hit counters — see :mod:`repro.obs.metrics`)."""
+        out = {"metrics": metrics.snapshot(),
+               "cache": self.cache.stats(),
                "compiles": {n: s.compile_count
                             for n, s in self.substrates.items()},
                "padded_rows": 0,

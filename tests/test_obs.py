@@ -1,0 +1,383 @@
+"""Observability layer (`repro.obs`): tracing, metrics, cycle timelines.
+
+Covers the three pillars end to end:
+
+- span API invariants: nesting (parent/child ids, time containment),
+  per-request trace ids, lazy attrs, disabled no-op fast path,
+- error spans: an exception inside a traced section is *recorded* (type
+  + message in the attrs), never silently dropped — including through
+  ``runtime.Server`` execute and ``runtime.fault.run_with_restarts``,
+- metrics registry: counter/gauge semantics, histogram percentile
+  correctness against ``np.percentile``, disabled no-ops, dump formats,
+- trace-id propagation: ``Server.submit`` mints one trace id per
+  request and the coalesced ``batch.flush`` span links them all,
+- Chrome trace JSON schema validity (perfetto-loadable shape),
+- cycle timelines: per-core interval sums equal the lockstep sim's
+  global cycle count exactly, and match the committed
+  ``tests/golden_cycles.json`` fixture.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import obs
+from repro.core import learn, multicore as mc, program
+from repro.core.multicore.comm import named_interconnect
+from repro.core.processor.config import PTREE
+from repro.data import spn_datasets
+from repro.obs import metrics, timeline, trace
+from repro.runtime import Server
+from repro.runtime.fault import (RestartPolicy, TrainingAborted,
+                                 run_with_restarts)
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden_cycles.json"
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts with tracing off and an empty registry."""
+    trace.uninstall()
+    metrics.REGISTRY.reset()
+    metrics.REGISTRY.enabled = True
+    yield
+    trace.uninstall()
+    metrics.REGISTRY.reset()
+    metrics.REGISTRY.enabled = True
+
+
+# ---------------------------------------------------------------------------
+# tracing: spans, nesting, trace ids, disabled path
+# ---------------------------------------------------------------------------
+def test_disabled_span_is_shared_noop():
+    assert not trace.active()
+    s1 = trace.span("a", {"x": 1})
+    s2 = trace.span("b")
+    assert s1 is s2            # one cached object, no per-call allocation
+    with s1 as sp:
+        sp.set("k", "v")       # no-op, no error
+    assert sp.trace_id == 0
+
+
+def test_lazy_attrs_not_evaluated_when_disabled():
+    calls = []
+
+    def attrs():
+        calls.append(1)
+        return {"x": 1}
+
+    with trace.span("a", attrs):
+        pass
+    assert not calls           # disabled: the callable was never invoked
+    tracer = trace.install()
+    with trace.span("a", attrs):
+        pass
+    assert calls == [1]
+    assert tracer.spans("a")[0]["args"]["x"] == 1
+
+
+def test_span_nesting_parent_child_and_time_containment():
+    tracer = trace.install()
+    with trace.span("outer") as out_sp:
+        with trace.span("inner") as in_sp:
+            pass
+    outer, = tracer.spans("outer")
+    inner, = tracer.spans("inner")
+    assert inner["parent_id"] == outer["span_id"]
+    assert inner["trace_id"] == outer["trace_id"]
+    assert outer["ts_us"] <= inner["ts_us"]
+    assert (inner["ts_us"] + inner["dur_us"]
+            <= outer["ts_us"] + outer["dur_us"] + 1e-6)
+    assert in_sp.parent_id == out_sp.span_id
+
+
+@settings(max_examples=20, deadline=None)
+@given(depth=st.integers(1, 8), width=st.integers(1, 4))
+def test_span_ordering_invariants(depth, width):
+    """Random nest shapes: ids unique, children contained, stack clean."""
+    tracer = trace.Tracer()
+    trace.install(tracer)
+    try:
+        def nest(d):
+            for _ in range(width):
+                with trace.span(f"d{d}"):
+                    if d > 1:
+                        nest(d - 1)
+        nest(depth)
+    finally:
+        trace.uninstall()
+    events = tracer.events
+    assert len(events) == sum(width ** k for k in range(1, depth + 1))
+    ids = [e["span_id"] for e in events]
+    assert len(set(ids)) == len(ids)
+    by_id = {e["span_id"]: e for e in events}
+    for e in events:
+        if e["parent_id"]:
+            p = by_id[e["parent_id"]]
+            assert e["trace_id"] == p["trace_id"]
+            assert p["ts_us"] - 1e-6 <= e["ts_us"]
+            assert (e["ts_us"] + e["dur_us"]
+                    <= p["ts_us"] + p["dur_us"] + 1e-6)
+    assert tracer._stack() == []      # balanced enter/exit
+
+
+def test_root_spans_get_distinct_trace_ids():
+    tracer = trace.install()
+    with trace.span("r1", root=True) as a:
+        pass
+    with trace.span("r2", root=True) as b:
+        pass
+    assert a.trace_id != b.trace_id
+    assert {e["trace_id"] for e in tracer.events} == {a.trace_id, b.trace_id}
+
+
+def test_error_span_records_exception_and_propagates():
+    tracer = trace.install()
+    with pytest.raises(ValueError, match="boom"):
+        with trace.span("will_fail", {"k": 1}):
+            raise ValueError("boom")
+    rec, = tracer.spans("will_fail")
+    assert rec["error"] is True
+    assert rec["args"]["error"] == "ValueError"
+    assert "boom" in rec["args"]["message"]
+    assert rec["args"]["k"] == 1      # original attrs survive the error
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_counter_gauge_semantics():
+    metrics.counter("c").inc()
+    metrics.counter("c").inc(4)
+    metrics.gauge("g").set(2.5)
+    snap = metrics.snapshot()
+    assert snap["c"] == 5
+    assert snap["g"] == 2.5
+    with pytest.raises(TypeError):
+        metrics.gauge("c")            # name/type collision is loud
+
+
+def test_histogram_percentiles_match_numpy():
+    h = metrics.histogram("lat")
+    rng = np.random.default_rng(7)
+    xs = rng.exponential(100.0, 500)
+    for x in xs:
+        h.observe(x)
+    for p in (50, 90, 95, 99):
+        assert h.percentile(p) == pytest.approx(
+            np.percentile(xs, p, method="linear"), rel=1e-9)
+    s = h.summary()
+    assert s["count"] == 500
+    assert s["min"] == pytest.approx(xs.min())
+    assert s["max"] == pytest.approx(xs.max())
+    assert s["mean"] == pytest.approx(xs.mean(), rel=1e-6)
+
+
+def test_histogram_ring_keeps_newest_samples():
+    h = metrics.Histogram("h", metrics.REGISTRY, max_samples=16)
+    for v in range(100):
+        h.observe(float(v))
+    assert h.count == 100             # running totals cover the stream
+    assert h.percentile(0) >= 84.0    # ring holds only the newest 16
+
+
+def test_registry_disabled_is_noop():
+    metrics.REGISTRY.enabled = False
+    metrics.counter("c").inc()
+    metrics.gauge("g").set(9)
+    metrics.histogram("h").observe(1.0)
+    snap = metrics.snapshot()
+    assert snap["c"] == 0 and snap["g"] == 0.0
+    assert snap["h"] == {"count": 0}
+
+
+def test_dump_formats():
+    metrics.counter("serve.requests").inc(3)
+    metrics.histogram("lat").observe(10.0)
+    text = metrics.dump()
+    assert "counter serve.requests" in text and "hist" in text
+    assert json.loads(metrics.dump("json"))["serve.requests"] == 3
+    with pytest.raises(ValueError):
+        metrics.dump("yaml")
+
+
+# ---------------------------------------------------------------------------
+# server integration: trace-id propagation, latency metrics, error spans
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def obs_server(small_spn):
+    return Server(small_spn, substrates=("numpy", "vliw-sim"))
+
+
+def test_trace_id_propagates_through_server(obs_server, small_spn):
+    tracer = trace.install()
+    X = np.random.default_rng(0).integers(0, 2, (4, small_spn.num_vars))
+    p1 = obs_server.submit(X, "joint", "numpy")
+    p2 = obs_server.submit(X, "joint", "numpy")
+    assert p1.trace_id and p2.trace_id and p1.trace_id != p2.trace_id
+    obs_server.flush()
+    flush = tracer.spans("batch.flush")[-1]
+    assert set(flush["args"]["trace_ids"]) >= {p1.trace_id, p2.trace_id}
+    reqs = tracer.spans("serve.request")
+    assert {r["trace_id"] for r in reqs} >= {p1.trace_id, p2.trace_id}
+    execs = tracer.spans("exec.numpy")
+    assert execs and execs[-1]["args"]["rows"] >= 8   # coalesced (+ padding)
+
+
+def test_server_latency_metrics_and_stats_snapshot(obs_server, small_spn):
+    X = np.random.default_rng(1).integers(0, 2, (4, small_spn.num_vars))
+    obs_server.query(X, "joint", "vliw-sim")
+    stats = obs_server.stats()
+    snap = stats["metrics"]
+    assert snap["serve.requests"] >= 1
+    assert snap["serve.latency_us.vliw-sim"]["count"] >= 1
+    assert snap["serve.latency_us.vliw-sim"]["p50"] > 0
+    # backward-compatible keys all still present
+    for key in ("cache", "compiles", "padded_rows", "batchers", "multicore"):
+        assert key in stats
+
+
+def test_substrate_failure_records_error_span(small_spn):
+    """Regression: a substrate failure inside a traced request must emit
+    an error span naming the exception type, not silently drop it."""
+    server = Server(small_spn, substrates=("numpy",))
+    tracer = trace.install()
+    X = np.random.default_rng(2).integers(0, 2, (2, small_spn.num_vars))
+    server.query(X, "joint", "numpy")                 # build the batcher
+
+    def exploding_execute(artifact, leaves):
+        raise RuntimeError("substrate hardware fault")
+
+    server.substrates["numpy"].execute = exploding_execute
+    with pytest.raises(RuntimeError, match="hardware fault"):
+        server.query(X, "joint", "numpy")
+    errors = [e for e in tracer.spans("exec.numpy") if e["error"]]
+    assert errors, "execute failure left no error span"
+    assert errors[-1]["args"]["error"] == "RuntimeError"
+    assert "hardware fault" in errors[-1]["args"]["message"]
+    flush_errors = [e for e in tracer.spans("batch.flush") if e["error"]]
+    assert flush_errors, "flush span dropped instead of marked errored"
+    assert metrics.snapshot()["serve.errors"] >= 1
+
+
+def test_fault_restart_chains_cause_and_counts():
+    tracer = trace.install()
+
+    def run(_state):
+        raise OSError("flaky HBM")
+
+    with pytest.raises(TrainingAborted) as ei:
+        run_with_restarts(lambda: {}, lambda: None, run,
+                          RestartPolicy(max_failures=2))
+    assert isinstance(ei.value.__cause__, OSError)    # honest chaining
+    assert "flaky HBM" in str(ei.value)
+    attempts = [e for e in tracer.spans("fault.attempt") if e["error"]]
+    assert len(attempts) == 3
+    assert attempts[0]["args"]["error"] == "OSError"
+    assert metrics.snapshot()["fault.restarts"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export schema
+# ---------------------------------------------------------------------------
+def test_chrome_trace_schema(tmp_path, obs_server, small_spn):
+    tracer = trace.install()
+    X = np.random.default_rng(3).integers(0, 2, (4, small_spn.num_vars))
+    obs_server.query(X, "joint", "numpy")
+    out = tmp_path / "trace.json"
+    n = trace.write_chrome_trace(str(out), tracer)
+    doc = json.loads(out.read_text())                 # valid JSON
+    events = doc["traceEvents"]
+    assert len(events) == n and doc["displayTimeUnit"] == "ms"
+    assert any(e["ph"] == "M" and e["name"] == "process_name"
+               for e in events)
+    for e in events:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+        if e["ph"] == "X":
+            assert isinstance(e["ts"], float) and e["dur"] > 0
+            assert e["args"]["trace_id"] >= 0
+    spans = [e for e in events if e["ph"] == "X"]
+    assert any(e["name"] == "serve.request" for e in spans)
+
+
+# ---------------------------------------------------------------------------
+# cycle timelines
+# ---------------------------------------------------------------------------
+def _mcp(prog, cores, topology="xbar"):
+    return mc.compile_multicore(prog, PTREE, cores,
+                                named_interconnect(topology))
+
+
+def test_timeline_covers_every_core_cycle(nltcs_prog):
+    mcp = _mcp(nltcs_prog, 4, "mesh")
+    rec, res = timeline.record_multicore(mcp)
+    assert rec.cycles == res.cycles == mcp.meta["cycles"]
+    totals = rec.core_totals()
+    assert sorted(totals) == [cp.core for cp in mcp.cores]
+    for core, tot in totals.items():
+        assert sum(tot.values()) == res.cycles     # exact coverage
+        ivs = rec.intervals(core)
+        assert ivs[0][1] == 0 and ivs[-1][2] == res.cycles
+        for (s0, a0, b0), (s1, a1, b1) in zip(ivs, ivs[1:]):
+            assert b0 == a1 and s0 != s1           # contiguous RLE
+    # state totals agree with the sim's own accounting
+    for cp, stalls, idle in zip(mcp.cores, res.stall_cycles,
+                                res.barrier_idle):
+        assert totals[cp.core]["stall"] == stalls
+        assert totals[cp.core]["barrier"] == idle
+        assert totals[cp.core]["issue"] == len(cp.vprog.instrs)
+
+
+def test_timeline_matches_golden_cycles():
+    """The exported timeline's cycle span equals the committed golden
+    lockstep counts exactly (same learn config as tests/test_noc.py)."""
+    golden = json.loads(GOLDEN_PATH.read_text())
+    cfg = golden["learn"]
+    X = spn_datasets.load("nltcs", "train", cfg["rows"])
+    spn = learn.learn_spn(X, min_instances=cfg["min_instances"],
+                          seed=cfg["seed"])
+    prog = program.lower(spn)
+    for cores in (2, 4):
+        for topo in ("xbar", "mesh"):
+            want = golden["cycles"]["nltcs"][str(cores)][topo]
+            rec, res = timeline.record_multicore(_mcp(prog, cores, topo))
+            assert rec.cycles == want == res.cycles
+            assert all(sum(t.values()) == want
+                       for t in rec.core_totals().values())
+
+
+def test_timeline_chrome_events_have_per_core_tracks(nltcs_prog):
+    mcp = _mcp(nltcs_prog, 4, "mesh")
+    rec, res = timeline.record_multicore(mcp)
+    events = rec.to_chrome_events(pid=2)
+    names = {e["args"]["name"] for e in events
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {f"core {cp.core}" for cp in mcp.cores} <= names
+    cyc = [e for e in events if e.get("cat") == "cycles"]
+    assert cyc and all(e["pid"] == 2 for e in cyc)
+    # per-core X events sum to cycles per track
+    per_core: dict = {}
+    for e in cyc:
+        per_core[e["tid"]] = per_core.get(e["tid"], 0) + e["dur"]
+    assert all(v == res.cycles for v in per_core.values())
+    # comm markers + link occupancy present on a contended mesh run
+    if mcp.plan.rows:
+        assert any(e.get("cat") == "comm" for e in events)
+        assert any(e.get("cat") == "noc" for e in events)
+
+
+def test_timeline_recording_does_not_change_cycles(nltcs_prog):
+    """The recorder must be a pure observer: identical cycle counts and
+    root values with and without it."""
+    from repro.core.multicore.sim import simulate_multicore
+
+    mcp = _mcp(nltcs_prog, 4, "torus")
+    leaves = np.ones((3, nltcs_prog.m_ind), np.float32)
+    plain = simulate_multicore(mcp, leaves)
+    rec = timeline.TimelineRecorder()
+    observed = simulate_multicore(mcp, leaves, recorder=rec)
+    assert plain.cycles == observed.cycles == rec.cycles
+    assert np.array_equal(plain.root_values, observed.root_values)
+    assert plain.stall_cycles == observed.stall_cycles
