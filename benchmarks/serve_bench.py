@@ -25,6 +25,14 @@ speedup-vs-cores curve plus the communication/compute cycle ratio, per
 dataset. The default run records the 1/2/4-core points so the scaling
 trajectory accumulates in ``BENCH_serve.json`` alongside throughput.
 
+The run also measures a **``vliw-mc-tuned``** row — the same requests
+served through a second server whose ``vliw-mc`` substrate compiled the
+per-SPN autotuner's winning config (:mod:`repro.core.autotune`) — and
+records a suite-wide tuned-vs-default modeled cycles/eval sweep
+(``record["autotune"]``). Those cycle counts are deterministic, so the
+``--compare`` gate holds them exactly, and additionally fails if the
+tuner ever returns a config that loses to its own default trial.
+
 ``--topology {xbar,ring,mesh,torus}`` selects the NoC the served
 ``vliw-mc`` substrate models. Independently of it, every run records a
 **NoC topology sweep** (``record["noc"]``): per topology the calibrated
@@ -49,6 +57,7 @@ import time
 import numpy as np
 
 from repro.core import multicore
+from repro.core.autotune import tune_program
 from repro.core.processor import fastsim, sim
 from repro.core.processor.config import PTREE
 from repro.obs import metrics as obs_metrics
@@ -56,7 +65,7 @@ from repro.obs import trace as obs_trace
 from repro.queries import random_mask
 from repro.runtime import DEFAULT_SUBSTRATES, Server, verify_parity
 
-from .common import bench_spn, csv_row
+from .common import BENCH_SUITE, bench_spn, csv_row
 
 #: per-substrate throughput regression tolerance for ``--compare``
 REGRESSION_TOLERANCE = 0.25
@@ -67,6 +76,11 @@ OBS_OVERHEAD_BUDGET = 0.02
 #: numpy-canary bound: beyond this machine-speed scale the gate fails
 #: outright instead of normalizing (see :func:`compare_records`)
 MACHINE_SCALE_BOUND = 3.0
+#: autotune trials for the served ``vliw-mc-tuned`` row
+TUNED_BUDGET = 16
+#: autotune trials per dataset in the suite-wide tuned-vs-default sweep
+AUTOTUNE_SWEEP_BUDGET = 8
+AUTOTUNE_SWEEP_CORES = 4
 
 
 def _best_round_us(fn, rounds: int = 4, n_iter: int = 5,
@@ -151,7 +165,7 @@ def compare_records(new: dict, baseline: dict,
                 and baseline.get("pallas_interpret")
                 != new.get("pallas_interpret")):
             continue
-        if (name == "vliw-mc"
+        if (name in ("vliw-mc", "vliw-mc-tuned")
                 and baseline.get("mc_topology", "xbar")
                 != new.get("mc_topology", "xbar")):
             continue    # different NoC configs are incommensurable
@@ -187,6 +201,40 @@ def compare_records(new: dict, baseline: dict,
                     f"{cur_t['cycles']} modeled cycles vs baseline "
                     f"{old_t['cycles']} (deterministic counts are held "
                     f"exactly; update the baseline deliberately)")
+
+    # autotuned modeled cycles/eval are deterministic in (digest, budget,
+    # seed) — held exactly, like the NoC counts, when the search context
+    # matches; tuned must also never lose to its own default
+    old_at = baseline.get("autotune") or {}
+    new_at = new.get("autotune") or {}
+    if old_at and (old_at.get("budget") != new_at.get("budget")
+                   or old_at.get("max_cores") != new_at.get("max_cores")):
+        print("  WARNING: autotune gate skipped — search context changed "
+              f"vs baseline (budget {old_at.get('budget')} -> "
+              f"{new_at.get('budget')}, cores {old_at.get('max_cores')} "
+              f"-> {new_at.get('max_cores')}); regenerate the baseline")
+    else:
+        for ds, old_e in old_at.get("datasets", {}).items():
+            cur_e = new_at.get("datasets", {}).get(ds)
+            if cur_e is None:
+                print(f"  WARNING: autotune gate skipped for {ds!r} — "
+                      f"dataset missing from the new sweep")
+                continue
+            if (cur_e["tuned_cycles_per_eval"]
+                    > old_e["tuned_cycles_per_eval"]):
+                failures.append(
+                    f"autotune {ds}: {cur_e['tuned_cycles_per_eval']:g} "
+                    f"tuned cycles/eval vs baseline "
+                    f"{old_e['tuned_cycles_per_eval']:g} (deterministic "
+                    f"counts are held exactly)")
+    for ds, cur_e in new_at.get("datasets", {}).items():
+        if (cur_e["tuned_cycles_per_eval"]
+                > cur_e["default_cycles_per_eval"]):
+            failures.append(
+                f"autotune {ds}: tuned {cur_e['tuned_cycles_per_eval']:g} "
+                f"cycles/eval LOST to the default "
+                f"{cur_e['default_cycles_per_eval']:g} — the tuner must "
+                f"never pick a config worse than its own baseline trial")
     return failures
 
 
@@ -356,6 +404,13 @@ def main(dataset: str = "nltcs", batch: int = 256,
 
     spn, prog = bench_spn(dataset)
     server = Server(spn, topology=topology)
+    # the tuned row: same SPN, same request path, but the vliw-mc
+    # substrate compiles the autotuner's winning config instead of the
+    # defaults (see repro.core.autotune); its modeled cycles/eval land
+    # in record["autotune"] below next to the defaults'
+    tuned_server = Server(spn, topology=topology, substrates=("vliw-mc",),
+                          cores=AUTOTUNE_SWEEP_CORES,
+                          autotune=f"budget={TUNED_BUDGET}")
     Xq = random_mask(
         np.random.default_rng(0).integers(0, 2, (batch, prog.num_vars)),
         0.3, seed=0)
@@ -369,22 +424,24 @@ def main(dataset: str = "nltcs", batch: int = 256,
     # spread over a few seconds of wall time because throttle phases on
     # shared machines last whole seconds — back-to-back rounds would all
     # land in one phase and defeat the best-of aggregation.
-    best: dict[str, float] = {n: float("inf") for n in DEFAULT_SUBSTRATES}
-    samples: dict[str, list] = {n: [] for n in DEFAULT_SUBSTRATES}
-    for name in DEFAULT_SUBSTRATES:            # warmup / compile
-        server.query(Xq, "marginal", name)
+    targets: dict[str, tuple] = {n: (server, n) for n in DEFAULT_SUBSTRATES}
+    targets["vliw-mc-tuned"] = (tuned_server, "vliw-mc")
+    best: dict[str, float] = {n: float("inf") for n in targets}
+    samples: dict[str, list] = {n: [] for n in targets}
+    for srv, sub in targets.values():          # warmup / compile / tune
+        srv.query(Xq, "marginal", sub)
     for r in range(6):
         if r:
             time.sleep(0.4)
-        for name in DEFAULT_SUBSTRATES:
+        for name, (srv, sub) in targets.items():
             # one unmeasured call re-warms caches after the round-robin
             # switch, matching the back-to-back conditions the historical
             # baselines were recorded under
             us = _best_round_us(
-                lambda n=name: server.query(Xq, "marginal", n),
+                lambda s=srv, n=sub: s.query(Xq, "marginal", n),
                 rounds=1, n_iter=5, warmup=1, samples=samples[name])
             best[name] = min(best[name], us)
-    for name in DEFAULT_SUBSTRATES:
+    for name in targets:
         us = best[name]
         evals_s = batch / (us / 1e6)
         # request-latency percentiles over every measured iteration,
@@ -408,6 +465,10 @@ def main(dataset: str = "nltcs", batch: int = 256,
 
     devs = verify_parity(server, Xq[:32], query="marginal")
     record["parity_max_abs_dev"] = max(devs.values())
+    # the tuned artifact must agree with the oracle and its own checked
+    # sim (which clocks the tuned interleaved multicore machine) too
+    verify_parity(tuned_server, Xq[:32], query="marginal",
+                  substrates=("vliw-mc",))
     record["obs_overhead"] = obs_overhead_check(server, Xq)
     record["pallas_interpret"] = \
         server.artifact("marginal", "pallas").meta["interpret"]
@@ -431,6 +492,41 @@ def main(dataset: str = "nltcs", batch: int = 256,
     for ds in dict.fromkeys(noc_datasets or [dataset, "kdd"]):
         ds_prog = server.prog if ds == dataset else bench_spn(ds)[1]
         record["noc"][ds] = noc_sweep(ds, ds_prog, noc_cores, rows=rows)
+
+    # per-SPN autotuning, tuned vs default modeled cycles/eval on every
+    # suite dataset at the sweep core count — exact calibrated lockstep
+    # counts, deterministic and machine-free, so the --compare gate
+    # holds them exactly like the NoC sweep
+    tuned_meta = tuned_server.artifact("marginal", "vliw-mc").meta
+    record["autotune"] = {
+        "budget": AUTOTUNE_SWEEP_BUDGET,
+        "max_cores": AUTOTUNE_SWEEP_CORES,
+        "served": dict(tuned_meta["autotune"],
+                       interleave=tuned_meta["interleave"],
+                       budget=TUNED_BUDGET),
+        "datasets": {}}
+    for ds in dict.fromkeys([dataset] + list(BENCH_SUITE)):
+        ds_prog = prog if ds == dataset else bench_spn(ds)[1]
+        res = tune_program(ds_prog, PTREE,
+                           max_cores=AUTOTUNE_SWEEP_CORES,
+                           budget=AUTOTUNE_SWEEP_BUDGET)
+        entry = {
+            "config": res.config.fingerprint(),
+            "tuned_cycles": res.cycles,
+            "tuned_cycles_per_eval": res.cycles_per_eval,
+            "default_cycles_per_eval": res.default_cycles_per_eval,
+            "speedup": round(res.default_cycles_per_eval
+                             / res.cycles_per_eval, 3),
+        }
+        record["autotune"]["datasets"][ds] = entry
+        rows.append(csv_row(
+            f"autotune_{ds}_c{AUTOTUNE_SWEEP_CORES}",
+            entry["tuned_cycles_per_eval"],
+            f"default={entry['default_cycles_per_eval']:g}"))
+        print(f"  [{ds}] autotune@{AUTOTUNE_SWEEP_CORES}c: "
+              f"{entry['tuned_cycles_per_eval']:g} cycles/eval "
+              f"(default {entry['default_cycles_per_eval']:g}, "
+              f"{entry['speedup']:.2f}x, {entry['config']})")
 
     # fast-sim vs checked-sim: same artifact, same leaves, bit-identical
     art = server.artifact("marginal", "vliw-sim")

@@ -1,0 +1,19 @@
+"""Per-SPN compiler autotuning (§Perf: per-workload mapping).
+
+The compiler exposes a handful of tunables — partition strategy / seed /
+refinement passes / cone grain, fused-unit ``max_arity``, ETA-feedback
+rounds, effective core count, and cross-batch ``program.interleave(k)``
+— whose best values depend on each SPN's shape. :func:`tune_program`
+sweeps them with a budgeted random + greedy-refinement search scored by
+the bit-exact multicore fast-probe cycle count (value-independent, so
+one 1-row lockstep probe per candidate is the *exact* serving cost).
+
+The search is fully deterministic: same program digest + budget + seed
+⇒ identical :class:`TuneConfig` and fingerprint, so tuned artifacts are
+reproducible and cache-stable across processes.
+"""
+from .search import (DEFAULT_BUDGET, INFEASIBLE, TUNE_CACHE, TuneConfig,
+                     TuneResult, default_config, tune_program)
+
+__all__ = ["TuneConfig", "TuneResult", "tune_program", "default_config",
+           "DEFAULT_BUDGET", "INFEASIBLE", "TUNE_CACHE"]

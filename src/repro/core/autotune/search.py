@@ -1,0 +1,325 @@
+"""Budgeted search over the multicore compiler's tunables.
+
+Scoring: every candidate compiles with :func:`compile_multicore`, whose
+``meta["cycles"]`` already comes from the exact 1-row lockstep probe
+(cycle counts are value-independent), so the tuner's objective —
+**cycles per evaluation** = probe cycles / interleave factor — is the
+true steady-state serving cost, not an estimate. Scores are exact
+rationals (:class:`fractions.Fraction`), so comparisons and tie-breaks
+are platform-independent.
+
+Determinism contract (property-tested): ``tune_program`` is a pure
+function of (program digest, processor, interconnect, max_cores,
+placement, max_interleave, budget, seed). No wall-clock measurement
+enters the objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from fractions import Fraction
+
+import numpy as np
+
+from ...obs import metrics, trace
+from ..multicore.comm import XBAR, InterconnectConfig
+from ..processor.config import PTREE, ProcessorConfig
+from ..program import TensorProgram, interleave
+
+#: trials used by ``autotune="cached"`` when no cached entry exists yet
+DEFAULT_BUDGET = 32
+
+_STRATEGIES = ("subtree", "cone", "level")
+
+#: score for a config whose compile fails (scheduler live-lock on a
+#: pathological partition, machine too small for the interleaved
+#: program, ...). Infeasible points rank behind every feasible one and
+#: still consume budget — the search space legitimately contains them.
+INFEASIBLE = 1 << 62
+_SEEDS = tuple(range(8))
+_PASSES = (0, 1, 2, 3)
+_ETAS = (0, 1, 2, 3)
+_ARITIES = (None, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    """One point in the compiler's knob space (canonical form)."""
+    cores: int = 2
+    strategy: str = "subtree"
+    seed: int = 0
+    passes: int = 0
+    grain: int | None = None
+    max_arity: int | None = None
+    eta_iters: int = 2
+    interleave: int = 1
+
+    def fingerprint(self) -> str:
+        return (f"c{self.cores}/{self.strategy}/s{self.seed}"
+                f"/p{self.passes}/g{self.grain}/a{self.max_arity}"
+                f"/e{self.eta_iters}/i{self.interleave}")
+
+    def canonical(self, max_cores: int) -> "TuneConfig":
+        """Collapse knobs that cannot affect the compiled program.
+
+        ``grain`` only exists for the cone strategy; at ``cores=1`` the
+        partition is the identity, so every partition knob (and the
+        ETA-feedback loop, which needs comm rows) is inert — only the
+        interleave factor matters. Canonicalizing *before* dedup means
+        the budget never pays twice for one distinct compilation.
+        """
+        cores = max(1, min(int(self.cores), max_cores))
+        strategy, seed = self.strategy, int(self.seed)
+        passes, grain = int(self.passes), self.grain
+        max_arity, eta = self.max_arity, int(self.eta_iters)
+        if strategy != "cone":
+            grain = None
+        if cores == 1:
+            strategy, seed, passes = "subtree", 0, 0
+            grain, max_arity, eta = None, None, 0
+        return TuneConfig(cores=cores, strategy=strategy, seed=seed,
+                          passes=passes, grain=grain, max_arity=max_arity,
+                          eta_iters=eta, interleave=max(1, int(self.interleave)))
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """Outcome of one :func:`tune_program` run."""
+    config: TuneConfig
+    cycles: int                    # probe cycles of the winning program
+    cycles_per_eval: float         # cycles / interleave
+    default_config: TuneConfig
+    default_cycles: int            # probe cycles at the default config
+    default_cycles_per_eval: float
+    trials: list                   # [(fingerprint, cycles, cyc/eval), ...]
+    evaluated: int
+    budget: int
+    seed: int
+
+    @property
+    def improved(self) -> bool:
+        return (Fraction(self.cycles, self.config.interleave)
+                < Fraction(self.default_cycles,
+                           self.default_config.interleave))
+
+    def summary(self) -> dict:
+        return {"config": self.config.fingerprint(),
+                "cycles": self.cycles,
+                "cycles_per_eval": self.cycles_per_eval,
+                "default_cycles": self.default_cycles,
+                "default_cycles_per_eval": self.default_cycles_per_eval,
+                "evaluated": self.evaluated,
+                "budget": self.budget,
+                "seed": self.seed}
+
+
+def default_config(max_cores: int) -> TuneConfig:
+    """The untuned compiler defaults at the requested core count."""
+    return TuneConfig(cores=max_cores).canonical(max_cores)
+
+
+#: process-global memo: one tune per (SPN digest, search context).
+#: ``budget``/``seed`` are part of the key so the determinism contract
+#: holds across processes that tune with different budgets.
+TUNE_CACHE: dict[tuple, TuneResult] = {}
+
+
+def lookup_cached(digest: str) -> TuneResult | None:
+    """Any cached result for this SPN digest (``autotune="cached"``).
+
+    Deterministic pick: the smallest full cache key wins when several
+    search contexts tuned the same program.
+    """
+    hits = sorted(k for k in TUNE_CACHE if k[0] == digest)
+    return TUNE_CACHE[hits[0]] if hits else None
+
+
+def _grain_ladder(prog: TensorProgram) -> tuple:
+    """Cone-grain sweep values, scaled to the program's op count."""
+    n = max(1, prog.n_ops)
+    return (None,) + tuple(sorted({max(1, n // d)
+                                   for d in (6, 12, 24, 48, 96)}))
+
+
+def tune_program(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
+                 max_cores: int = 2, icfg: InterconnectConfig = XBAR,
+                 *, budget: int = DEFAULT_BUDGET, seed: int = 0,
+                 placement: str = "aware", max_interleave: int = 4,
+                 use_cache: bool = True,
+                 compile_kwargs: dict | None = None) -> TuneResult:
+    """Search the knob space for ``prog``; return the best config found.
+
+    ``budget`` bounds the number of *distinct canonical configurations*
+    compiled and probed (the default config always costs trial #1, so
+    ``budget=1`` measures the baseline and returns it). The search runs
+    three deterministic phases — seeded sweep, random sampling, greedy
+    single-knob refinement — and ties break toward smaller interleave,
+    then fewer cores, then the lexicographically smallest fingerprint.
+
+    Candidates whose compile raises (the knob space legitimately
+    contains infeasible points — e.g. a poor-locality partition that
+    live-locks the scheduler, or an interleaved program too large for
+    one core) score :data:`INFEASIBLE`, consume budget, and are
+    recorded in ``trials`` with ``cycles=None``; the search continues.
+    """
+    from ..multicore.compile import compile_multicore  # cycle avoidance
+
+    budget = max(1, int(budget))
+    key = (prog.digest(), cfg.name, icfg.fingerprint(), max_cores,
+           placement, max_interleave, budget, int(seed))
+    if use_cache and key in TUNE_CACHE:
+        return TUNE_CACHE[key]
+
+    ks = tuple(k for k in (1, 2, 4, 8) if k <= max(1, max_interleave))
+    grains = _grain_ladder(prog)
+    iprogs: dict[int, TensorProgram] = {1: prog}
+
+    def iprog(k: int) -> TensorProgram:
+        if k not in iprogs:
+            iprogs[k] = interleave(prog, k)
+        return iprogs[k]
+
+    scores: dict[TuneConfig, int] = {}
+    trials: list[tuple[str, int, float]] = []
+
+    def evaluate(tc: TuneConfig) -> int | None:
+        """Compile + probe one canonical config; None once over budget."""
+        if tc in scores:
+            return scores[tc]
+        if len(scores) >= budget:
+            return None
+        with trace.span("autotune.trial",
+                        lambda: {"config": tc.fingerprint()}) as sp:
+            try:
+                mcp = compile_multicore(
+                    iprog(tc.interleave), cfg, n_cores=tc.cores, icfg=icfg,
+                    seed=tc.seed, strategy=tc.strategy,
+                    eta_iters=tc.eta_iters, passes=tc.passes,
+                    placement=placement, grain=tc.grain,
+                    max_arity=tc.max_arity, **(compile_kwargs or {}))
+                cycles = int(mcp.meta["cycles"])
+            except RuntimeError as exc:
+                cycles = INFEASIBLE
+                sp.set("infeasible", str(exc)[:160])
+                metrics.counter("autotune.infeasible").inc()
+            sp.set("cycles", cycles)
+        scores[tc] = cycles
+        trials.append((tc.fingerprint(),
+                       None if cycles == INFEASIBLE else cycles,
+                       None if cycles == INFEASIBLE
+                       else cycles / tc.interleave))
+        metrics.counter("autotune.trials").inc()
+        return cycles
+
+    def rank(tc: TuneConfig) -> tuple:
+        return (Fraction(scores[tc], tc.interleave), tc.interleave,
+                tc.cores, tc.fingerprint())
+
+    with trace.span("compile.autotune",
+                    lambda: {"budget": budget, "seed": seed,
+                             "max_cores": max_cores,
+                             "digest": prog.digest()[:12]}) as span:
+        default = default_config(max_cores)
+        evaluate(default)
+
+        # phase 1 — seeded sweep, highest-leverage knobs first so even a
+        # tiny budget covers them: interleave at full cores (the paper's
+        # big cycles/eval lever), then the core-count fallback ladder
+        # (the "fewer cores win on small SPNs" regression), then the
+        # alternative partition strategies, then cross terms
+        seeded: list[TuneConfig] = []
+        for k in ks[1:]:
+            seeded.append(TuneConfig(cores=max_cores, interleave=k))
+        for c in range(max_cores - 1, 0, -1):
+            seeded.append(TuneConfig(cores=c))
+        for strat in _STRATEGIES[1:]:
+            seeded.append(TuneConfig(cores=max_cores, strategy=strat))
+        for c in range(max_cores - 1, 0, -1):
+            for k in ks[1:]:
+                seeded.append(TuneConfig(cores=c, interleave=k))
+        for tc in seeded:
+            evaluate(tc.canonical(max_cores))
+
+        # phase 2 — random sampling across the full product space
+        rng = np.random.default_rng(seed)
+        while len(scores) < budget:
+            n_before = len(scores)
+            tc = TuneConfig(
+                cores=int(rng.integers(1, max_cores + 1)),
+                strategy=_STRATEGIES[int(rng.integers(len(_STRATEGIES)))],
+                seed=int(rng.integers(len(_SEEDS))),
+                passes=int(_PASSES[int(rng.integers(len(_PASSES)))]),
+                grain=grains[int(rng.integers(len(grains)))],
+                max_arity=_ARITIES[int(rng.integers(len(_ARITIES)))],
+                eta_iters=int(_ETAS[int(rng.integers(len(_ETAS)))]),
+                interleave=int(ks[int(rng.integers(len(ks)))]),
+            ).canonical(max_cores)
+            evaluate(tc)
+            if len(scores) == n_before and len(scores) >= budget:
+                break   # duplicate draw at the budget edge
+
+        # phase 3 — greedy single-knob refinement (steepest descent)
+        def neighbors(tc: TuneConfig) -> list[TuneConfig]:
+            out = []
+            for c in (tc.cores - 1, tc.cores + 1):
+                if 1 <= c <= max_cores:
+                    out.append(dataclasses.replace(tc, cores=c))
+            for s in _STRATEGIES:
+                if s != tc.strategy:
+                    out.append(dataclasses.replace(tc, strategy=s))
+            for s in ((tc.seed + 1) % len(_SEEDS),
+                      (tc.seed + 3) % len(_SEEDS)):
+                out.append(dataclasses.replace(tc, seed=int(s)))
+            for p in (tc.passes - 1, tc.passes + 1):
+                if _PASSES[0] <= p <= _PASSES[-1]:
+                    out.append(dataclasses.replace(tc, passes=p))
+            gi = grains.index(tc.grain) if tc.grain in grains else 0
+            for g in (gi - 1, gi + 1):
+                if 0 <= g < len(grains):
+                    out.append(dataclasses.replace(tc, grain=grains[g]))
+            ai = _ARITIES.index(tc.max_arity)
+            for a in (ai - 1, ai + 1):
+                if 0 <= a < len(_ARITIES):
+                    out.append(dataclasses.replace(tc,
+                                                   max_arity=_ARITIES[a]))
+            for e in (tc.eta_iters - 1, tc.eta_iters + 1):
+                if _ETAS[0] <= e <= _ETAS[-1]:
+                    out.append(dataclasses.replace(tc, eta_iters=e))
+            ki = ks.index(tc.interleave)
+            for k in (ki - 1, ki + 1):
+                if 0 <= k < len(ks):
+                    out.append(dataclasses.replace(tc, interleave=ks[k]))
+            return [n.canonical(max_cores) for n in out]
+
+        best = min(scores, key=rank)
+        improving = True
+        while improving and len(scores) < budget:
+            improving = False
+            for n in neighbors(best):
+                if evaluate(n) is None:
+                    break
+            new_best = min(scores, key=rank)
+            if rank(new_best) < rank(best):
+                best, improving = new_best, True
+
+        best = min(scores, key=rank)
+        if scores[best] == INFEASIBLE:
+            raise RuntimeError(
+                "autotune: every candidate failed to compile "
+                f"(budget={budget}, digest={prog.digest()[:12]})")
+        span.set("trials", len(scores))
+        span.set("best_cycles", scores[best])
+        span.set("best_config", best.fingerprint())
+        metrics.gauge("autotune.best_cycles").set(scores[best])
+        metrics.gauge("autotune.best_cycles_per_eval").set(
+            scores[best] / best.interleave)
+
+    result = TuneResult(
+        config=best, cycles=scores[best],
+        cycles_per_eval=scores[best] / best.interleave,
+        default_config=default, default_cycles=scores[default],
+        default_cycles_per_eval=scores[default] / default.interleave,
+        trials=trials, evaluated=len(scores), budget=budget,
+        seed=int(seed))
+    if use_cache:
+        TUNE_CACHE[key] = result
+    return result

@@ -148,6 +148,10 @@ class VLIWProgram:
     const_rows: dict[int, list[float]]   # row -> 32 values
     root_loc: tuple[int, int]            # (row, bank) of the root in data memory
     n_useful_ops: int
+    # multi-root (interleaved) programs: (row, bank) per instance root, in
+    # instance order; None for ordinary single-root programs. root_loc
+    # always equals root_locs[0] when present.
+    root_locs: list[tuple[int, int]] | None = None
     stats: dict = dataclasses.field(default_factory=dict)
     # multi-core only: channel row id -> [(position, bank, reg), ...] —
     # the register cells the window snapshots when the row's SEND issues
@@ -209,6 +213,9 @@ class DenseProgram:
     # (single-core). Multi-core merged programs duplicate leaf cells per
     # core, so several cells may map to one leaf column.
     input_slots: np.ndarray | None = None
+    # multi-root (interleaved) programs: SSA id per instance root, in
+    # instance order; None for single-root. roots[0] == root when present.
+    roots: np.ndarray | None = None
 
     @property
     def n_ops(self) -> int:

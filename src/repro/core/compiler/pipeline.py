@@ -84,8 +84,14 @@ class _Scheduler:
         self.refcnt = np.array([len(cs) for cs in self.consumers], np.int64)
         self.root_op = prog.root_slot - m
         assert self.root_op >= 0
+        rs = getattr(prog, "root_slots", None)
+        self.root_slots = ([int(s) for s in rs] if rs is not None
+                           else [prog.root_slot])
+        assert all(s >= m for s in self.root_slots)
+        self.root_rows_used: set[int] = set()
         if store_root:
-            self.refcnt[prog.root_slot] += 1      # epilogue store
+            for s in self.root_slots:
+                self.refcnt[s] += 1      # epilogue store pins every root
         self.height = np.ones(n, np.int64)
         for j in range(n - 1, -1, -1):
             for s in (self.b[j], self.c[j]):
@@ -710,11 +716,16 @@ class _Scheduler:
         left fails loudly instead of silently clobbering a live one.
         """
         if self.mem_free_rows:
-            return self.mem_free_rows.pop()
+            row = self.mem_free_rows.pop()
+            self.root_rows_used.add(row)
+            return row
         for row in sorted(self.mem_row_slots):
             if row < self.n_in_rows:
                 continue   # leaf/constant image rows are never recycled
+            if row in self.root_rows_used:
+                continue   # already claimed by an earlier root store
             if all(self.refcnt[s] <= 0 for s in self.mem_row_slots[row]):
+                self.root_rows_used.add(row)
                 return row
         raise RuntimeError(
             "no data-memory row available for the root store: "
@@ -853,19 +864,30 @@ class _Scheduler:
             if (not issued_now and mem_instr is None and comm_instr is None
                     and not copies_done):
                 self.stats["stall_cycles"] += 1
-                if self.comm and any(self.state[s] == _PENDING
-                                     and self.ready_cycle[s] > t
-                                     for s in self.recv_level):
-                    # an ETA-scheduled remote row is still on its way —
-                    # this idle cycle is the schedule working as designed,
-                    # not a deadlock (max_cycles still bounds the wait)
+                if (self.comm and any(self.state[s] == _PENDING
+                                      and self.ready_cycle[s] > t
+                                      for s in self.recv_level)) \
+                        or (self.ready_heap
+                            and self.ready_heap[0][0] > t):
+                    # an ETA-scheduled remote row is still on its way, or
+                    # an op is parked in the ready heap for a known future
+                    # cycle (its recv row may have been evicted meanwhile;
+                    # the pop re-requests it) — this idle cycle is the
+                    # schedule working as designed, not a deadlock
+                    # (max_cycles still bounds the wait)
                     stalled = 0
                 else:
                     stalled += 1
                 if stalled > 256 + cfg.tree_levels:
+                    stuck = [(i, [(s, int(self.state[s]),
+                                   int(self.refcnt[s]), self.mat(s))
+                                  for s in (int(self.b[i]), int(self.c[i]))])
+                             for i in range(self.n)
+                             if not self.issued[i]][:4]
                     raise RuntimeError(
                         f"deadlock at cycle {t}: {self.remaining} ops left, "
-                        f"active={len(self.active)} wants={len(self.want_rows)}")
+                        f"active={len(self.active)} wants={len(self.want_rows)}"
+                        f"; stuck (op, [(slot, state, refcnt, mat)]): {stuck}")
             elif not issued_now:
                 # copies/loads alone are progress only for a bounded while —
                 # a machine too small to ever issue must fail loudly, not spin
@@ -885,9 +907,8 @@ class _Scheduler:
         # worker's outputs are its SENDs, so waiting for a pseudo-root
         # commit and storing it would be pure fixed overhead on streams
         # a quarter the single-core length
-        root_slot = prog.root_slot
-        t_end = (int(self.ready_cycle[root_slot]) if self.store_root
-                 else self.last_commit)
+        t_end = (max(int(self.ready_cycle[s]) for s in self.root_slots)
+                 if self.store_root else self.last_commit)
 
         def unsent() -> bool:
             return any(self.unsent_level_count.values())
@@ -897,14 +918,27 @@ class _Scheduler:
             self.instrs.append(isa.VLIWInstr(trees=[None] * cfg.num_trees,
                                              comm=ci))
             self.t += 1
+        root_locs: list[tuple[int, int]] | None = None
         if self.store_root:
-            root_bank, root_reg = self.reg_of[root_slot]
-            out_row = self._alloc_root_row()
-            self.instrs.append(isa.VLIWInstr(
-                trees=[None] * cfg.num_trees,
-                mem=isa.MemInstr("store", out_row, root_reg)))
-            self.stats["stores"] += 1
-            self.t += 1
+            # one store dumps ONE register index across ALL banks into a
+            # memory row, so roots sharing a register index (multi-root
+            # interleaved programs land instance roots in distinct banks)
+            # share a single store cycle
+            row_of_reg: dict[int, int] = {}
+            locs: list[tuple[int, int]] = []
+            for s in self.root_slots:
+                bank, reg = self.reg_of[s]
+                if reg not in row_of_reg:
+                    row_of_reg[reg] = self._alloc_root_row()
+                    self.instrs.append(isa.VLIWInstr(
+                        trees=[None] * cfg.num_trees,
+                        mem=isa.MemInstr("store", row_of_reg[reg], reg)))
+                    self.stats["stores"] += 1
+                    self.t += 1
+                locs.append((row_of_reg[reg], bank))
+            out_row, root_bank = locs[0]
+            if len(locs) > 1:
+                root_locs = locs
         else:
             out_row, root_bank = -1, -1
             while self.t <= self.last_commit:    # drain pipelined commits
@@ -927,6 +961,7 @@ class _Scheduler:
             const_rows={r: self.images[r].tolist()
                         for r in range(self.n_in_rows)},
             root_loc=(out_row, root_bank),
+            root_locs=root_locs,
             n_useful_ops=self.n,
             stats=dict(self.stats),
             send_specs=self.send_specs)

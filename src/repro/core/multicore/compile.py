@@ -138,8 +138,19 @@ def build_core_programs(prog: TensorProgram, part: Partition,
                         if par_list else np.zeros(0, np.float64))
 
         local_op_of_gid = {int(g): i for i, g in enumerate(gid_perm)}
+        root_slots_loc = None
         if root_gid in gid_set:
             root_slot = m_loc + local_op_of_gid[root_gid]
+            if prog.root_slots is not None:
+                # multi-root (interleaved): the partitioner pins every
+                # instance root onto the root core — carry them all over
+                # in instance order so the epilogue stores each one
+                root_gids = [int(s) - m for s in prog.root_slots]
+                assert all(g in gid_set for g in root_gids), \
+                    "interleaved instance roots split across cores"
+                root_slots_loc = np.asarray(
+                    [m_loc + local_op_of_gid[g] for g in root_gids],
+                    np.int64)
         else:
             root_slot = m_loc + len(gids) - 1     # highest-level local op
 
@@ -149,7 +160,7 @@ def build_core_programs(prog: TensorProgram, part: Partition,
             opcode=opcode.astype(np.uint8), b=new_b, c=new_c,
             level_offsets=offsets, root_slot=int(root_slot),
             ind_var=ind_var, ind_value=ind_value,
-            sum_weight_groups=[])
+            sum_weight_groups=[], root_slots=root_slots_loc)
         sub.validate()
 
         recv_slots = {n_ind + i: plan.value_pos[(g, k)]
@@ -175,6 +186,8 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
                       *, seed: int = 0, strategy: str = "subtree",
                       eta_iters: int = 2, passes: int = 0,
                       placement: str = "aware",
+                      grain: int | None = None,
+                      max_arity: int | None = None,
                       **compile_kwargs) -> MultiCoreProgram:
     """Partition, build and VLIW-compile ``prog`` for ``n_cores`` cores.
 
@@ -190,7 +203,9 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
     ``placement="aware"`` (default) lets the partitioner permute core
     labels on physical topologies so chatty core pairs land adjacent
     (see :func:`~repro.core.multicore.partition.place_cores`);
-    ``"naive"`` keeps the flat partition for comparison.
+    ``"naive"`` keeps the flat partition for comparison. ``grain`` and
+    ``max_arity`` forward to :func:`partition_ops` — autotuner knobs for
+    cone-crown size and fused-unit granularity.
     """
     from ...obs import trace
     from .sim import simulate_multicore   # local import: cycle avoidance
@@ -200,7 +215,8 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
                              "topology": icfg.topology,
                              "placement": placement, "n_ops": prog.n_ops}):
         part = partition_ops(prog, n_cores, seed=seed, strategy=strategy,
-                             passes=passes, icfg=icfg, placement=placement)
+                             passes=passes, icfg=icfg, placement=placement,
+                             grain=grain, max_arity=max_arity)
     with trace.span("compile.core_programs",
                     lambda: {"cut_values": part.cut_values,
                              "hop_cut": part.hop_cut}):
@@ -249,6 +265,8 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
         "cut_values": part.cut_values,
         "hop_cut": part.hop_cut,
         "strategy": part.strategy,
+        "grain": grain,
+        "max_arity": max_arity,
         "topology": icfg.topology,
         "interconnect": icfg.fingerprint(),
         "placement": placement,

@@ -80,6 +80,9 @@ def decode_multicore(mcp: MultiCoreProgram,
         slot_parts.append(mcp.cores[k].leaf_map)
 
     root = shift(mcp.root_core, reps[mcp.root_core].root)
+    root_rep = reps[mcp.root_core]
+    roots = ([shift(mcp.root_core, r) for r in root_rep.roots]
+             if root_rep.roots is not None else None)
     if cycles is None:
         cycles = max(len(cp.vprog.instrs) for cp in mcp.cores)
 
@@ -117,6 +120,9 @@ def decode_multicore(mcp: MultiCoreProgram,
     o, a, b = o[perm], remap(a[perm]), remap(b[perm])
     if root >= n_init:
         root = int(n_init + new_idx[root - n_init])
+    if roots is not None:
+        roots = [int(n_init + new_idx[r - n_init]) if r >= n_init else r
+                 for r in roots]
 
     return densify(
         o, a, b, n_init,
@@ -124,4 +130,5 @@ def decode_multicore(mcp: MultiCoreProgram,
         np.concatenate(cell_parts).astype(np.int32),
         root, int(cycles), sum(r.n_useful_ops for r in reps),
         input_slots=np.concatenate(slot_parts).astype(np.int32)
-        if slot_parts else None)
+        if slot_parts else None,
+        roots=roots)

@@ -81,16 +81,18 @@ class Partition:
     topology: str = "xbar"        # topology the placement was tuned for
     hop_cut: int = 0              # Σ hops(src,dst) over cut pairs
     core_placement: list | None = None   # applied label permutation
+    grain: int | None = None      # cone streaming-unit weight (None = auto)
+    max_arity: int | None = None  # fused-node arity cap (None = unlimited)
 
     @property
     def used_cores(self) -> np.ndarray:
         return np.unique(self.core_of_node)
 
 
-def _fused_graph(prog: TensorProgram):
+def _fused_graph(prog: TensorProgram, max_arity: int | None = None):
     """Fused nodes, their levels/weights and the fused dependence edges."""
     m = prog.m
-    info = segments.fusion_info(prog)
+    info = segments.fusion_info(prog, max_arity)
     roots = sorted(info.leaves)             # ascending = topological
     node_of_root = {r: j for j, r in enumerate(roots)}
     weight = np.bincount(
@@ -210,13 +212,24 @@ def place_cores(traffic: np.ndarray, icfg, n_cores: int) -> np.ndarray:
 
 def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
                   passes: int = 2, strategy: str = "subtree",
-                  icfg=None, placement: str = "aware") -> Partition:
+                  icfg=None, placement: str = "aware",
+                  grain: int | None = None,
+                  max_arity: int | None = None) -> Partition:
     """Partition ``prog`` onto ``n_cores`` cores (see module doc).
 
     ``icfg`` (an :class:`~repro.core.multicore.comm.InterconnectConfig`)
     plus ``placement="aware"`` enables topology-aware core placement and
     hop-weighted move refinement on physical NoCs; ``placement="naive"``
     (or ``icfg=None`` / the ideal ``xbar``) keeps the flat partition.
+
+    Autotuning knobs (defaults reproduce the historical behaviour
+    exactly — the golden cycle fixtures pin this):
+
+    - ``grain`` — the ``cone`` strategy's streaming-unit weight bound;
+      ``None`` keeps the auto formula ``max(1, total_w // (3 * n_cores))``.
+    - ``max_arity`` — cap on fused-node operand count (placement
+      granularity); ``None`` keeps maximal fusion. See
+      :func:`repro.core.segments.fusion_info`.
     """
     if n_cores < 1:
         raise ValueError(f"n_cores must be >= 1, got {n_cores}")
@@ -225,7 +238,7 @@ def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
     if placement not in ("aware", "naive"):
         raise ValueError(f"unknown placement {placement!r}")
     info, roots, node_of_root, weight, level, in_nodes, out_nodes = \
-        _fused_graph(prog)
+        _fused_graph(prog, max_arity)
     n_nodes = len(roots)
     core_of_node = np.zeros(n_nodes, np.int32)
     placement_perm: list | None = None
@@ -284,8 +297,9 @@ def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
             for j in range(n_nodes):                # children before parents
                 if spar[j] >= 0:
                     subw[spar[j]] += subw[j]
-            grain = max(1, total_w // (3 * n_cores))
-            crown = subw > grain
+            eff_grain = (max(1, total_w // (3 * n_cores))
+                         if grain is None else max(1, int(grain)))
+            crown = subw > eff_grain
             cone_core = n_cores - 1
             core_of_node[crown] = cone_core
             unit = np.full(n_nodes, -1, np.int64)
@@ -401,6 +415,24 @@ def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
                 # partition shape, only where each part physically sits)
                 refine(icfg.hop_matrix(n_cores), passes)
 
+        # ---- multi-root (interleaved) programs: co-locate the roots ----
+        # Every instance's root must end on ONE core — the root core is
+        # the only core that stores result rows, and the merged decoder /
+        # lockstep sim read all k roots from it. The k root cones are
+        # also exactly the narrow serial tails interleaving exists to
+        # overlap, so sharing a core is the profitable placement anyway.
+        # Majority vote keeps most nodes where the partitioner put them
+        # (ties break toward the highest core, the cone crown convention).
+        if prog.root_slots is not None and len(prog.root_slots) > 1:
+            root_nodes = {node_of_root[int(info.root_of[int(s) - prog.m])]
+                          for s in prog.root_slots}
+            votes = np.zeros(n_cores, np.int64)
+            for j in root_nodes:
+                votes[int(core_of_node[j])] += 1
+            target = int(np.flatnonzero(votes == votes.max())[-1])
+            for j in root_nodes:
+                core_of_node[j] = target
+
     core_of_op = np.asarray(
         [core_of_node[node_of_root[int(info.root_of[i])]]
          for i in range(prog.n_ops)], np.int32)
@@ -421,7 +453,8 @@ def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
         loads=loads, cut_values=cut,
         seed=seed, strategy=strategy,
         topology=icfg.topology if icfg is not None else "xbar",
-        hop_cut=hop_cut, core_placement=placement_perm)
+        hop_cut=hop_cut, core_placement=placement_perm,
+        grain=grain, max_arity=max_arity)
     validate_partition(prog, part)
     return part
 
@@ -436,7 +469,7 @@ def validate_partition(prog: TensorProgram, part: Partition) -> None:
     m = prog.m
     assert part.core_of_op.shape == (prog.n_ops,)
     assert ((part.core_of_op >= 0) & (part.core_of_op < part.n_cores)).all()
-    info = segments.fusion_info(prog)
+    info = segments.fusion_info(prog, part.max_arity)
     # fused-node integrity: every binary op lives with its fused root
     for i in range(prog.n_ops):
         r = int(info.root_of[i])
@@ -448,3 +481,7 @@ def validate_partition(prog: TensorProgram, part: Partition) -> None:
             if s >= m and part.core_of_op[s - m] != part.core_of_op[i]:
                 assert part.op_level[s - m] < part.op_level[i]
     assert int(part.loads.sum()) == prog.n_ops
+    # multi-root (interleaved) programs: every instance root on ONE core
+    if prog.root_slots is not None and len(prog.root_slots) > 1:
+        owners = {int(part.core_of_op[int(s) - m]) for s in prog.root_slots}
+        assert len(owners) == 1, "interleaved instance roots split across cores"

@@ -37,7 +37,7 @@ _MAX_GLOBAL_CYCLES = 8_000_000
 
 @dataclasses.dataclass
 class MCSimResult:
-    root_values: np.ndarray      # (batch,)
+    root_values: np.ndarray      # (batch,) — (k, batch) when interleaved
     cycles: int                  # global cycles to the last core's finish
     useful_ops: int
     ops_per_cycle: float

@@ -58,6 +58,9 @@ class Replay:
     exports: dict                            # (row_id, pos) -> SSA id
     cycles: int
     n_useful_ops: int
+    # multi-root (interleaved) programs: SSA id per instance root, in
+    # instance order; None for single-root. roots[0] == root when present.
+    roots: list[int] | None = None
 
     @property
     def n_init(self) -> int:
@@ -191,12 +194,20 @@ def symbolic_replay(vprog: isa.VLIWProgram, cfg: ProcessorConfig,
         raise SimError(f"program ended with pending commits: "
                        f"{sorted(pending)}")
     root_row, root_bank = vprog.root_loc
+    roots: list[int] | None = None
     if root_row < 0:          # storeless worker core: outputs are SENDs
         root = -1
     else:
         root = mem_sym.get((root_row, root_bank))
         if root is None:
             raise SimError("root row never stored")
+        if vprog.root_locs is not None:   # multi-root (interleaved) program
+            roots = []
+            for row, bank in vprog.root_locs:
+                v = mem_sym.get((row, bank))
+                if v is None:
+                    raise SimError(f"root row {row} never stored")
+                roots.append(int(v))
 
     return Replay(init_values=np.asarray(init_vals, np.float32),
                   input_cells=input_cells,
@@ -205,13 +216,16 @@ def symbolic_replay(vprog: isa.VLIWProgram, cfg: ProcessorConfig,
                   b=np.asarray(ops_b, np.int32),
                   root=int(root), imports=imports, exports=exports,
                   cycles=len(vprog.instrs),
-                  n_useful_ops=vprog.n_useful_ops)
+                  n_useful_ops=vprog.n_useful_ops,
+                  roots=roots)
 
 
 def densify(o: np.ndarray, a: np.ndarray, b: np.ndarray, n_init: int,
             init_values: np.ndarray, input_cells: np.ndarray,
             root: int, cycles: int, n_useful_ops: int,
-            input_slots: np.ndarray | None = None) -> isa.DenseProgram:
+            input_slots: np.ndarray | None = None,
+            roots: list[int] | np.ndarray | None = None
+            ) -> isa.DenseProgram:
     """Level-sort an SSA op graph and cut it into ufunc segments.
 
     ``a``/``b`` must be fully resolved (no negative import ids).
@@ -248,6 +262,10 @@ def densify(o: np.ndarray, a: np.ndarray, b: np.ndarray, n_init: int,
         segments.append((lo, hi, int(new_o[lo]), ab))
     if root >= n_init:
         root = int(n_init + new_slot_of_old[root - n_init])
+    if roots is not None:
+        roots = np.asarray(
+            [int(n_init + new_slot_of_old[r - n_init]) if r >= n_init
+             else int(r) for r in roots], np.int64)
     return isa.DenseProgram(
         n_init=n_init,
         init_values=np.asarray(init_values, np.float32),
@@ -257,7 +275,8 @@ def densify(o: np.ndarray, a: np.ndarray, b: np.ndarray, n_init: int,
         root=int(root),
         cycles=cycles,
         n_useful_ops=n_useful_ops,
-        input_slots=input_slots)
+        input_slots=input_slots,
+        roots=roots)
 
 
 def decode(vprog: isa.VLIWProgram, cfg: ProcessorConfig) -> isa.DenseProgram:
@@ -266,7 +285,8 @@ def decode(vprog: isa.VLIWProgram, cfg: ProcessorConfig) -> isa.DenseProgram:
     assert not r.imports and not r.exports, \
         "multi-core streams decode via repro.core.multicore.fastsim"
     return densify(r.opcode, r.a, r.b, r.n_init, r.init_values,
-                   r.input_cells, r.root, r.cycles, r.n_useful_ops)
+                   r.input_cells, r.root, r.cycles, r.n_useful_ops,
+                   roots=r.roots)
 
 
 def run(dense: isa.DenseProgram, leaf_ind: np.ndarray,
@@ -274,11 +294,13 @@ def run(dense: isa.DenseProgram, leaf_ind: np.ndarray,
     """Execute the dense encoding for a batch of leaf inputs.
 
     ``leaf_ind``: (batch, m_ind) indicator values → (batch,) f32 root
-    values, bit-identical to the checked simulator's. Pass a ``workspace``
-    dict (owned by the caller, e.g. the vliw-sim artifact) to reuse the
-    value buffer across calls of the same batch size — op outputs live in
-    rows ``>= n_init`` and every input cell is overwritten per call, so
-    reuse never leaks state between requests.
+    values, bit-identical to the checked simulator's. Multi-root
+    (interleaved) programs return ``(k, batch)`` instead — one row per
+    instance root, in instance order. Pass a ``workspace`` dict (owned by
+    the caller, e.g. the vliw-sim artifact) to reuse the value buffer
+    across calls of the same batch size — op outputs live in rows
+    ``>= n_init`` and every input cell is overwritten per call, so reuse
+    never leaks state between requests.
     """
     leaf_ind = np.atleast_2d(np.asarray(leaf_ind, np.float32))
     batch = leaf_ind.shape[0]
@@ -308,6 +330,8 @@ def run(dense: isa.DenseProgram, leaf_ind: np.ndarray,
             np.maximum(va, vb, out=out)
         else:
             np.add(va, vb, out=out)
+    if dense.roots is not None:
+        return V[dense.roots].copy()      # (k, batch), instance order
     return V[dense.root].copy()
 
 

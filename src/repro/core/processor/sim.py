@@ -313,6 +313,15 @@ class CoreSim:
         return True
 
     def root_values(self) -> np.ndarray:
+        """Root memory cell(s): (batch,) — or (k, batch) for multi-root
+        (interleaved) programs, one row per instance root."""
+        if self.vprog.root_locs is not None:
+            rows = []
+            for row, bank in self.vprog.root_locs:
+                if row not in self.mem:
+                    raise SimError(f"root row {row} never stored")
+                rows.append(self.mem[row][bank])
+            return np.stack(rows)
         root_row, root_bank = self.vprog.root_loc
         if root_row not in self.mem:
             raise SimError("root row never stored")

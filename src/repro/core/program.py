@@ -51,6 +51,10 @@ class TensorProgram:
     # param indices (into param_values) of each weighted sum node's weights —
     # the unit of normalization for EM / softmax-SGD learning.
     sum_weight_groups: list[np.ndarray] = dataclasses.field(default_factory=list)
+    # multi-root programs (cross-batch interleave): slot of EVERY instance's
+    # root, instance order. None for ordinary single-root programs;
+    # ``root_slot`` always equals ``root_slots[0]`` when present.
+    root_slots: np.ndarray | None = None
 
     @property
     def op_is_prod(self) -> np.ndarray:
@@ -106,6 +110,10 @@ class TensorProgram:
             h.update(a.tobytes())
         for g in self.sum_weight_groups:
             h.update(np.ascontiguousarray(np.asarray(g, np.int32)).tobytes())
+        if self.root_slots is not None:   # multi-root (interleaved) programs
+            h.update(b"roots")
+            h.update(np.ascontiguousarray(
+                np.asarray(self.root_slots, np.int64)).tobytes())
         self._digest = h.hexdigest()
         return self._digest
 
@@ -139,6 +147,9 @@ class TensorProgram:
         # level-contiguity: operands of level ℓ come from levels < ℓ
         for lo, hi in zip(self.level_offsets[:-1], self.level_offsets[1:]):
             assert (self.b[lo:hi] < m + lo).all() and (self.c[lo:hi] < m + lo).all()
+        if self.root_slots is not None:
+            assert int(self.root_slots[0]) == self.root_slot
+            assert all(m <= int(s) < self.num_slots for s in self.root_slots)
 
 
 def interleave(prog: TensorProgram, k: int) -> TensorProgram:
@@ -152,6 +163,14 @@ def interleave(prog: TensorProgram, k: int) -> TensorProgram:
     shared — multiplies the per-level independent work by K so the
     scheduler fills the bubbles. Throughput is ``useful_ops / cycles``
     across all K instances.
+
+    The result is a *multi-root* program: ``root_slots[j]`` is instance
+    ``j``'s root (``root_slot`` stays instance 0's root for consumers
+    that only know single-root programs). The VLIW compiler stores every
+    root and the fast/checked sims return a ``(k, batch)`` root block,
+    which the vliw-mc substrate de-interleaves back into request order —
+    that is what makes interleave a *serving* knob, not just a
+    throughput-accounting trick.
     """
     m_ind, m_par, n = prog.m_ind, prog.m_param, prog.n_ops
     m_new = k * m_ind + m_par
@@ -185,6 +204,9 @@ def interleave(prog: TensorProgram, k: int) -> TensorProgram:
         ind_var=np.tile(prog.ind_var, k),
         ind_value=np.tile(prog.ind_value, k),
         sum_weight_groups=list(prog.sum_weight_groups),
+        root_slots=np.asarray(
+            [m_new + (prog.root_slot - prog.m) * k + inst
+             for inst in range(k)], np.int64),
     )
     out.validate()
     return out

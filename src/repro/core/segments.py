@@ -123,7 +123,8 @@ class FusionInfo:
         return len(self.leaves[r])
 
 
-def fusion_info(prog: TensorProgram) -> FusionInfo:
+def fusion_info(prog: TensorProgram,
+                max_arity: int | None = None) -> FusionInfo:
     """Detect maximal fusable reduction trees of ``prog``.
 
     An op joins its consumer's chain when they share an opcode and the
@@ -135,13 +136,29 @@ def fusion_info(prog: TensorProgram) -> FusionInfo:
     bit-identical to the binary program; the glue ops above them (e.g.
     where a sum-of-sums chain merged two original SPN nodes) become
     small fused nodes over the sub-results.
+
+    ``max_arity`` (autotuning knob) caps a fused node's operand count:
+    wider trees split into their child subtrees recursively. Splitting
+    is always bit-exact (the subtrees of a balanced tree pair the same
+    operands), it only changes the *granularity* — the multicore
+    partitioner places fused nodes whole, so a cap lets it cut inside
+    what would otherwise be an unsplittable wide reduction.
     """
     # memoized on the program instance (not a module-level cache) so the
     # analysis dies with its program — a long-lived server churning many
-    # SPNs must not pin every one it ever saw
-    cached = getattr(prog, "_fusion_info", None)
-    if cached is not None:
-        return cached
+    # SPNs must not pin every one it ever saw; capped variants live in a
+    # small per-program dict keyed by the cap
+    if max_arity is None:
+        cached = getattr(prog, "_fusion_info", None)
+        if cached is not None:
+            return cached
+    else:
+        max_arity = int(max_arity)
+        if max_arity < 2:
+            raise ValueError(f"max_arity must be >= 2, got {max_arity}")
+        cached = getattr(prog, "_fusion_info_capped", {}).get(max_arity)
+        if cached is not None:
+            return cached
     m, n = prog.m, prog.n_ops
     b, c, opcode = prog.b, prog.c, prog.opcode
     refcnt = np.zeros(m + n, np.int64)
@@ -151,6 +168,9 @@ def fusion_info(prog: TensorProgram) -> FusionInfo:
             refcnt[s] += 1
             consumer[s] = i
     refcnt[prog.root_slot] += 1   # the epilogue read pins the root op
+    if prog.root_slots is not None:
+        for s in prog.root_slots:   # multi-root: every root is pinned
+            refcnt[int(s)] += 1
 
     parent = np.full(n, -1, np.int64)
     chain_root = np.arange(n, dtype=np.int64)
@@ -187,7 +207,8 @@ def fusion_info(prog: TensorProgram) -> FusionInfo:
             lv: list[int] = []
             interior: list[int] = []
             tree = in_order(op, lv, interior)
-            if tree == _balanced_shape(len(lv)):
+            if (max_arity is None or len(lv) <= max_arity) \
+                    and tree == _balanced_shape(len(lv)):
                 leaves[op] = lv
                 for j in interior:
                     root_of[j] = op
@@ -205,7 +226,12 @@ def fusion_info(prog: TensorProgram) -> FusionInfo:
 
         build(r)
     info = FusionInfo(root_of=root_of, parent=parent, leaves=leaves)
-    prog._fusion_info = info
+    if max_arity is None:
+        prog._fusion_info = info
+    else:
+        if not hasattr(prog, "_fusion_info_capped"):
+            prog._fusion_info_capped = {}
+        prog._fusion_info_capped[max_arity] = info
     return info
 
 

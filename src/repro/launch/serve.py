@@ -63,6 +63,7 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
               interpret: bool | None = None,
               cores: int = 2, topology: str = "xbar",
               link_width: int = 32,
+              autotune: str | None = None,
               trace_path: str | None = None,
               metrics_dump: bool = False) -> dict:
     from .. import obs
@@ -84,7 +85,8 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
     spn = learn.learn_spn(X, min_instances=64)
     server = Server(spn, interpret=interpret, cores=cores,
                     interconnect=named_interconnect(topology,
-                                                    link_width=link_width))
+                                                    link_width=link_width),
+                    autotune=autotune)
     names = SPN_SUBSTRATES if substrate in ("all", None) else (substrate,)
     print(f"SPN[{dataset}] query={query}: {server.prog.n_ops} ops, "
           f"{server.prog.num_levels} levels; substrates: {', '.join(names)}")
@@ -135,6 +137,15 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
                      f"{mc['topology']}, "
                      f"{meta['cycles']} cycles/eval-batch, "
                      f"{mc['comm']['values']} values crossed]")
+            if "autotune" in meta:
+                tune = meta["autotune"]
+                out["processor_mc"]["autotune"] = tune
+                out["processor_mc"]["cycles_per_eval"] = \
+                    meta["cycles_per_eval"]
+                extra += (f"\n  {'':18s} autotuned {tune['config']}: "
+                          f"{meta['cycles_per_eval']:g} cycles/eval "
+                          f"(default {tune['default_cycles_per_eval']:g}, "
+                          f"{tune['evaluated']} trials)")
         elif name == "pallas":
             meta = server.artifact(query, name).meta
             out["pallas_interpret"] = meta["interpret"]
@@ -178,6 +189,19 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
               f"barrier_idle={mc['barrier_idle_cycles']}, "
               f"link_stalls={mc['link_stall_cycles']}, "
               f"busiest_link={mc['busiest_link_occupancy']}")
+    for key, tu in out["runtime_stats"].get("autotune", {}).items():
+        if "config" in tu:
+            print(f"  autotune[{key}]: {tu['config']} "
+                  f"({tu['cycles_per_eval']:g} cycles/eval, default "
+                  f"{tu['default_cycles_per_eval']:g}, "
+                  f"{tu['evaluated']}/{tu['budget']} trials)")
+        elif tu.get("core_decision", {}).get("reason") \
+                == "single-core-fallback":
+            d = tu["core_decision"]
+            print(f"  autotune[{key}]: single-core fallback "
+                  f"({d['single_core_cycles']} < "
+                  f"{d['multicore_cycles']} cycles at "
+                  f"{d['requested']} cores)")
 
     if tracer is not None:
         extra: list = []
@@ -274,6 +298,13 @@ def main() -> None:
                          "per-link contention + topology-aware placement")
     ap.add_argument("--link-width", type=int, default=32,
                     help="values serialized per cycle per NoC link")
+    ap.add_argument("--autotune", default="off", metavar="MODE",
+                    help="per-SPN compiler autotuning for vliw-mc: 'off' "
+                         "(default), 'cached' (reuse any in-process tune "
+                         "for this SPN, else tune once at the default "
+                         "budget), or 'budget=N' (fast-sim-guided search "
+                         "over partition/schedule/interleave knobs, N "
+                         "compile+probe trials)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record a Chrome trace_event file of the run: "
                          "wall-clock request/compile/execute spans plus "
@@ -297,6 +328,8 @@ def main() -> None:
                              "off": False}[args.interpret],
                   cores=args.cores, topology=args.topology,
                   link_width=args.link_width,
+                  autotune=(None if args.autotune == "off"
+                            else args.autotune),
                   trace_path=args.trace, metrics_dump=args.metrics_dump)
     else:
         serve_lm(args.arch, min(args.batch, 8), args.prompt_len,

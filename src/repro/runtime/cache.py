@@ -9,6 +9,11 @@ into a fresh object hits. The key also carries the substrate's
 recompiling the same program under a different substrate configuration
 (``vliw-mc`` core count, Pallas interpret mode, processor geometry) is a
 *different* artifact and must miss instead of returning a stale one.
+Autotuning rides the same mechanism: the ``vliw-mc`` fingerprint grows a
+``/tune=<mode>:<seed>`` suffix when autotuning is on, and because the
+search itself is deterministic in (program digest, budget, seed) that
+suffix content-addresses the winning :class:`TuneConfig` too — untuned
+fingerprints are unchanged, so existing cache keys stay valid.
 Capacity-bounded LRU with hit/miss/eviction counters (`stats()`), shared
 by the query engine, the server and the benchmarks.
 """

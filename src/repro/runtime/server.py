@@ -55,6 +55,8 @@ class Server:
                  cores: int = 2,
                  topology: str | None = None,
                  interconnect=None,
+                 autotune: str | None = None,
+                 autotune_seed: int = 0,
                  cache_capacity: int = 32,
                  batch_tile: int = LANE,
                  max_rows: int = 4096):
@@ -78,7 +80,8 @@ class Server:
                       for n in (substrates or DEFAULT_SUBSTRATES))
         self.substrates: dict[str, Substrate] = {
             n: make_substrate(n, processor=processor, interpret=interpret,
-                              cores=cores, interconnect=interconnect)
+                              cores=cores, interconnect=interconnect,
+                              autotune=autotune, autotune_seed=autotune_seed)
             for n in names}
         self._batchers: weakref.WeakKeyDictionary[Artifact, MicroBatcher] = \
             weakref.WeakKeyDictionary()
@@ -191,7 +194,8 @@ class Server:
                             for n, s in self.substrates.items()},
                "padded_rows": 0,
                "batchers": {},
-               "multicore": {}}
+               "multicore": {},
+               "autotune": {}}
         for art, b in self._batchers.items():
             out["batchers"][f"{art.semiring}/{art.substrate}"] = dict(
                 b.stats, pad_waste=round(b.pad_waste, 4))
@@ -225,6 +229,20 @@ class Server:
                 "inject_stall_cycles":
                     mc["comm"].get("inject_stall_cycles", 0),
             }
+        # per-artifact autotune outcomes: winning config, tuned vs
+        # default cycles/eval, and the core-count fallback decisions
+        for art in self.cache.artifacts():
+            tune = art.meta.get("autotune")
+            decision = art.meta.get("core_decision")
+            if tune is None and decision is None:
+                continue
+            entry: dict = {}
+            if tune is not None:
+                entry.update(tune)
+                entry["interleave"] = art.meta.get("interleave", 1)
+            if decision is not None:
+                entry["core_decision"] = decision
+            out["autotune"][f"{art.semiring}/{art.substrate}"] = entry
         return out
 
 

@@ -154,13 +154,17 @@ def get_substrate(name: str, **kwargs) -> Substrate:
 def make_substrate(name: str, *, processor: ProcessorConfig = PTREE,
                    interpret: bool | None = None,
                    cores: int = 2,
-                   interconnect=None) -> Substrate:
+                   interconnect=None,
+                   autotune: str | None = None,
+                   autotune_seed: int = 0) -> Substrate:
     """Instantiate a substrate, routing the shared runtime options to the
     constructors that take them (the one place this mapping lives)."""
     cname = canonical(name)
     kwargs = {"pallas": {"interpret": interpret},
               "vliw-sim": {"processor": processor},
               "vliw-mc": {"processor": processor, "cores": cores,
+                          "autotune": autotune,
+                          "autotune_seed": autotune_seed,
                           **({"interconnect": interconnect}
                              if interconnect is not None else {})},
               }.get(cname, {})
@@ -317,7 +321,9 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
     def __init__(self, processor: ProcessorConfig = PTREE, cores: int = 2,
                  interconnect: multicore.InterconnectConfig = multicore.comm.XBAR,
                  seed: int = 0, strategy: str = "subtree",
-                 eta_iters: int = 2, placement: str = "aware") -> None:
+                 eta_iters: int = 2, placement: str = "aware",
+                 autotune: str | None = None, autotune_seed: int = 0,
+                 tune_config=None) -> None:
         super().__init__(processor)
         if cores < 1:
             raise ValueError(f"cores must be >= 1, got {cores}")
@@ -327,23 +333,118 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
         self.strategy = strategy
         self.eta_iters = eta_iters
         self.placement = placement
+        mode = autotune or "off"
+        if mode not in ("off", "cached") and not mode.startswith("budget="):
+            raise ValueError(f"autotune must be 'off', 'cached' or "
+                             f"'budget=N', got {autotune!r}")
+        self.autotune = mode
+        self.autotune_seed = autotune_seed
+        self.tune_config = tune_config    # explicit TuneConfig (tests)
 
     def config_fingerprint(self) -> str:
-        return (f"{self.processor.name}/cores={self.cores}"
-                f"/{self.interconnect.fingerprint()}"
-                f"/{self.strategy}/seed={self.seed}"
-                f"/eta={self.eta_iters}/place={self.placement}")
+        fp = (f"{self.processor.name}/cores={self.cores}"
+              f"/{self.interconnect.fingerprint()}"
+              f"/{self.strategy}/seed={self.seed}"
+              f"/eta={self.eta_iters}/place={self.placement}")
+        # conditional suffixes keep untuned fingerprints (and therefore
+        # cache keys) identical to previous releases
+        if self.autotune != "off":
+            fp += f"/tune={self.autotune}:{self.autotune_seed}"
+        if self.tune_config is not None:
+            fp += f"/cfg={self.tune_config.fingerprint()}"
+        return fp
+
+    def _resolve_tuning(self, prog):
+        """The TuneConfig to compile with, or (None, None) when untuned.
+
+        The autotuner is deterministic in (program digest, budget, seed),
+        so the mode string in :meth:`config_fingerprint` is a sufficient
+        cache-key proxy for the winning config itself.
+        """
+        if self.tune_config is not None:
+            tc = self.tune_config.canonical(self.tune_config.cores)
+            return tc, {"mode": "manual", "config": tc.fingerprint()}
+        if self.autotune == "off":
+            return None, None
+        from ..core.autotune import DEFAULT_BUDGET, tune_program
+        from ..core.autotune.search import lookup_cached
+        if self.autotune == "cached":
+            hit = lookup_cached(prog.digest())
+            if hit is not None:
+                return hit.config, dict(hit.summary(), mode="cached")
+            budget = DEFAULT_BUDGET
+        else:
+            budget = int(self.autotune.split("=", 1)[1])
+        result = tune_program(
+            prog, self.processor, max_cores=self.cores,
+            icfg=self.interconnect, budget=budget,
+            seed=self.autotune_seed, placement=self.placement)
+        return result.config, dict(result.summary(), mode=self.autotune)
 
     def _build(self, prog, log_domain, batch_tile):
+        tc, tune_summary = self._resolve_tuning(prog)
+        if tc is not None:
+            return self._build_tuned(prog, tc, tune_summary)
         mcp = multicore.compile_multicore(
             prog, self.processor, self.cores, self.interconnect,
             seed=self.seed, strategy=self.strategy,
             eta_iters=self.eta_iters, placement=self.placement)
+        decision = {"requested": self.cores, "chosen": self.cores,
+                    "reason": "multicore"}
+        if self.cores > 1:
+            # cheap single-core probe: when SEND/RECV overhead makes the
+            # partitioned program *slower* than one core (tiny SPNs),
+            # serve the single-core compile instead of paying comm for a
+            # slowdown — and record the decision either way
+            single = multicore.compile_multicore(
+                prog, self.processor, 1, self.interconnect, eta_iters=0)
+            decision["single_core_cycles"] = single.meta["cycles"]
+            decision["multicore_cycles"] = mcp.meta["cycles"]
+            if single.meta["cycles"] < mcp.meta["cycles"]:
+                mcp = single
+                decision.update(chosen=1, reason="single-core-fallback")
         dense = multicore.decode_multicore(mcp, cycles=mcp.meta["cycles"])
         meta = {"cycles": mcp.meta["cycles"],
                 "ops_per_cycle": mcp.meta["ops_per_cycle"],
                 "n_useful_ops": dense.n_useful_ops,
                 "processor": self.processor.name,
+                "core_decision": decision,
+                "multicore": mcp.meta}
+        return (mcp, dense, {}), meta
+
+    def _build_tuned(self, prog, tc, tune_summary):
+        """Compile the tuned configuration (functional/timing split).
+
+        The *timing model* is the tuned machine: ``tc.cores`` cores
+        running the ``tc.interleave``-way interleaved program — its
+        calibrated lockstep cycle count is the artifact's serving cost
+        and :meth:`execute_checked` clocks exactly that machine. The
+        *functional model* serving values is the cheapest bit-identical
+        program — the base program's single-core dense decode (the
+        merged interleaved multicore fast-sim computes, op for op, the
+        same f32 dataflow per instance; the conformance tests assert the
+        bit-equality this split relies on).
+        """
+        from ..core.compiler.pipeline import compile_program
+        k = tc.interleave
+        built = program.interleave(prog, k) if k > 1 else prog
+        mcp = multicore.compile_multicore(
+            built, self.processor, tc.cores, self.interconnect,
+            seed=tc.seed, strategy=tc.strategy, eta_iters=tc.eta_iters,
+            passes=tc.passes, placement=self.placement, grain=tc.grain,
+            max_arity=tc.max_arity)
+        dense = fastsim.decode(compile_program(prog, self.processor),
+                               self.processor)
+        meta = {"cycles": mcp.meta["cycles"],
+                "cycles_per_eval": mcp.meta["cycles"] / k,
+                "interleave": k,
+                "ops_per_cycle": mcp.meta["ops_per_cycle"],
+                "n_useful_ops": dense.n_useful_ops,
+                "processor": self.processor.name,
+                "autotune": tune_summary,
+                "core_decision": {"requested": self.cores,
+                                  "chosen": tc.cores,
+                                  "reason": "autotune"},
                 "multicore": mcp.meta}
         return (mcp, dense, {}), meta
 
@@ -352,8 +453,23 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
         return self._finish(artifact, fastsim.run(dense, leaves, workspace))
 
     def execute_checked(self, artifact, leaves):
-        """Lockstep N-core cycle-accurate simulation."""
+        """Lockstep N-core cycle-accurate simulation of the artifact's
+        timing-model machine — for tuned interleaved artifacts the batch
+        is packed ``k`` evals per row (zero-padded, de-interleaved and
+        trimmed afterwards), so the checked result stays comparable
+        bit-for-bit with :meth:`execute`."""
         mcp, _, _ = artifact.payload
-        res = multicore.simulate_multicore(
-            mcp, np.asarray(leaves, np.float32))
-        return self._finish(artifact, res.root_values)
+        leaves = np.atleast_2d(np.asarray(leaves, np.float32))
+        k = int(artifact.meta.get("interleave", 1))
+        if k == 1:
+            res = multicore.simulate_multicore(mcp, leaves)
+            return self._finish(artifact, res.root_values)
+        b, m = leaves.shape
+        pad = (-b) % k
+        if pad:
+            leaves = np.concatenate(
+                [leaves, np.zeros((pad, m), np.float32)])
+        packed = leaves.reshape(-1, k * m)
+        res = multicore.simulate_multicore(mcp, packed)
+        flat = res.root_values.T.reshape(-1)[:b]
+        return self._finish(artifact, flat)

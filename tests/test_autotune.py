@@ -1,0 +1,192 @@
+"""Per-SPN compiler autotuning (repro.core.autotune + runtime wiring)."""
+import numpy as np
+import pytest
+
+from repro.core import learn, program
+from repro.core.autotune import (TUNE_CACHE, TuneConfig, default_config,
+                                 tune_program)
+from repro.core.processor.config import PTREE
+from repro.runtime import Server
+from repro.runtime.cache import ArtifactCache
+from repro.runtime.substrates import make_substrate
+
+
+# ---------------- TuneConfig canonicalization ------------------------------ #
+def test_canonical_drops_inert_knobs_at_one_core():
+    tc = TuneConfig(cores=1, strategy="cone", seed=3, passes=2, grain=7,
+                    max_arity=4, eta_iters=3, interleave=2).canonical(4)
+    # at cores=1 every partition knob (and ETA feedback) is inert —
+    # only the interleave factor survives
+    assert tc == TuneConfig(cores=1, interleave=2, eta_iters=0)
+
+
+def test_canonical_grain_only_for_cone():
+    tc = TuneConfig(strategy="subtree", grain=9).canonical(4)
+    assert tc.grain is None
+    tc = TuneConfig(strategy="cone", grain=9).canonical(4)
+    assert tc.grain == 9
+
+
+def test_canonical_clamps_cores():
+    assert TuneConfig(cores=8).canonical(2).cores == 2
+    assert TuneConfig(cores=0).canonical(2).cores == 1
+
+
+# ---------------- the search ----------------------------------------------- #
+def test_tune_deterministic(nltcs_prog):
+    """Same digest + budget + seed => identical TuneConfig/fingerprint."""
+    kw = dict(max_cores=4, budget=10, seed=7, use_cache=False)
+    a = tune_program(nltcs_prog, PTREE, **kw)
+    b = tune_program(nltcs_prog, PTREE, **kw)
+    assert a.config == b.config
+    assert a.config.fingerprint() == b.config.fingerprint()
+    assert a.cycles == b.cycles
+    assert a.trials == b.trials          # full trial sequence, in order
+
+
+def test_tune_seed_changes_random_phase_only_deterministically(nltcs_prog):
+    a = tune_program(nltcs_prog, PTREE, max_cores=2, budget=12, seed=0,
+                     use_cache=False)
+    b = tune_program(nltcs_prog, PTREE, max_cores=2, budget=12, seed=1,
+                     use_cache=False)
+    # different seeds may land on different winners, but each run is
+    # internally reproducible and never loses to the default
+    for r in (a, b):
+        assert r.cycles_per_eval <= r.default_cycles_per_eval
+
+
+def test_tune_respects_budget(nltcs_prog):
+    res = tune_program(nltcs_prog, PTREE, max_cores=4, budget=5,
+                       use_cache=False)
+    assert 1 <= res.evaluated <= 5
+    assert len(res.trials) == res.evaluated
+
+
+def test_tune_budget_one_is_the_default(nltcs_prog):
+    res = tune_program(nltcs_prog, PTREE, max_cores=4, budget=1,
+                       use_cache=False)
+    assert res.evaluated == 1
+    assert res.config == default_config(4)
+    assert res.cycles == res.default_cycles
+
+
+def test_tune_never_loses_to_default(nltcs_prog):
+    res = tune_program(nltcs_prog, PTREE, max_cores=4, budget=8,
+                       use_cache=False)
+    assert res.cycles_per_eval <= res.default_cycles_per_eval
+    # nltcs at 4 cores: interleave is a large modeled win — the tuner
+    # must find *some* strict improvement within 8 trials
+    assert res.improved
+
+
+def test_tune_survives_infeasible_trials(nltcs_prog, monkeypatch):
+    """A candidate whose compile live-locks must not kill the search —
+    it scores INFEASIBLE, consumes budget, and the winner is feasible
+    (observed in the wild: strategy="level" on baudio@4c)."""
+    from repro.core.multicore import compile as mc_compile
+    real = mc_compile.compile_multicore
+
+    def flaky(prog, cfg, n_cores=2, *args, **kw):
+        if kw.get("strategy") == "level":
+            raise RuntimeError("live-lock at cycle 4144: ...")
+        return real(prog, cfg, n_cores, *args, **kw)
+
+    monkeypatch.setattr(mc_compile, "compile_multicore", flaky)
+    res = tune_program(nltcs_prog, PTREE, max_cores=4, budget=8,
+                       use_cache=False)
+    assert res.config.strategy != "level"
+    assert res.cycles_per_eval <= res.default_cycles_per_eval
+    failed = [t for t in res.trials if t[1] is None]
+    assert len(failed) == 1 and "/level/" in failed[0][0]
+    assert res.evaluated == 8 and len(res.trials) == 8
+
+
+def test_tune_cache_memoizes(nltcs_prog):
+    kw = dict(max_cores=2, budget=4, seed=0)
+    n0 = len(TUNE_CACHE)
+    a = tune_program(nltcs_prog, PTREE, **kw)
+    assert len(TUNE_CACHE) == n0 + 1
+    assert tune_program(nltcs_prog, PTREE, **kw) is a
+    assert len(TUNE_CACHE) == n0 + 1
+
+
+# ---------------- substrate integration ------------------------------------ #
+def test_autotune_mode_validation():
+    with pytest.raises(ValueError, match="autotune"):
+        make_substrate("vliw-mc", autotune="sometimes")
+
+
+def test_tuned_fingerprint_suffix_only_when_tuning():
+    off = make_substrate("vliw-mc", cores=2)
+    on = make_substrate("vliw-mc", cores=2, autotune="budget=4")
+    assert "/tune=" not in off.config_fingerprint()
+    assert on.config_fingerprint() == \
+        off.config_fingerprint() + "/tune=budget=4:0"
+
+
+def test_tuned_artifact_parity_and_meta(nltcs_prog, nltcs_data):
+    """Forced tuned config: values bit-match the untuned artifact and
+    the checked sim of the tuned interleaved multicore machine."""
+    leaves = nltcs_prog.leaves_from_evidence(nltcs_data[:13])
+    plain = make_substrate("vliw-mc", cores=2)
+    ref = plain.execute(plain.compile(nltcs_prog), leaves)
+
+    sub = make_substrate("vliw-mc", cores=2)
+    sub.tune_config = TuneConfig(cores=2, interleave=2)
+    art = sub.compile(nltcs_prog)
+    assert art.meta["interleave"] == 2
+    assert art.meta["cycles_per_eval"] == art.meta["cycles"] / 2
+    assert art.meta["autotune"]["mode"] == "manual"
+    assert art.meta["core_decision"]["reason"] == "autotune"
+    fast = sub.execute(art, leaves)
+    checked = sub.execute_checked(art, leaves)   # odd batch: pads 1 row
+    assert np.array_equal(fast, checked)
+    assert np.array_equal(fast, ref)
+
+
+def test_tuned_artifact_cached_separately(nltcs_prog):
+    cache = ArtifactCache(8)
+    off = make_substrate("vliw-mc", cores=2)
+    on = make_substrate("vliw-mc", cores=2, autotune="budget=4")
+    a = cache.get_or_compile(off, nltcs_prog)
+    b = cache.get_or_compile(on, nltcs_prog)
+    assert a is not b
+    assert cache.get_or_compile(on, nltcs_prog) is b
+    assert cache.stats()["hits"] == 1
+
+
+def test_server_autotune_stats_and_flow(nltcs_prog, nltcs_data):
+    srv = Server(prog=nltcs_prog, substrates=("numpy", "vliw-mc"),
+                 cores=4, autotune="budget=6")
+    vals = srv.query(nltcs_data[:8], "marginal", "vliw-mc")
+    ref = srv.query(nltcs_data[:8], "marginal", "numpy")
+    np.testing.assert_allclose(vals, ref, atol=1e-4)
+    tune = srv.stats()["autotune"]["sum/vliw-mc"]
+    assert tune["cycles_per_eval"] <= tune["default_cycles_per_eval"]
+    assert tune["mode"] == "budget=6"
+    assert tune["core_decision"]["reason"] == "autotune"
+
+
+# ---------------- cores=1 fallback heuristic (untuned path) ---------------- #
+def test_single_core_fallback_on_tiny_spn():
+    """SEND/RECV + barrier overhead makes 2 cores a net loss on a tiny
+    SPN; the untuned vliw-mc build must fall back to one core and say so."""
+    prog = program.lower(learn.random_spn(4, depth=1, num_sums=2,
+                                          repetitions=1, seed=0))
+    sub = make_substrate("vliw-mc", cores=2)
+    art = sub.compile(prog)
+    d = art.meta["core_decision"]
+    assert d["reason"] == "single-core-fallback"
+    assert d["chosen"] == 1 and d["requested"] == 2
+    assert d["single_core_cycles"] < d["multicore_cycles"]
+    assert art.meta["cycles"] == d["single_core_cycles"]
+    assert art.meta["multicore"]["n_cores"] == 1
+
+
+def test_multicore_kept_when_it_wins(nltcs_prog):
+    sub = make_substrate("vliw-mc", cores=2)
+    art = sub.compile(nltcs_prog)
+    d = art.meta["core_decision"]
+    assert d["reason"] == "multicore" and d["chosen"] == 2
+    assert d["multicore_cycles"] <= d["single_core_cycles"]
+    assert art.meta["multicore"]["n_cores"] == 2

@@ -1,0 +1,80 @@
+"""Interleaved programs under the multicore compiler (§Perf-C x §Multi).
+
+Bit-parity: the k-way interleaved program partitioned across N cores
+must reproduce, bit for bit, the single-core fast-sim oracle's values on
+the base program — through both the merged fast-sim decode and the
+lockstep checked simulator. Plus the modeled-cycles regression contract:
+interleaving never *increases* cycles/eval (it exists to amortize
+pipeline latency across independent evaluations).
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import learn, program
+from repro.core.compiler.pipeline import compile_program
+from repro.core.multicore import (compile_multicore, decode_multicore,
+                                  named_interconnect, simulate_multicore)
+from repro.core.processor import fastsim
+from repro.core.processor.config import PTREE
+from repro.data import spn_datasets
+
+
+@pytest.mark.parametrize("topology", ["xbar", "mesh"])
+@pytest.mark.parametrize("cores", [1, 2, 4])
+@pytest.mark.parametrize("k", [2, 4])
+def test_interleave_multicore_bit_parity(nltcs_prog, nltcs_data,
+                                         cores, k, topology):
+    rows = nltcs_data[:8]
+    base_leaves = nltcs_prog.leaves_from_evidence(rows).astype(np.float32)
+    ref = fastsim.run(
+        fastsim.decode(compile_program(nltcs_prog, PTREE), PTREE),
+        base_leaves, {})                                   # (8,) oracle
+
+    ip = program.interleave(nltcs_prog, k)
+    mcp = compile_multicore(ip, PTREE, cores,
+                            named_interconnect(topology))
+    dense = decode_multicore(mcp, cycles=mcp.meta["cycles"])
+    packed = base_leaves.reshape(len(rows) // k, k * nltcs_prog.m_ind)
+
+    fast = fastsim.run(dense, packed, {})                  # (k, 8//k)
+    assert fast.shape == (k, len(rows) // k)
+    # de-interleave back to evidence-row order and compare bitwise
+    assert np.array_equal(fast.T.reshape(-1), ref)
+
+    checked = simulate_multicore(mcp, packed).root_values
+    assert np.array_equal(checked, fast)
+
+
+def test_interleave_multicore_mcp_meta(nltcs_prog):
+    """The interleaved multicore compile reports per-batch cycles; the
+    per-eval cost (cycles/k) must beat the uninterleaved compile."""
+    base = compile_multicore(nltcs_prog, PTREE, 4).meta["cycles"]
+    mcp = compile_multicore(program.interleave(nltcs_prog, 4), PTREE, 4)
+    assert mcp.meta["cycles"] / 4 < base
+
+
+# ---------------- cycles/eval regression over the bench suite -------------- #
+SUITE_SMALL = ["nltcs", "msnbc"]
+SUITE_BIG = ["kdd", "plants", "baudio", "jester", "bnetflix"]
+
+
+@functools.lru_cache(maxsize=None)
+def _suite_prog(name: str):
+    # mirrors benchmarks.common.bench_spn (same data budget and seed)
+    X = spn_datasets.load(name, "train", 600)
+    return program.lower(learn.learn_spn(X, min_instances=60, seed=0))
+
+
+@pytest.mark.parametrize(
+    "dataset",
+    SUITE_SMALL + [pytest.param(d, marks=pytest.mark.slow)
+                   for d in SUITE_BIG])
+def test_interleave_never_increases_cycles_per_eval(dataset):
+    prog = _suite_prog(dataset)
+    base = compile_multicore(prog, PTREE, 4).meta["cycles"]
+    for k in ((2, 4) if dataset in SUITE_SMALL else (2,)):
+        mcp = compile_multicore(program.interleave(prog, k), PTREE, 4)
+        assert mcp.meta["cycles"] / k <= base, \
+            f"{dataset}: interleave k={k} worsened cycles/eval"
