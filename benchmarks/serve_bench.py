@@ -33,6 +33,16 @@ records a suite-wide tuned-vs-default modeled cycles/eval sweep
 ``--compare`` gate holds them exactly, and additionally fails if the
 tuner ever returns a config that loses to its own default trial.
 
+The run also measures a **``vliw-mc-degraded``** row — the same
+requests served through a third server whose fabric loses core 1 to a
+seeded fault plan (``core=1@t0``) on first touch: the resilient request
+path recompiles the SPN onto the three surviving cores (same
+content-addressed cache, ``/alive=`` fingerprint) and the row measures
+the repartitioned fabric's throughput next to the healthy baseline.
+The degraded artifact is oracle-parity checked and the server's
+``stats()["resilience"]`` snapshot (fault plan, applied events,
+degraded-artifact records) lands in ``record["resilience"]``.
+
 ``--topology {xbar,ring,mesh,torus}`` selects the NoC the served
 ``vliw-mc`` substrate models. Independently of it, every run records a
 **NoC topology sweep** (``record["noc"]``): per topology the calibrated
@@ -81,6 +91,11 @@ TUNED_BUDGET = 16
 #: autotune trials per dataset in the suite-wide tuned-vs-default sweep
 AUTOTUNE_SWEEP_BUDGET = 8
 AUTOTUNE_SWEEP_CORES = 4
+#: the degraded row's fabric: kill core 1 of 4 on the first touch, so
+#: the measured substrate is the 3-core repartition the resilient
+#: request path compiled onto the survivors
+DEGRADED_CORES = 4
+DEGRADED_FAULTS = "core=1@t0"
 
 
 def _best_round_us(fn, rounds: int = 4, n_iter: int = 5,
@@ -165,7 +180,7 @@ def compare_records(new: dict, baseline: dict,
                 and baseline.get("pallas_interpret")
                 != new.get("pallas_interpret")):
             continue
-        if (name in ("vliw-mc", "vliw-mc-tuned")
+        if (name in ("vliw-mc", "vliw-mc-tuned", "vliw-mc-degraded")
                 and baseline.get("mc_topology", "xbar")
                 != new.get("mc_topology", "xbar")):
             continue    # different NoC configs are incommensurable
@@ -411,6 +426,13 @@ def main(dataset: str = "nltcs", batch: int = 256,
     tuned_server = Server(spn, topology=topology, substrates=("vliw-mc",),
                           cores=AUTOTUNE_SWEEP_CORES,
                           autotune=f"budget={TUNED_BUDGET}")
+    # the degraded row: a seeded fault plan kills core 1 of 4 on first
+    # touch; the resilient request path recompiles onto the 3 surviving
+    # cores (same cache, /alive= fingerprint) and the row measures the
+    # repartitioned fabric next to the healthy baseline above
+    degraded_server = Server(spn, topology=topology,
+                             substrates=("vliw-mc",),
+                             cores=DEGRADED_CORES, faults=DEGRADED_FAULTS)
     Xq = random_mask(
         np.random.default_rng(0).integers(0, 2, (batch, prog.num_vars)),
         0.3, seed=0)
@@ -426,6 +448,7 @@ def main(dataset: str = "nltcs", batch: int = 256,
     # land in one phase and defeat the best-of aggregation.
     targets: dict[str, tuple] = {n: (server, n) for n in DEFAULT_SUBSTRATES}
     targets["vliw-mc-tuned"] = (tuned_server, "vliw-mc")
+    targets["vliw-mc-degraded"] = (degraded_server, "vliw-mc")
     best: dict[str, float] = {n: float("inf") for n in targets}
     samples: dict[str, list] = {n: [] for n in targets}
     for srv, sub in targets.values():          # warmup / compile / tune
@@ -469,6 +492,22 @@ def main(dataset: str = "nltcs", batch: int = 256,
     # sim (which clocks the tuned interleaved multicore machine) too
     verify_parity(tuned_server, Xq[:32], query="marginal",
                   substrates=("vliw-mc",))
+    # the degraded artifact must too — and the row must actually have
+    # measured a degraded fabric, not a healthy one (fault plan engaged,
+    # no fallback off the vliw-mc substrate)
+    verify_parity(degraded_server, Xq[:32], query="marginal",
+                  substrates=("vliw-mc",))
+    res = degraded_server.stats()["resilience"]
+    assert res["fabric"]["dead_cores"], \
+        "degraded row measured a healthy fabric (fault plan never fired)"
+    assert not res["redirects"], \
+        f"degraded row fell back off vliw-mc: {res['redirects']}"
+    record["resilience"] = res
+    n_total = res["fabric"]["total_cores"]
+    n_alive = n_total - len(res["fabric"]["dead_cores"])
+    print(f"  degraded fabric: dead_cores={res['fabric']['dead_cores']}, "
+          f"{n_alive}/{n_total} cores healthy, "
+          f"{len(res.get('degraded_artifacts', []))} degraded artifact(s)")
     record["obs_overhead"] = obs_overhead_check(server, Xq)
     record["pallas_interpret"] = \
         server.artifact("marginal", "pallas").meta["interpret"]

@@ -24,7 +24,7 @@ single-datapath constant.
 """
 from .comm import (MESH, RING, TOPOLOGIES, TORUS, XBAR, ChannelRow,
                    CommPlan, Interconnect, InterconnectConfig,
-                   build_comm_plan, named_interconnect)
+                   LinkDownError, build_comm_plan, named_interconnect)
 from .compile import CorePlan, MultiCoreProgram, build_core_programs, \
     compile_multicore
 from .fastsim import decode_multicore
@@ -34,7 +34,7 @@ from .sim import MCSimResult, simulate_multicore
 
 __all__ = [
     "ChannelRow", "CommPlan", "Interconnect", "InterconnectConfig",
-    "build_comm_plan", "named_interconnect",
+    "LinkDownError", "build_comm_plan", "named_interconnect",
     "TOPOLOGIES", "XBAR", "RING", "MESH", "TORUS",
     "CorePlan", "MultiCoreProgram",
     "build_core_programs", "compile_multicore", "decode_multicore",

@@ -56,14 +56,44 @@ from .partition import Partition
 TOPOLOGIES = ("xbar", "ring", "mesh", "torus")
 
 
+class LinkDownError(RuntimeError):
+    """A transfer (or a compiled comm plan) requires a dead NoC link.
+
+    Raised at compile time by the route validation in
+    :func:`~repro.core.multicore.compile.compile_multicore` and at
+    simulation time by :meth:`Interconnect.push` — the fabric-level
+    signal the degraded-mode repartitioner
+    (:mod:`repro.runtime.resilience`) reacts to by recompiling onto a
+    smaller surviving core set.
+    """
+
+    def __init__(self, link: tuple, msg: str | None = None):
+        self.link = tuple(link)
+        super().__init__(msg or f"NoC link {self.link[0]}->{self.link[1]} "
+                         "is down")
+
+
 @dataclasses.dataclass(frozen=True)
 class InterconnectConfig:
-    """Modeled interconnect between cores."""
+    """Modeled interconnect between cores.
+
+    ``dead_links``/``slow_links`` model *fabric faults*: directed
+    physical links (grid-node id pairs — equal to core ids on exact
+    grids and for the xbar's dedicated wires) that are out of service or
+    serialize flits ``factor`` times slower. A dead link makes every
+    transfer routed across it raise :class:`LinkDownError`; a slow link
+    multiplies its per-transfer busy time in the contention model. Both
+    are carried in :meth:`fingerprint` (suffixes appear only when faults
+    are present, so healthy fingerprints — and the artifact-cache keys
+    built from them — are unchanged).
+    """
     name: str = "xbar"
     topology: str = "xbar"      # "xbar" | "ring" | "mesh" | "torus"
     hop_latency: int = 1        # cycles per hop, SEND issue -> visibility
     link_width: int = 32        # values serialized per cycle per link
     row_capacity: int = 32      # max values per channel row (≤ banks)
+    dead_links: tuple = ()      # ((a, b), ...) directed dead links
+    slow_links: tuple = ()      # ((a, b, factor), ...) degraded links
 
     # ---------------- geometry ---------------------------------------- #
     def grid_shape(self, n_cores: int) -> tuple[int, int]:
@@ -177,9 +207,50 @@ class InterconnectConfig:
                             for b in range(n_cores)]
                            for a in range(n_cores)], np.int64)
 
+    # ---------------- fabric faults ------------------------------------ #
+    def link_factor(self, link: tuple[int, int]) -> int:
+        """Serialization slowdown factor of a (possibly degraded) link."""
+        for a, b, f in self.slow_links:
+            if (a, b) == tuple(link):
+                return max(int(f), 1)
+        return 1
+
+    def link_is_dead(self, link: tuple[int, int]) -> bool:
+        return tuple(link) in self.dead_links
+
+    def degraded(self, dead_links=(), slow_links=()) -> "InterconnectConfig":
+        """This config with additional fault state merged in.
+
+        ``dead_links``: iterable of (a, b) directed pairs. ``slow_links``:
+        iterable of (a, b, factor). Existing faults are kept; a link both
+        dead and slow is dead. Entries are normalized (sorted, deduped)
+        so equal fault sets produce equal configs — and therefore equal
+        fingerprints / artifact-cache keys.
+        """
+        dead = {tuple(l) for l in self.dead_links}
+        dead.update(tuple(l) for l in dead_links)
+        slow = {(a, b): max(int(f), 1) for a, b, f in self.slow_links}
+        for a, b, f in slow_links:
+            slow[(a, b)] = max(int(f), 1)
+        for link in dead:
+            slow.pop(link, None)
+        return dataclasses.replace(
+            self,
+            dead_links=tuple(sorted(dead)),
+            slow_links=tuple(sorted((a, b, f)
+                                    for (a, b), f in slow.items())))
+
     def fingerprint(self) -> str:
-        return (f"{self.topology}/hop={self.hop_latency}"
-                f"/w={self.link_width}/cap={self.row_capacity}")
+        fp = (f"{self.topology}/hop={self.hop_latency}"
+              f"/w={self.link_width}/cap={self.row_capacity}")
+        # fault suffixes only when present: healthy fingerprints (and the
+        # artifact-cache keys derived from them) stay byte-identical
+        if self.dead_links:
+            fp += "/dead=" + ".".join(f"{a}-{b}" for a, b in self.dead_links)
+        if self.slow_links:
+            fp += "/slow=" + ".".join(f"{a}-{b}x{f}"
+                                      for a, b, f in self.slow_links)
+        return fp
 
 
 XBAR = InterconnectConfig()
@@ -251,6 +322,27 @@ class CommPlan:
     def route(self, row: ChannelRow) -> tuple:
         return self.icfg.route(self.geometry(row.src),
                                self.geometry(row.dst), self.n_geom)
+
+    def check_links(self) -> None:
+        """Raise :class:`LinkDownError` if any channel row's route
+        crosses a dead link — the compile-time feasibility check the
+        degraded-mode repartitioner descends on (fewer cores ⇒ fewer
+        routes; one core ⇒ no routes, always feasible)."""
+        if not self.icfg.dead_links:
+            return
+        for row in self.rows:
+            for link in self.route(row):
+                if self.icfg.link_is_dead(link):
+                    raise LinkDownError(
+                        link, f"channel row {row.row_id} "
+                        f"({self.geometry(row.src)}->"
+                        f"{self.geometry(row.dst)}) is routed over dead "
+                        f"link {link[0]}->{link[1]}")
+
+    def links_used(self) -> list:
+        """Sorted directed physical links any channel row crosses."""
+        return sorted({link for row in self.rows
+                       for link in self.route(row)})
 
     def stats(self) -> dict:
         return {"rows": len(self.rows), "values": self.volume,
@@ -354,6 +446,20 @@ class Interconnect:
         self._src = {r.row_id: plan.geometry(r.src) for r in plan.rows}
         self._route = ({} if icfg.topology == "xbar" else
                        {r.row_id: plan.route(r) for r in plan.rows})
+        # fabric faults: dead xbar wires fail at push; slow xbar wires
+        # stretch the dedicated wire's serialization (no cross-transfer
+        # contention — the wire is still private); physical topologies
+        # handle both per route link inside push()
+        self._dead_rows: set[int] = set()
+        if icfg.topology == "xbar" and (icfg.dead_links or icfg.slow_links):
+            for r in plan.rows:
+                wire = (plan.geometry(r.src), plan.geometry(r.dst))
+                if icfg.link_is_dead(wire):
+                    self._dead_rows.add(r.row_id)
+                factor = icfg.link_factor(wire)
+                if factor > 1:
+                    self._latency[r.row_id] += \
+                        (factor - 1) * self._serial[r.row_id]
         self.rows: dict[int, tuple[int, np.ndarray]] = {}
         self.sends = 0
         self.values_sent = 0
@@ -372,6 +478,8 @@ class Interconnect:
         route = self._route.get(row_id)
         if route is None:
             # ideal crossbar: dedicated wires, no shared resources
+            if row_id in self._dead_rows:
+                raise LinkDownError((self._src[row_id], self._dst[row_id]))
             arrival = now + self._latency[row_id]
         else:
             icfg, serial = self.plan.icfg, self._serial[row_id]
@@ -379,15 +487,19 @@ class Interconnect:
             start = max(now, self.inject_free.get(src, 0))
             self.inject_stall_cycles += start - now
             self.inject_free[src] = start + serial
-            head = start
+            head, tail = start, serial
             for link in route:
+                if icfg.link_is_dead(link):
+                    raise LinkDownError(link)
+                busy = serial * icfg.link_factor(link)
                 t = max(head, self.link_free.get(link, 0))
-                self.link_free[link] = t + serial
-                self.link_busy[link] = self.link_busy.get(link, 0) + serial
+                self.link_free[link] = t + busy
+                self.link_busy[link] = self.link_busy.get(link, 0) + busy
                 if self.recorder is not None:
-                    self.recorder.link_busy(link, t, t + serial, row_id)
+                    self.recorder.link_busy(link, t, t + busy, row_id)
                 head = t + icfg.hop_latency
-            arrival = head + serial
+                tail = max(tail, busy)   # the slowest link paces the tail
+            arrival = head + tail
             self.link_stall_cycles += \
                 arrival - (start + len(route) * icfg.hop_latency + serial)
         if self.recorder is not None:

@@ -188,6 +188,7 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
                       placement: str = "aware",
                       grain: int | None = None,
                       max_arity: int | None = None,
+                      allowed_cores: tuple | None = None,
                       **compile_kwargs) -> MultiCoreProgram:
     """Partition, build and VLIW-compile ``prog`` for ``n_cores`` cores.
 
@@ -206,6 +207,15 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
     ``"naive"`` keeps the flat partition for comparison. ``grain`` and
     ``max_arity`` forward to :func:`partition_ops` — autotuner knobs for
     cone-crown size and fused-unit granularity.
+
+    ``allowed_cores`` compiles for a *degraded* machine: the partition
+    is restricted to the surviving physical core subset (see
+    :func:`partition_ops`), and the resulting comm plan is validated
+    against the interconnect's dead links
+    (:meth:`~repro.core.multicore.comm.CommPlan.check_links` — raising
+    :class:`~repro.core.multicore.comm.LinkDownError` when no feasible
+    route exists, which the resilience layer catches to descend to
+    fewer cores or another substrate).
     """
     from ...obs import trace
     from .sim import simulate_multicore   # local import: cycle avoidance
@@ -216,11 +226,13 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
                              "placement": placement, "n_ops": prog.n_ops}):
         part = partition_ops(prog, n_cores, seed=seed, strategy=strategy,
                              passes=passes, icfg=icfg, placement=placement,
-                             grain=grain, max_arity=max_arity)
+                             grain=grain, max_arity=max_arity,
+                             allowed_cores=allowed_cores)
     with trace.span("compile.core_programs",
                     lambda: {"cut_values": part.cut_values,
                              "hop_cut": part.hop_cut}):
         plans, plan = build_core_programs(prog, part, icfg, banks=cfg.banks)
+    plan.check_links()      # degraded-mode feasibility (LinkDownError)
     root_gid = prog.root_slot - prog.m
     root_core = next(i for i, cp in enumerate(plans)
                      if root_gid in set(int(g) for g in cp.gid_of_op))
@@ -271,6 +283,8 @@ def compile_multicore(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
         "interconnect": icfg.fingerprint(),
         "placement": placement,
         "core_placement": part.core_placement,
+        "core_labels": [int(plan.geometry(cp.core)) for cp in plans],
+        "links_used": [[int(a), int(b)] for a, b in plan.links_used()],
         "comm": dict(plan.stats(), **best_res.comm),
         "cycles": best_res.cycles,
         "core_cycles": [cp.vprog.num_cycles for cp in plans],

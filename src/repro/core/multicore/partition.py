@@ -143,7 +143,8 @@ def traffic_matrix(core_of_node: np.ndarray, out_nodes,
     return T
 
 
-def place_cores(traffic: np.ndarray, icfg, n_cores: int) -> np.ndarray:
+def place_cores(traffic: np.ndarray, icfg, n_cores: int,
+                positions: list | None = None) -> np.ndarray:
     """Core-label permutation placing chatty core pairs adjacent.
 
     Minimizes ``Σ traffic[a,b] · hops(π(a), π(b))`` plus the busiest
@@ -153,32 +154,49 @@ def place_cores(traffic: np.ndarray, icfg, n_cores: int) -> np.ndarray:
     each at the position minimizing its incremental hop cost — followed
     by deterministic pairwise-swap descent on the full objective.
     Returns ``perm`` with ``perm[old_label] = new_label``.
+
+    ``positions`` (default all of ``range(n_cores)``) restricts the
+    physical grid slots labels may land on — the degraded-mode path
+    places the partition's parts onto the machine's *surviving* cores
+    while hop counts and routes stay on the full physical grid. Routes
+    crossing a dead link (``icfg.dead_links``) are charged a huge
+    penalty per crossing, steering placement around fabric faults when
+    any fault-free placement exists.
     """
+    n_parts = traffic.shape[0]
+    if positions is None:
+        positions = list(range(n_cores))
+    assert len(positions) == n_parts, \
+        f"{n_parts} parts need {n_parts} positions, got {len(positions)}"
     hops = icfg.hop_matrix(n_cores)
     routes = {(a, b): icfg.route(a, b, n_cores)
-              for a in range(n_cores) for b in range(n_cores) if a != b}
+              for a in positions for b in positions if a != b}
+    dead = set(icfg.dead_links)
+    DEAD_PENALTY = 1 << 30
 
     def cost(perm: np.ndarray) -> int:
         hop_cost = int((traffic * hops[perm[:, None], perm[None, :]]).sum())
         load: dict = {}
-        for a in range(n_cores):
-            for b in range(n_cores):
+        for a in range(n_parts):
+            for b in range(n_parts):
                 t = int(traffic[a, b])
                 if t and a != b:
                     for link in routes[(int(perm[a]), int(perm[b]))]:
                         load[link] = load.get(link, 0) + t
+                        if link in dead:
+                            hop_cost += DEAD_PENALTY
         return hop_cost + (max(load.values()) if load else 0)
 
     sym = traffic + traffic.T
-    perm = np.full(n_cores, -1, np.int64)
-    free = list(range(n_cores))
+    perm = np.full(n_parts, -1, np.int64)
+    free = list(positions)
     placed: list[int] = []
-    for _ in range(n_cores):
+    for _ in range(n_parts):
         if not placed:
-            c = max(range(n_cores), key=lambda c: (int(sym[c].sum()), -c))
+            c = max(range(n_parts), key=lambda c: (int(sym[c].sum()), -c))
             pos = free[0]
         else:
-            c = max((c for c in range(n_cores) if perm[c] < 0),
+            c = max((c for c in range(n_parts) if perm[c] < 0),
                     key=lambda c: (int(sym[c, placed].sum()), -c))
             pos = min(free, key=lambda p: (
                 sum(int(sym[c, q]) * int(hops[p, perm[q]]) for q in placed),
@@ -192,8 +210,8 @@ def place_cores(traffic: np.ndarray, icfg, n_cores: int) -> np.ndarray:
         improved = True
         while improved:
             improved = False
-            for i in range(n_cores):
-                for j in range(i + 1, n_cores):
+            for i in range(n_parts):
+                for j in range(i + 1, n_parts):
                     perm[i], perm[j] = perm[j], perm[i]
                     cand = cost(perm)
                     if cand < best:
@@ -206,7 +224,7 @@ def place_cores(traffic: np.ndarray, icfg, n_cores: int) -> np.ndarray:
     # (= the flat labeling) guarantees the result never costs more than
     # doing nothing
     perm, best = descend(perm)
-    ident, ibest = descend(np.arange(n_cores, dtype=np.int64))
+    ident, ibest = descend(np.asarray(positions, dtype=np.int64))
     return ident if ibest < best else perm
 
 
@@ -214,13 +232,22 @@ def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
                   passes: int = 2, strategy: str = "subtree",
                   icfg=None, placement: str = "aware",
                   grain: int | None = None,
-                  max_arity: int | None = None) -> Partition:
+                  max_arity: int | None = None,
+                  allowed_cores: tuple | None = None) -> Partition:
     """Partition ``prog`` onto ``n_cores`` cores (see module doc).
 
     ``icfg`` (an :class:`~repro.core.multicore.comm.InterconnectConfig`)
     plus ``placement="aware"`` enables topology-aware core placement and
     hop-weighted move refinement on physical NoCs; ``placement="naive"``
     (or ``icfg=None`` / the ideal ``xbar``) keeps the flat partition.
+
+    ``allowed_cores`` restricts the partition to a *surviving* subset of
+    the ``n_cores``-core machine (degraded mode after a core fault): ops
+    are partitioned into ``len(allowed_cores)`` parts and placed only
+    onto those physical grid positions — hop counts and routes stay on
+    the full physical grid, so the dead cores' router nodes still exist
+    exactly as on a partially-disabled SoC. ``None`` (and the full set)
+    keep the healthy path bit-identical.
 
     Autotuning knobs (defaults reproduce the historical behaviour
     exactly — the golden cycle fixtures pin this):
@@ -237,6 +264,18 @@ def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
         raise ValueError(f"unknown strategy {strategy!r}")
     if placement not in ("aware", "naive"):
         raise ValueError(f"unknown placement {placement!r}")
+    if allowed_cores is not None:
+        allowed = sorted({int(c) for c in allowed_cores})
+        if not allowed:
+            raise ValueError("allowed_cores must name at least one core")
+        if allowed[0] < 0 or allowed[-1] >= n_cores:
+            raise ValueError(f"allowed_cores {allowed} outside the "
+                             f"{n_cores}-core machine")
+        if allowed != list(range(n_cores)):
+            return _partition_restricted(
+                prog, n_cores, allowed, seed=seed, passes=passes,
+                strategy=strategy, icfg=icfg, placement=placement,
+                grain=grain, max_arity=max_arity)
     info, roots, node_of_root, weight, level, in_nodes, out_nodes = \
         _fused_graph(prog, max_arity)
     n_nodes = len(roots)
@@ -454,6 +493,56 @@ def partition_ops(prog: TensorProgram, n_cores: int, *, seed: int = 0,
         seed=seed, strategy=strategy,
         topology=icfg.topology if icfg is not None else "xbar",
         hop_cut=hop_cut, core_placement=placement_perm,
+        grain=grain, max_arity=max_arity)
+    validate_partition(prog, part)
+    return part
+
+
+def _partition_restricted(prog: TensorProgram, n_cores: int, allowed: list,
+                          *, seed: int, passes: int, strategy: str,
+                          icfg, placement: str, grain: int | None,
+                          max_arity: int | None) -> Partition:
+    """Degraded-mode partition onto a surviving subset of the machine.
+
+    Partitions into ``len(allowed)`` parts with the flat partitioner,
+    then maps the part labels onto the surviving *physical* grid
+    positions (:func:`place_cores` with ``positions=allowed`` when the
+    NoC is physical and placement is aware, else the identity onto
+    ``allowed``). Hop counts, routes and dead-link penalties all live on
+    the full physical grid — the dead cores' routers still exist. The
+    hop-weighted move-refinement pass of the healthy path is skipped:
+    label-space restriction makes its load bookkeeping ambiguous, and
+    degraded mode optimizes for *serving at all*, not the last cycle.
+    """
+    base = partition_ops(prog, len(allowed), seed=seed, passes=passes,
+                         strategy=strategy, icfg=None, placement="naive",
+                         grain=grain, max_arity=max_arity)
+    _info, _roots, _node_of_root, _w, _lv, _in_nodes, out_nodes = \
+        _fused_graph(prog, max_arity)
+    if (icfg is not None and placement == "aware"
+            and icfg.topology != "xbar" and len(allowed) > 1):
+        perm = place_cores(
+            traffic_matrix(base.core_of_node, out_nodes, len(allowed)),
+            icfg, n_cores, positions=allowed)
+    else:
+        perm = np.asarray(allowed, np.int64)
+    core_of_node = perm[base.core_of_node].astype(np.int32)
+    core_of_op = perm[base.core_of_op].astype(np.int32)
+    loads = np.bincount(core_of_op, minlength=n_cores).astype(np.int64)
+    if icfg is not None and icfg.topology != "xbar":
+        hop_cut = _hop_cut_volume(core_of_node, out_nodes,
+                                  icfg.hop_matrix(n_cores))
+        topo = icfg.topology
+    else:
+        hop_cut, topo = base.cut_values, "xbar"
+    part = Partition(
+        n_cores=n_cores, core_of_node=core_of_node, core_of_op=core_of_op,
+        node_of_root=base.node_of_root, roots=base.roots,
+        node_level=base.node_level, node_weight=base.node_weight,
+        op_level=base.op_level, loads=loads,
+        cut_values=base.cut_values,       # label permutation keeps the cut
+        seed=seed, strategy=strategy, topology=topo, hop_cut=hop_cut,
+        core_placement=[int(p) for p in perm],
         grain=grain, max_arity=max_arity)
     validate_partition(prog, part)
     return part

@@ -64,6 +64,7 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
               cores: int = 2, topology: str = "xbar",
               link_width: int = 32,
               autotune: str | None = None,
+              faults=None,
               trace_path: str | None = None,
               metrics_dump: bool = False) -> dict:
     from .. import obs
@@ -86,10 +87,13 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
     server = Server(spn, interpret=interpret, cores=cores,
                     interconnect=named_interconnect(topology,
                                                     link_width=link_width),
-                    autotune=autotune)
+                    autotune=autotune, faults=faults)
     names = SPN_SUBSTRATES if substrate in ("all", None) else (substrate,)
     print(f"SPN[{dataset}] query={query}: {server.prog.n_ops} ops, "
           f"{server.prog.num_levels} levels; substrates: {', '.join(names)}")
+    if faults is not None:
+        print(f"  fault injection: "
+              f"{', '.join(server.resilience.injector.plan.specs())}")
 
     out: dict = {}
     if query == "sample":
@@ -181,6 +185,18 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
     cs = out["runtime_stats"]["cache"]
     print(f"  artifact cache: {cs['hits']} hits / {cs['misses']} misses "
           f"({cs['size']} artifacts resident)")
+    res = out["runtime_stats"]["resilience"]
+    if res["enabled"]:
+        fab = res["fabric"]
+        print(f"  resilience: tick={res['tick']}, "
+              f"healthy={fab['healthy_cores']}, "
+              f"dead_cores={fab['dead_cores']}, "
+              f"dead_links={fab['dead_links']}, "
+              f"redirects={res['redirects']}")
+        for h in res["history"]:
+            print(f"    [{h['kind']}@t{h['tick']}] "
+                  + ", ".join(f"{k}={v}" for k, v in h.items()
+                              if k not in ("kind", "tick")))
     for key, mc in out["runtime_stats"]["multicore"].items():
         print(f"  multicore[{key}]: {mc['cores']} cores/{mc['topology']}, "
               f"{mc['cycles']} cycles, util={mc['core_utilization']}, "
@@ -305,6 +321,17 @@ def main() -> None:
                          "budget), or 'budget=N' (fast-sim-guided search "
                          "over partition/schedule/interleave knobs, N "
                          "compile+probe trials)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    nargs="+",
+                    help="deterministic fabric fault plan for chaos "
+                         "drills: core=N[@tT] (kill a core), "
+                         "link=A-B[@tT] (kill a NoC link both ways), "
+                         "slow=A-BxF[@tT] (serialize a link F x slower), "
+                         "flip[@tT] (one transient execute corruption, "
+                         "detected + retried); ticks count batched "
+                         "executes. The server degrades and falls back "
+                         "instead of failing (see "
+                         "repro.runtime.resilience)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record a Chrome trace_event file of the run: "
                          "wall-clock request/compile/execute spans plus "
@@ -330,6 +357,7 @@ def main() -> None:
                   link_width=args.link_width,
                   autotune=(None if args.autotune == "off"
                             else args.autotune),
+                  faults=args.inject_faults,
                   trace_path=args.trace, metrics_dump=args.metrics_dump)
     else:
         serve_lm(args.arch, min(args.batch, 8), args.prompt_len,

@@ -143,10 +143,16 @@ class Registry:
     def names(self) -> tuple[str, ...]:
         return tuple(sorted(self._metrics))
 
-    def snapshot(self) -> dict:
-        """Read-only value snapshot: name -> number | histogram summary."""
+    def snapshot(self, prefix: str = "") -> dict:
+        """Read-only value snapshot: name -> number | histogram summary.
+
+        ``prefix`` filters to one instrument family (e.g. ``"fault."``
+        for the resilience counters/gauges) without copying the rest.
+        """
         out: dict = {}
         for name in sorted(self._metrics):
+            if prefix and not name.startswith(prefix):
+                continue
             m = self._metrics[name]
             out[name] = m.summary() if isinstance(m, Histogram) else m.value
         return out
@@ -195,8 +201,8 @@ def histogram(name: str, max_samples: int = 8192) -> Histogram:
     return REGISTRY.histogram(name, max_samples)
 
 
-def snapshot() -> dict:
-    return REGISTRY.snapshot()
+def snapshot(prefix: str = "") -> dict:
+    return REGISTRY.snapshot(prefix)
 
 
 def dump(fmt: str = "text") -> str:

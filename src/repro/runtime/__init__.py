@@ -8,6 +8,12 @@ from .batcher import MicroBatcher, PendingResult
 from .cache import ArtifactCache
 from .fault import (FailureInjector, Heartbeat, RestartPolicy,
                     TrainingAborted, Watchdog, run_with_restarts)
+from .resilience import (FALLBACK_CHAIN, Backpressure, CircuitBreaker,
+                         CircuitOpen, CoreFault, FabricError, FabricState,
+                         FaultEvent, FaultInjector, FaultPlan, LinkFault,
+                         RequestTimeout, ResilienceExhausted,
+                         ResilienceManager, ResiliencePolicy,
+                         TransientFault)
 from .server import DEFAULT_SUBSTRATES, ParityError, Server, verify_parity
 from .substrates import (ALIASES, LANE, QUERIES, SEMIRING_OF_QUERY, Artifact,
                          Substrate, available_substrates, canonical,
@@ -17,6 +23,12 @@ __all__ = [
     # fault tolerance
     "FailureInjector", "Heartbeat", "RestartPolicy", "TrainingAborted",
     "Watchdog", "run_with_restarts",
+    # serving-fabric resilience
+    "FALLBACK_CHAIN", "Backpressure", "CircuitBreaker", "CircuitOpen",
+    "CoreFault", "FabricError", "FabricState", "FaultEvent",
+    "FaultInjector", "FaultPlan", "LinkFault", "RequestTimeout",
+    "ResilienceExhausted", "ResilienceManager", "ResiliencePolicy",
+    "TransientFault",
     # substrate runtime
     "ALIASES", "LANE", "QUERIES", "SEMIRING_OF_QUERY", "Artifact",
     "Substrate", "available_substrates", "canonical", "get_substrate",

@@ -25,26 +25,47 @@ class PendingResult:
 
     ``trace_id`` is the request's trace id (0 when tracing is off) —
     assigned at submit time and carried into the batch-flush span so a
-    coalesced execution can be attributed back to every request in it.
+    coalesced execution is attributable back to every request in it.
+
+    A failed coalesced execute *rejects* the handle: the original
+    exception is stored on every member and re-raised from
+    :meth:`result` — a request can never hang unresolved behind a
+    failed flush. :meth:`exception` peeks at the failure without
+    raising.
     """
 
     def __init__(self, batcher: "MicroBatcher"):
         self._batcher = batcher
         self._value: np.ndarray | None = None
+        self._exc: BaseException | None = None
         self.trace_id = 0
 
     def ready(self) -> bool:
-        return self._value is not None
+        """Resolved — either with a value or with a failure."""
+        return self._value is not None or self._exc is not None
 
     def result(self) -> np.ndarray:
-        if self._value is None:
+        if not self.ready():
             self._batcher.flush()
+        if self._exc is not None:
+            raise self._exc
         assert self._value is not None
         return self._value
 
+    def exception(self) -> BaseException | None:
+        """The failure that rejected this request (flushing first if
+        still queued), or ``None`` if it succeeded / is healthy."""
+        if not self.ready():
+            try:
+                self._batcher.flush()
+            except Exception:
+                pass    # the flush stored itself on every member
+        return self._exc
+
 
 class MicroBatcher:
-    def __init__(self, execute, *, tile: int = 1, max_rows: int = 4096):
+    def __init__(self, execute, *, tile: int = 1, max_rows: int = 4096,
+                 split_retry: bool = False):
         """``execute``: (rows, m_ind) linear leaves -> (rows,) values.
 
         ``tile`` is the executor's declared row multiple — the substrate's
@@ -53,6 +74,14 @@ class MicroBatcher:
         are never padded. ``stats['padded_rows']`` counts the rows of
         padding waste, reported by :meth:`Server.stats` next to the
         artifact-cache hit/miss counters.
+
+        ``split_retry`` changes what a failed *multi-member* coalesced
+        execute does: instead of rejecting every member with the batch
+        exception, each member is re-executed individually so non-faulty
+        rows still get correct results and only the actually-failing
+        members carry an exception (the resilient server turns this on
+        when fault injection is live; default off keeps the classic
+        fail-the-batch contract).
         """
         if tile < 1:
             raise ValueError(f"tile must be >= 1, got {tile}")
@@ -61,6 +90,7 @@ class MicroBatcher:
         self.execute = execute
         self.tile = tile
         self.max_rows = max_rows
+        self.split_retry = split_retry
         self._queue: list[tuple[np.ndarray, PendingResult]] = []
         self._queued_rows = 0
         self.stats = {"requests": 0, "rows": 0, "batches": 0,
@@ -101,7 +131,19 @@ class MicroBatcher:
                                  "padded_rows": n_pad - n,
                                  "trace_ids": [p.trace_id
                                                for _, p in queue]}):
-            values = np.asarray(self.execute(rows))[:n]
+            try:
+                values = np.asarray(self.execute(rows))[:n]
+            except Exception as exc:
+                self.stats["batches"] += 1
+                metrics.counter("batch.flush_errors").inc()
+                if self.split_retry and len(queue) > 1:
+                    self._flush_split(queue)
+                    return
+                # reject every member with the ORIGINAL exception — a
+                # failed flush must never leave a pending unresolved
+                for _, pending in queue:
+                    pending._exc = exc
+                raise
         self.stats["batches"] += 1
         self.stats["padded_rows"] += n_pad - n
         metrics.counter("batch.flushes").inc()
@@ -112,3 +154,25 @@ class MicroBatcher:
             k = leaves.shape[0]
             pending._value = values[off: off + k]
             off += k
+
+    def _flush_split(self, queue) -> None:
+        """Per-member retry after a failed coalesced execute: rows from
+        non-faulty requests still get correct results; only the members
+        that fail on their own carry an exception."""
+        metrics.counter("batch.split_retries").inc()
+        trace.instant("batch.split_retry", {"requests": len(queue)})
+        for leaves, pending in queue:
+            k = leaves.shape[0]
+            k_pad = (k + self.tile - 1) // self.tile * self.tile
+            rows = leaves
+            if k_pad > k:
+                pad = np.ones((k_pad - k, leaves.shape[1]), leaves.dtype)
+                rows = np.concatenate([leaves, pad], axis=0)
+            try:
+                vals = np.asarray(self.execute(rows))[:k]
+            except Exception as exc:
+                pending._exc = exc
+            else:
+                pending._value = vals
+                self.stats["padded_rows"] += k_pad - k
+                metrics.counter("batch.padded_rows").inc(k_pad - k)

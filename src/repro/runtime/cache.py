@@ -80,8 +80,14 @@ class ArtifactCache:
         return art
 
     def artifacts(self):
-        """Resident artifacts, LRU order (introspection, e.g. stats)."""
-        return iter(self._entries.values())
+        """Resident artifacts, LRU order (introspection, e.g. stats).
+
+        Returns a materialized snapshot, not a live view: callers
+        iterate while serving continues, and a concurrent
+        ``get_or_compile`` eviction mutating the underlying dict must
+        not blow up (or silently skip) the iteration.
+        """
+        return list(self._entries.values())
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -55,13 +55,26 @@ class Watchdog:
         if not os.path.isdir(self.dir):
             return out
         for f in os.listdir(self.dir):
-            if f.endswith(".hb"):
+            if not f.endswith(".hb"):
+                continue
+            # filenames come from a directory shared with the workers —
+            # a malformed name (crash mid-rename, stray file) must be
+            # skipped and counted, never crash the coordinator
+            try:
                 wid = int(f.split("_")[1].split(".")[0])
-                try:
-                    with open(os.path.join(self.dir, f)) as fh:
-                        out.append((wid, json.load(fh)))
-                except (json.JSONDecodeError, OSError):
-                    continue
+            except (IndexError, ValueError):
+                metrics.counter("fault.heartbeat_corrupt").inc()
+                continue
+            try:
+                with open(os.path.join(self.dir, f)) as fh:
+                    hb = json.load(fh)
+            except (json.JSONDecodeError, OSError):
+                metrics.counter("fault.heartbeat_corrupt").inc()
+                continue
+            if not isinstance(hb, dict) or "t" not in hb:
+                metrics.counter("fault.heartbeat_corrupt").inc()
+                continue
+            out.append((wid, hb))
         return out
 
     def dead_workers(self, now: float | None = None) -> list[int]:

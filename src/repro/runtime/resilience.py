@@ -1,0 +1,502 @@
+"""Fault-tolerant serving fabric: injection, degradation, hardening.
+
+The paper's processor targets safety-critical deployments (self-driving,
+autonomous drones) where the serving stack must keep answering queries
+while the hardware misbehaves. This module supplies the three layers the
+hardened :class:`~repro.runtime.server.Server` request path is built on:
+
+**Deterministic fault injection** — a seeded :class:`FaultPlan` of
+:class:`FaultEvent`\\ s on a virtual tick clock (one tick per batched
+execute). Events can *kill cores*, *kill or slow NoC links* (threaded
+into :class:`~repro.core.multicore.comm.InterconnectConfig` occupancy so
+degraded routing actually pays), and *flip a transient execute result*
+(modeled as a detected machine-check: the corrupt result is discarded
+and a :class:`TransientFault` raised — never silently returned). The
+:class:`FaultInjector` applies due events before each execute and raises
+a typed fabric error when the executing artifact depends on a resource
+that has died.
+
+**Graceful degradation** — on a :class:`CoreFault` / :class:`LinkFault`
+the server rebuilds the ``vliw-mc`` substrate restricted to the
+surviving physical cores (``allowed_cores`` through the partitioner,
+dead links through the interconnect config — both land in the substrate
+fingerprint, so degraded artifacts are content-addressed like any
+other). When no feasible compile exists the request falls down the
+:data:`FALLBACK_CHAIN` (vliw-mc → vliw-sim → numpy oracle).
+
+**Hardened request path** — per-request deadline, bounded retry with
+exponential backoff, a :class:`CircuitBreaker` per (substrate, semiring)
+with half-open probing, and admission-control backpressure. All failure
+events flow through :mod:`repro.obs` (error spans + ``fault.*``
+counters) and surface in ``Server.stats()["resilience"]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import time
+
+import numpy as np
+
+from ..obs import metrics, trace
+
+__all__ = [
+    "FabricError", "CoreFault", "LinkFault", "TransientFault",
+    "RequestTimeout", "CircuitOpen", "Backpressure", "ResilienceExhausted",
+    "FaultEvent", "FaultPlan", "FabricState", "FaultInjector",
+    "CircuitBreaker", "ResiliencePolicy", "ResilienceManager",
+    "FALLBACK_CHAIN",
+]
+
+
+# --------------------------------------------------------------------------- #
+# typed fabric errors — "honest errors, never silent corruption"
+# --------------------------------------------------------------------------- #
+class FabricError(RuntimeError):
+    """Base of every injected/detected serving-fabric failure."""
+
+
+class CoreFault(FabricError):
+    """A core the executing artifact is placed on has died."""
+
+    def __init__(self, core: int, msg: str | None = None):
+        super().__init__(msg or f"core {core} is dead")
+        self.core = int(core)
+
+
+class LinkFault(FabricError):
+    """A NoC link the executing artifact routes over has died."""
+
+    def __init__(self, link: tuple, msg: str | None = None):
+        super().__init__(msg or f"NoC link {link[0]}->{link[1]} is down")
+        self.link = (int(link[0]), int(link[1]))
+
+
+class TransientFault(FabricError):
+    """One-shot datapath corruption, detected (machine-check) and
+    discarded — a retry on the same artifact heals it."""
+
+
+class RequestTimeout(FabricError):
+    """The per-request deadline elapsed before a healthy answer."""
+
+
+class CircuitOpen(FabricError):
+    """The (substrate, semiring) circuit breaker is open — the request
+    was rejected without touching the failing backend."""
+
+
+class Backpressure(FabricError):
+    """Admission control rejected the request: accepting it would push
+    in-flight rows past the server's ``max_rows`` high-water mark."""
+
+
+class ResilienceExhausted(FabricError):
+    """Retries, degradation and every fallback substrate failed; chains
+    the last real failure (``raise ... from exc``)."""
+
+
+# --------------------------------------------------------------------------- #
+# fault plans
+# --------------------------------------------------------------------------- #
+_SPEC = re.compile(
+    r"^(?:"
+    r"core=(?P<core>\d+)"
+    r"|link=(?P<la>\d+)-(?P<lb>\d+)"
+    r"|slow=(?P<sa>\d+)-(?P<sb>\d+)x(?P<factor>\d+)"
+    r"|(?P<flip>flip)"
+    r")(?:@t(?P<at>\d+))?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fabric fault on the virtual tick clock.
+
+    ``kind``: ``"core"`` (kill ``core``), ``"link"`` (kill ``link`` in
+    both directions), ``"link_slow"`` (serialize ``link`` ``factor``×
+    slower, both directions), ``"flip"`` (corrupt the next hardware
+    execute's result — one-shot). Core/link faults are persistent.
+    """
+    at: int
+    kind: str
+    core: int = -1
+    link: tuple = ()
+    factor: int = 4
+
+    def spec(self) -> str:
+        """The ``serve --inject-faults`` spelling of this event."""
+        if self.kind == "core":
+            body = f"core={self.core}"
+        elif self.kind == "link":
+            body = f"link={self.link[0]}-{self.link[1]}"
+        elif self.kind == "link_slow":
+            body = f"slow={self.link[0]}-{self.link[1]}x{self.factor}"
+        else:
+            body = "flip"
+        return f"{body}@t{self.at}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic, seeded schedule of :class:`FaultEvent`\\ s."""
+
+    events: tuple = ()
+    seed: int = 0
+
+    @classmethod
+    def parse(cls, specs) -> "FaultPlan":
+        """Build a plan from ``core=1@t0``-style spec strings.
+
+        Grammar: ``core=<id>[@t<tick>]``, ``link=<a>-<b>[@t<tick>]``,
+        ``slow=<a>-<b>x<factor>[@t<tick>]``, ``flip[@t<tick>]``; the
+        tick defaults to 0. A single string may carry several
+        comma-separated specs.
+        """
+        if isinstance(specs, str):
+            specs = specs.split(",")
+        events = []
+        for raw in specs:
+            s = raw.strip()
+            if not s:
+                continue
+            m = _SPEC.match(s)
+            if m is None:
+                raise ValueError(
+                    f"bad fault spec {raw!r}; expected core=N[@tT], "
+                    "link=A-B[@tT], slow=A-BxF[@tT] or flip[@tT]")
+            at = int(m.group("at") or 0)
+            if m.group("core") is not None:
+                events.append(FaultEvent(at, "core", core=int(m["core"])))
+            elif m.group("la") is not None:
+                events.append(FaultEvent(
+                    at, "link", link=(int(m["la"]), int(m["lb"]))))
+            elif m.group("sa") is not None:
+                events.append(FaultEvent(
+                    at, "link_slow", link=(int(m["sa"]), int(m["sb"])),
+                    factor=int(m["factor"])))
+            else:
+                events.append(FaultEvent(at, "flip"))
+        return cls(events=tuple(sorted(events, key=lambda e: e.at)))
+
+    @classmethod
+    def random(cls, seed: int, *, n_cores: int, n_events: int = 3,
+               ticks: int = 8, kinds: tuple = ("core", "link",
+                                               "link_slow", "flip")
+               ) -> "FaultPlan":
+        """A reproducible random plan for chaos drills. Never kills the
+        whole machine: at most ``n_cores - 1`` distinct core kills."""
+        rng = np.random.default_rng(seed)
+        events, killed = [], set()
+        for _ in range(n_events):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            at = int(rng.integers(ticks))
+            if kind == "core":
+                alive = [c for c in range(n_cores) if c not in killed]
+                if len(alive) <= 1:
+                    continue
+                core = int(alive[int(rng.integers(len(alive)))])
+                killed.add(core)
+                events.append(FaultEvent(at, "core", core=core))
+            elif kind in ("link", "link_slow"):
+                if n_cores < 2:
+                    continue
+                a, b = rng.choice(n_cores, size=2, replace=False)
+                if kind == "link":
+                    events.append(FaultEvent(at, "link",
+                                             link=(int(a), int(b))))
+                else:
+                    events.append(FaultEvent(
+                        at, "link_slow", link=(int(a), int(b)),
+                        factor=int(rng.integers(2, 9))))
+            else:
+                events.append(FaultEvent(at, "flip"))
+        return cls(events=tuple(sorted(events, key=lambda e: e.at)),
+                   seed=seed)
+
+    def specs(self) -> list:
+        return [e.spec() for e in self.events]
+
+
+# --------------------------------------------------------------------------- #
+# fabric state + injector
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class FabricState:
+    """What is currently broken, in *physical* resource ids."""
+
+    total_cores: int
+    dead_cores: set = dataclasses.field(default_factory=set)
+    dead_links: set = dataclasses.field(default_factory=set)   # directed
+    slow_links: dict = dataclasses.field(default_factory=dict)  # link->factor
+    epoch: int = 0          # bumped on every applied core/link event
+
+    @property
+    def healthy(self) -> list:
+        return [c for c in range(self.total_cores)
+                if c not in self.dead_cores]
+
+    @property
+    def faulty(self) -> bool:
+        return bool(self.dead_cores or self.dead_links or self.slow_links)
+
+    def snapshot(self) -> dict:
+        return {"total_cores": self.total_cores,
+                "healthy_cores": self.healthy,
+                "dead_cores": sorted(self.dead_cores),
+                "dead_links": sorted(self.dead_links),
+                "slow_links": {f"{a}-{b}": f
+                               for (a, b), f in sorted(self.slow_links.items())},
+                "epoch": self.epoch}
+
+
+#: substrates immune to fabric faults (host software, not the modeled
+#: hardware): the oracle must stay trustworthy for parity checking
+_HOST_SUBSTRATES = ("numpy", "leveled-jax", "pallas")
+
+
+class FaultInjector:
+    """Applies a :class:`FaultPlan` on a tick clock of batched executes.
+
+    ``before_execute(artifact)`` advances the clock, applies every due
+    event, and raises :class:`CoreFault` / :class:`LinkFault` when the
+    artifact is placed on a now-dead resource. ``after_execute`` fires
+    an armed ``flip`` as a detected :class:`TransientFault` (one-shot:
+    the immediate retry heals). Host substrates (numpy, leveled-jax,
+    pallas) are immune — they model software, not the fabric.
+    """
+
+    def __init__(self, plan: FaultPlan, n_cores: int):
+        self.plan = plan
+        self.state = FabricState(total_cores=max(int(n_cores), 1))
+        self.tick = 0
+        self._pending = sorted(plan.events, key=lambda e: e.at)
+        self._armed_flips = 0
+        self.applied: list = []          # [(tick, spec), ...]
+
+    # -- clock ---------------------------------------------------------- #
+    def _apply_due(self) -> None:
+        st = self.state
+        while self._pending and self._pending[0].at <= self.tick:
+            ev = self._pending.pop(0)
+            if ev.kind == "core":
+                if len(st.healthy) > 1:     # never kill the last core
+                    st.dead_cores.add(ev.core % st.total_cores)
+                    st.epoch += 1
+                    metrics.counter("fault.injected.core").inc()
+            elif ev.kind == "link":
+                a, b = ev.link
+                st.dead_links.update({(a, b), (b, a)})
+                st.epoch += 1
+                metrics.counter("fault.injected.link").inc()
+            elif ev.kind == "link_slow":
+                a, b = ev.link
+                f = max(int(ev.factor), 2)
+                st.slow_links[(a, b)] = f
+                st.slow_links[(b, a)] = f
+                st.epoch += 1
+                metrics.counter("fault.injected.link_slow").inc()
+            else:                           # flip
+                self._armed_flips += 1
+                metrics.counter("fault.injected.flip").inc()
+            self.applied.append((self.tick, ev.spec()))
+            trace.instant("fault.inject", {"tick": self.tick,
+                                           "event": ev.spec()})
+        metrics.gauge("fault.healthy_cores").set(len(st.healthy))
+
+    # -- artifact resource footprint ------------------------------------ #
+    @staticmethod
+    def _footprint(artifact) -> tuple[set, set]:
+        """(cores, directed links) the artifact's execution occupies."""
+        if artifact.substrate in _HOST_SUBSTRATES:
+            return set(), set()
+        mc = artifact.meta.get("multicore")
+        if mc is None:          # single-core VLIW machine: core 0
+            return {0}, set()
+        return (set(int(c) for c in mc.get("core_labels", [])),
+                {(int(a), int(b)) for a, b in mc.get("links_used", [])})
+
+    # -- hooks ---------------------------------------------------------- #
+    def before_execute(self, artifact) -> None:
+        self.tick += 1
+        self._apply_due()
+        cores, links = self._footprint(artifact)
+        hit_cores = cores & self.state.dead_cores
+        if hit_cores:
+            core = min(hit_cores)
+            metrics.counter("fault.core_faults").inc()
+            raise CoreFault(core, f"core {core} died under artifact "
+                            f"{artifact.substrate}/{artifact.semiring}")
+        hit_links = links & self.state.dead_links
+        if hit_links:
+            link = min(hit_links)
+            metrics.counter("fault.link_faults").inc()
+            raise LinkFault(link, f"NoC link {link[0]}->{link[1]} died "
+                            f"under artifact {artifact.substrate}/"
+                            f"{artifact.semiring}")
+
+    def after_execute(self, artifact, values) -> None:
+        if self._armed_flips and artifact.substrate not in _HOST_SUBSTRATES:
+            self._armed_flips -= 1
+            metrics.counter("fault.transients").inc()
+            raise TransientFault(
+                "transient datapath corruption detected (machine check) "
+                f"on {artifact.substrate}; result discarded")
+
+
+# --------------------------------------------------------------------------- #
+# circuit breaker
+# --------------------------------------------------------------------------- #
+class CircuitBreaker:
+    """Consecutive-failure breaker with half-open probing.
+
+    Closed → (``threshold`` consecutive failures) → open; after
+    ``cooldown_s`` the next ``allow()`` transitions to half-open and
+    admits exactly one probe. Probe success re-closes, probe failure
+    re-opens and restarts the cooldown. ``clock`` is injectable for
+    deterministic tests.
+    """
+
+    def __init__(self, threshold: int = 5, cooldown_s: float = 30.0,
+                 clock=time.monotonic):
+        self.threshold = max(int(threshold), 1)
+        self.cooldown_s = float(cooldown_s)
+        self.clock = clock
+        self.state = "closed"
+        self.failures = 0
+        self.opened_at = 0.0
+        self.trips = 0
+
+    def allow(self) -> bool:
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            if self.clock() - self.opened_at >= self.cooldown_s:
+                self.state = "half-open"
+                return True          # the probe
+            return False
+        return False                 # half-open: probe already in flight
+
+    def record_success(self) -> None:
+        self.state = "closed"
+        self.failures = 0
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        if self.state == "half-open" or self.failures >= self.threshold:
+            if self.state != "open":
+                self.trips += 1
+                metrics.counter("fault.breaker_trips").inc()
+            self.state = "open"
+            self.opened_at = self.clock()
+
+
+# --------------------------------------------------------------------------- #
+# policy + manager
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ResiliencePolicy:
+    """Knobs of the hardened request path (all deterministic)."""
+
+    timeout_s: float = 30.0          # per-request deadline
+    max_attempts: int = 3            # per substrate in the chain
+    backoff_s: float = 0.02          # first retry sleep
+    backoff_mult: float = 2.0        # exponential growth
+    breaker_threshold: int = 5
+    breaker_cooldown_s: float = 30.0
+    fallback: bool = True            # walk FALLBACK_CHAIN on hard failure
+
+
+#: substrate fallback chain walked when recompilation is infeasible or a
+#: backend keeps failing — ending at the numpy oracle, which is host
+#: software and immune to fabric faults
+FALLBACK_CHAIN = {
+    "vliw-mc": ("vliw-sim", "numpy"),
+    "vliw-sim": ("numpy",),
+    "pallas": ("numpy",),
+    "leveled-jax": ("numpy",),
+}
+
+
+class ResilienceManager:
+    """Per-server resilience bookkeeping: breakers, fabric state,
+    degradation history, fallback routing. The Server owns the actual
+    orchestration (it holds the substrates and the cache); this object
+    holds the state and the decisions."""
+
+    def __init__(self, policy: ResiliencePolicy | None = None,
+                 n_cores: int = 1,
+                 injector: FaultInjector | None = None,
+                 clock=time.monotonic, sleep=time.sleep):
+        self.policy = policy or ResiliencePolicy()
+        self.injector = injector
+        self.state = (injector.state if injector is not None
+                      else FabricState(total_cores=max(int(n_cores), 1)))
+        self.clock = clock
+        self.sleep = sleep
+        self._breakers: dict = {}
+        #: substrate name -> substitute serving name (after hard failure)
+        self.redirects: dict = {}
+        #: chronological degradation / fallback records
+        self.history: list = []
+
+    # -- breakers -------------------------------------------------------- #
+    def breaker(self, substrate: str, semiring: str) -> CircuitBreaker:
+        key = (substrate, semiring)
+        br = self._breakers.get(key)
+        if br is None:
+            br = self._breakers[key] = CircuitBreaker(
+                self.policy.breaker_threshold,
+                self.policy.breaker_cooldown_s, clock=self.clock)
+        return br
+
+    # -- chain ----------------------------------------------------------- #
+    def chain(self, substrate: str, available) -> list:
+        """The substrate itself plus its enabled fallbacks, in order."""
+        names = [substrate]
+        if self.policy.fallback:
+            names += [n for n in FALLBACK_CHAIN.get(substrate, ())
+                      if n in available]
+        return names
+
+    # -- degradation ------------------------------------------------------ #
+    def degraded_substrate(self, sub, alive=None):
+        """A replacement substrate instance for the current fabric state
+        (``None`` when the substrate cannot repartition). ``alive``
+        overrides the surviving-core set (used while descending)."""
+        if not hasattr(sub, "degraded"):
+            return None
+        alive = list(self.state.healthy if alive is None else alive)
+        if not alive:
+            return None
+        return sub.degraded(
+            tuple(alive),
+            dead_links=tuple(sorted(self.state.dead_links)),
+            slow_links=tuple((a, b, f) for (a, b), f
+                             in sorted(self.state.slow_links.items())))
+
+    def record(self, kind: str, **info) -> None:
+        entry = {"kind": kind,
+                 "tick": self.injector.tick if self.injector else 0,
+                 **info}
+        self.history.append(entry)
+        trace.instant("fault." + kind, entry)
+        metrics.gauge("fault.degraded").set(
+            1.0 if (self.state.dead_cores or self.state.dead_links
+                    or self.redirects) else 0.0)
+
+    # -- introspection ---------------------------------------------------- #
+    def stats(self) -> dict:
+        return {
+            "enabled": self.injector is not None,
+            "tick": self.injector.tick if self.injector else 0,
+            "fabric": self.state.snapshot(),
+            "plan": (self.injector.plan.specs()
+                     if self.injector else []),
+            "applied": list(self.injector.applied) if self.injector else [],
+            "breakers": {f"{s}/{q}": {"state": b.state,
+                                      "failures": b.failures,
+                                      "trips": b.trips}
+                         for (s, q), b in sorted(self._breakers.items())},
+            "redirects": dict(self.redirects),
+            "history": list(self.history),
+        }

@@ -28,13 +28,18 @@ import weakref
 import numpy as np
 
 from ..core import program as program_mod
+from ..core.multicore.comm import LinkDownError
 from ..core.processor.config import PTREE, ProcessorConfig
 from ..core.spn import SPN
 from ..obs import metrics, trace
 from .batcher import MicroBatcher, PendingResult
 from .cache import ArtifactCache
-from .substrates import (LANE, QUERIES, Artifact, Substrate, canonical,
-                         make_substrate)
+from .resilience import (Backpressure, CircuitOpen, CoreFault, FabricError,
+                         FaultInjector, FaultPlan, LinkFault,
+                         RequestTimeout, ResilienceExhausted,
+                         ResilienceManager, ResiliencePolicy, TransientFault)
+from .substrates import (LANE, QUERIES, SEMIRING_OF_QUERY, Artifact,
+                         Substrate, canonical, make_substrate)
 
 DEFAULT_SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim",
                       "vliw-mc")
@@ -59,7 +64,9 @@ class Server:
                  autotune_seed: int = 0,
                  cache_capacity: int = 32,
                  batch_tile: int = LANE,
-                 max_rows: int = 4096):
+                 max_rows: int = 4096,
+                 faults=None,
+                 resilience: ResiliencePolicy | None = None):
         if prog is None:
             if spn is None:
                 raise ValueError("need an SPN or a lowered TensorProgram")
@@ -85,6 +92,20 @@ class Server:
             for n in names}
         self._batchers: weakref.WeakKeyDictionary[Artifact, MicroBatcher] = \
             weakref.WeakKeyDictionary()
+        # ---- resilience layer (see repro.runtime.resilience) ----------
+        # ``faults`` injects a deterministic FaultPlan (a plan object,
+        # one spec string, or a list of spec strings); ``resilience``
+        # overrides the retry/timeout/breaker policy. The manager is
+        # always present (breaker bookkeeping is cheap); hardened
+        # admission control only engages when either knob is set, so a
+        # plain Server behaves exactly as before.
+        if faults is not None and not isinstance(faults, FaultPlan):
+            faults = FaultPlan.parse(faults)
+        self._injector = (FaultInjector(faults, cores)
+                          if faults is not None else None)
+        self._hardened = faults is not None or resilience is not None
+        self.resilience = ResilienceManager(
+            resilience, n_cores=cores, injector=self._injector)
 
     # ---------------- compilation ----------------------------------------- #
     def substrate(self, name: str) -> Substrate:
@@ -109,8 +130,9 @@ class Server:
             # value would pin its own key and the WeakKeyDictionary could
             # never release evicted artifacts (payloads included)
             aref = weakref.ref(art)
+            inj = self._injector
 
-            def _execute(leaves, _s=sub, _r=aref):
+            def _execute(leaves, _s=sub, _r=aref, _inj=inj):
                 a = _r()
                 # an execute failure is recorded as an error span (the
                 # exception type lands in the span attrs) and counted —
@@ -120,14 +142,22 @@ class Server:
                         lambda: {"rows": int(leaves.shape[0]),
                                  "semiring": a.semiring}):
                     try:
-                        return _s.execute(a, leaves)
+                        if _inj is not None:
+                            _inj.before_execute(a)
+                        values = _s.execute(a, leaves)
+                        if _inj is not None:
+                            _inj.after_execute(a, values)
+                        return values
                     except Exception:
                         metrics.counter("serve.errors").inc()
                         raise
 
+            # split-retry only under fault injection: the classic
+            # fail-the-whole-batch contract (and its errored batch.flush
+            # span) is what healthy servers and their tests rely on
             batcher = MicroBatcher(
                 _execute, tile=sub.pad_tile(art.batch_tile),
-                max_rows=self.max_rows)
+                max_rows=self.max_rows, split_retry=inj is not None)
             self._batchers[art] = batcher
         return batcher
 
@@ -141,6 +171,20 @@ class Server:
         value of the query's program on the chosen substrate.
         """
         x = np.atleast_2d(x)
+        if self._hardened:
+            # admission control: a single request larger than the
+            # high-water mark can never be served atomically — reject it
+            # honestly; and drain queued in-flight rows before admitting
+            # work that would push past the mark
+            rows = int(x.shape[0])
+            if rows > self.max_rows:
+                metrics.counter("fault.backpressure").inc()
+                raise Backpressure(
+                    f"request of {rows} rows exceeds the server's "
+                    f"max_rows={self.max_rows} admission limit")
+            queued = sum(b._queued_rows for b in self._batchers.values())
+            if queued and queued + rows > self.max_rows:
+                self.flush()
         # one root span per request: a fresh trace id is minted here and
         # propagated via PendingResult into the batch-flush span, so a
         # coalesced execution is attributable to every member request
@@ -169,18 +213,155 @@ class Server:
               substrate: str = "leveled-jax") -> np.ndarray:
         """Synchronous submit + flush: (batch,) root log values.
 
+        The request path is *hardened*: bounded retry with exponential
+        backoff on transient faults, degraded-mode recompilation on
+        core/link faults, substrate fallback (vliw-mc → vliw-sim →
+        numpy) when recompilation is infeasible, a circuit breaker per
+        (substrate, semiring), and a per-request deadline. Non-fabric
+        exceptions (software bugs, bad input) propagate unchanged —
+        hardening never masks a real error, and on a healthy fabric the
+        behaviour is identical to the classic path.
+
         End-to-end latency (admission through execute) is observed into
         the per-substrate ``serve.latency_us.<name>`` histogram — the
         p50/p95/p99 source for ``Server.stats()["metrics"]`` and
         ``BENCH_serve.json``.
         """
         t0 = time.perf_counter()
-        pending = self.submit(x, query, substrate)
-        values = pending.result()
+        name = canonical(substrate)
+        values = self._query_resilient(x, query, name, t0)
         metrics.histogram(
-            "serve.latency_us." + canonical(substrate)).observe(
+            "serve.latency_us." + name).observe(
             (time.perf_counter() - t0) * 1e6)
         return values
+
+    def query_once(self, x: np.ndarray, query: str = "joint",
+                   substrate: str = "leveled-jax") -> np.ndarray:
+        """One direct submit + result on exactly the named substrate —
+        no retry, no fallback, no breaker. :func:`verify_parity` uses
+        this so a faulty substrate can never hide behind the oracle
+        fallback and compare the oracle against itself."""
+        return self.submit(x, query, substrate).result()
+
+    # ---------------- resilient dispatch ----------------------------------- #
+    def _query_resilient(self, x: np.ndarray, query: str, name: str,
+                         t0: float) -> np.ndarray:
+        mgr = self.resilience
+        pol = mgr.policy
+        deadline = t0 + pol.timeout_s
+        serving = mgr.redirects.get(name, name)
+        semiring = SEMIRING_OF_QUERY.get(query, query)
+        last_exc: Exception | None = None
+        attempted = False
+        for target in mgr.chain(serving, self.substrates):
+            breaker = mgr.breaker(target, semiring)
+            if not breaker.allow():
+                metrics.counter("fault.breaker_rejects").inc()
+                last_exc = CircuitOpen(
+                    f"circuit breaker open for {target}/{semiring}")
+                continue
+            backoff = pol.backoff_s
+            attempt = 0
+            while attempt < pol.max_attempts:
+                attempt += 1
+                if time.perf_counter() > deadline:
+                    metrics.counter("fault.timeouts").inc()
+                    raise RequestTimeout(
+                        f"request exceeded its {pol.timeout_s:.3f}s "
+                        "deadline") from last_exc
+                try:
+                    values = self.submit(x, query, target).result()
+                except (CoreFault, LinkFault) as exc:
+                    last_exc, attempted = exc, True
+                    breaker.record_failure()
+                    mgr.record("fabric_fault", substrate=target,
+                               error=f"{type(exc).__name__}: {exc}")
+                    if self._degrade(target, query):
+                        continue        # retry on the degraded substrate
+                    break               # cannot degrade → walk the chain
+                except TransientFault as exc:
+                    last_exc, attempted = exc, True
+                    breaker.record_failure()
+                    metrics.counter("fault.retries").inc()
+                    if attempt < pol.max_attempts and backoff > 0:
+                        mgr.sleep(backoff)
+                        backoff *= pol.backoff_mult
+                    continue            # one-shot: the retry heals it
+                except Backpressure:
+                    raise               # the caller must shed load
+                except FabricError as exc:
+                    last_exc, attempted = exc, True
+                    breaker.record_failure()
+                    break
+                except (ValueError, TypeError):
+                    raise               # client error: not the fabric's
+                except Exception:
+                    # non-fabric: a software bug — honest propagation of
+                    # the original exception, unretried and unmasked
+                    breaker.record_failure()
+                    raise
+                breaker.record_success()
+                if target != name:
+                    metrics.counter("fault.fallbacks").inc()
+                    if last_exc is not None:
+                        if isinstance(last_exc, (CoreFault, LinkFault)):
+                            # the requested backend's hardware is gone —
+                            # route future requests straight here
+                            mgr.redirects[name] = target
+                        mgr.record("fallback", requested=name,
+                                   served=target,
+                                   error=(f"{type(last_exc).__name__}: "
+                                          f"{last_exc}"))
+                return values
+        if not attempted and last_exc is not None:
+            raise last_exc              # e.g. every breaker open
+        raise ResilienceExhausted(
+            f"substrate {name!r} ({query}) failed after retries, "
+            "degradation and fallback") from last_exc
+
+    def _degrade(self, name: str, query: str) -> bool:
+        """Recompile substrate ``name`` for the surviving fabric.
+
+        Descends on infeasibility: starts from every healthy core and
+        drops the highest-numbered survivor until the comm plan routes
+        around the dead links (one core has no routes, so the descent
+        always terminates at a feasible compile — or the substrate
+        cannot degrade at all and the caller falls down the chain).
+        Swaps the serving substrate in place on success; the degraded
+        artifact is content-addressed like any other (``/alive=``,
+        ``/dead=`` fingerprint suffixes) and annotated with
+        ``meta["degraded"]``.
+        """
+        mgr = self.resilience
+        sub = self.substrates.get(name)
+        if sub is None:
+            return False
+        alive = list(mgr.state.healthy)
+        while alive:
+            cand = mgr.degraded_substrate(sub, alive)
+            if cand is None:
+                return False            # substrate cannot repartition
+            try:
+                with trace.span("fault.degrade",
+                                lambda: {"substrate": name,
+                                         "alive": list(alive)}):
+                    art = self.cache.get_or_compile(
+                        cand, self.prog, query=query, log_domain=True,
+                        batch_tile=self.batch_tile)
+            except LinkDownError:
+                alive = alive[:-1]      # fewer cores ⇒ fewer routes
+                continue
+            except Exception:
+                return False
+            art.meta["degraded"] = dict(
+                mgr.state.snapshot(), substrate=name,
+                from_cores=self._cores, to_cores=len(alive))
+            metrics.counter("fault.degraded_compiles").inc()
+            self.substrates[name] = cand
+            mgr.record("degrade", substrate=name, alive=list(alive),
+                       fingerprint=cand.config_fingerprint())
+            return True
+        return False
 
     # ---------------- introspection ---------------------------------------- #
     def stats(self) -> dict:
@@ -195,54 +376,61 @@ class Server:
                "padded_rows": 0,
                "batchers": {},
                "multicore": {},
-               "autotune": {}}
+               "autotune": {},
+               "resilience": self.resilience.stats()}
         for art, b in self._batchers.items():
             out["batchers"][f"{art.semiring}/{art.substrate}"] = dict(
                 b.stats, pad_waste=round(b.pad_waste, 4))
             out["padded_rows"] += b.stats["padded_rows"]
-        # per-core utilization / communication / barrier accounting of
-        # every resident multi-core artifact (calibrated at compile time)
+        # ONE materialized pass over the resident artifacts (safe
+        # against concurrent eviction — see ArtifactCache.artifacts)
+        # feeds the multicore, autotune and degraded-artifact sections
+        degraded: dict = {}
         for art in self.cache.artifacts():
+            key = f"{art.semiring}/{art.substrate}"
+            # per-core utilization / communication / barrier accounting
+            # of multi-core artifacts (calibrated at compile time)
             mc = art.meta.get("multicore")
-            if not mc:
-                continue
-            cycles = max(int(mc["cycles"]), 1)
-            ops = mc["core_ops"]
-            peak = self._processor.num_pes
-            out["multicore"][f"{art.semiring}/{art.substrate}"] = {
-                "cores": mc["effective_cores"],
-                "cycles": mc["cycles"],
-                "core_utilization": [round(o / cycles / peak, 4)
-                                     for o in ops],
-                "comm_values_per_batch": mc["comm"]["values"],
-                "comm_rows": mc["comm"]["rows"],
-                "stall_cycles": mc["stall_cycles"],
-                "barrier_idle_cycles": mc["barrier_idle"],
-                "cut_values": mc["cut_values"],
-                # NoC accounting (all zeros under the ideal crossbar)
-                "topology": mc.get("topology", "xbar"),
-                "hop_cut": mc.get("hop_cut", mc["cut_values"]),
-                "busiest_link_occupancy":
-                    mc["comm"].get("busiest_link_occupancy", 0.0),
-                "link_stall_cycles":
-                    mc["comm"].get("link_stall_cycles", 0),
-                "inject_stall_cycles":
-                    mc["comm"].get("inject_stall_cycles", 0),
-            }
-        # per-artifact autotune outcomes: winning config, tuned vs
-        # default cycles/eval, and the core-count fallback decisions
-        for art in self.cache.artifacts():
+            if mc:
+                cycles = max(int(mc["cycles"]), 1)
+                ops = mc["core_ops"]
+                peak = self._processor.num_pes
+                out["multicore"][key] = {
+                    "cores": mc["effective_cores"],
+                    "cycles": mc["cycles"],
+                    "core_utilization": [round(o / cycles / peak, 4)
+                                         for o in ops],
+                    "comm_values_per_batch": mc["comm"]["values"],
+                    "comm_rows": mc["comm"]["rows"],
+                    "stall_cycles": mc["stall_cycles"],
+                    "barrier_idle_cycles": mc["barrier_idle"],
+                    "cut_values": mc["cut_values"],
+                    # NoC accounting (all zeros under the ideal crossbar)
+                    "topology": mc.get("topology", "xbar"),
+                    "hop_cut": mc.get("hop_cut", mc["cut_values"]),
+                    "busiest_link_occupancy":
+                        mc["comm"].get("busiest_link_occupancy", 0.0),
+                    "link_stall_cycles":
+                        mc["comm"].get("link_stall_cycles", 0),
+                    "inject_stall_cycles":
+                        mc["comm"].get("inject_stall_cycles", 0),
+                }
+            # autotune outcomes: winning config, tuned vs default
+            # cycles/eval, and the core-count fallback decisions
             tune = art.meta.get("autotune")
             decision = art.meta.get("core_decision")
-            if tune is None and decision is None:
-                continue
-            entry: dict = {}
-            if tune is not None:
-                entry.update(tune)
-                entry["interleave"] = art.meta.get("interleave", 1)
-            if decision is not None:
-                entry["core_decision"] = decision
-            out["autotune"][f"{art.semiring}/{art.substrate}"] = entry
+            if tune is not None or decision is not None:
+                entry: dict = {}
+                if tune is not None:
+                    entry.update(tune)
+                    entry["interleave"] = art.meta.get("interleave", 1)
+                if decision is not None:
+                    entry["core_decision"] = decision
+                out["autotune"][key] = entry
+            if art.meta.get("degraded") is not None:
+                degraded[key] = art.meta["degraded"]
+        if degraded:
+            out["resilience"]["degraded_artifacts"] = degraded
         return out
 
 
@@ -253,20 +441,38 @@ def verify_parity(server: Server, x: np.ndarray, *, query: str = "marginal",
 
     Returns ``{substrate: max_abs_deviation}`` (fast-vs-checked VLIW
     conformance reported as ``vliw-sim/checked``, compared bit-exactly).
-    Raises :class:`ParityError` on any disagreement.
+    Raises :class:`ParityError` on any disagreement — and also when a
+    substrate's execute *throws*: a failing backend is a parity failure,
+    reported as a typed error (chaining the real cause) instead of a
+    hang or a bare crash. Queries go through :meth:`Server.query_once`,
+    the direct non-resilient path, so a faulty substrate can never hide
+    behind the fallback chain and compare the oracle against itself.
     """
     if query not in QUERIES:
         raise ValueError(f"unknown query {query!r}")
     names = tuple(canonical(n) for n in (substrates or server.substrates))
     x = np.atleast_2d(x)
+
+    def run(name: str, fn, what: str):
+        try:
+            return fn()
+        except ParityError:
+            raise
+        except Exception as exc:
+            raise ParityError(
+                f"substrate {name!r} failed to {what}: "
+                f"{type(exc).__name__}: {exc}") from exc
+
     if "numpy" in server.substrates:
-        ref = server.query(x, query, "numpy")
+        ref = run("numpy", lambda: server.query_once(x, query, "numpy"),
+                  "execute")
     else:   # the oracle is the point of the check — build one on demand
         oracle = make_substrate("numpy")
         art = server.cache.get_or_compile(
             oracle, server.prog, query=query, log_domain=True,
             batch_tile=server.batch_tile)
-        ref = oracle.execute(art, art.prog.leaves_from_evidence(x))
+        ref = run("numpy", lambda: oracle.execute(
+            art, art.prog.leaves_from_evidence(x)), "execute")
     devs: dict[str, float] = {}
 
     def against_ref(name: str, vals: np.ndarray) -> None:
@@ -281,7 +487,8 @@ def verify_parity(server: Server, x: np.ndarray, *, query: str = "marginal",
         if name == "numpy":
             devs[name] = 0.0
             continue
-        vals = server.query(x, query, name)
+        vals = run(name, lambda: server.query_once(x, query, name),
+                   "execute")
         against_ref(name, vals)
         sub = server.substrate(name)
         if hasattr(sub, "execute_checked"):
@@ -289,8 +496,9 @@ def verify_parity(server: Server, x: np.ndarray, *, query: str = "marginal",
             # bit-identical to the cycle-accurate checked simulator
             art = server.artifact(query, name)
             leaves = art.prog.leaves_from_evidence(np.atleast_2d(x))
-            checked = sub.execute_checked(art, leaves)
-            fast = sub.execute(art, leaves)
+            checked = run(name, lambda: sub.execute_checked(art, leaves),
+                          "execute (checked sim)")
+            fast = run(name, lambda: sub.execute(art, leaves), "execute")
             if not np.array_equal(checked, fast):
                 raise ParityError(
                     f"{name} fast-sim root values are not bit-identical "

@@ -323,7 +323,8 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
                  seed: int = 0, strategy: str = "subtree",
                  eta_iters: int = 2, placement: str = "aware",
                  autotune: str | None = None, autotune_seed: int = 0,
-                 tune_config=None) -> None:
+                 tune_config=None,
+                 allowed_cores: tuple | None = None) -> None:
         super().__init__(processor)
         if cores < 1:
             raise ValueError(f"cores must be >= 1, got {cores}")
@@ -340,6 +341,19 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
         self.autotune = mode
         self.autotune_seed = autotune_seed
         self.tune_config = tune_config    # explicit TuneConfig (tests)
+        # degraded mode: restrict compiles to the surviving physical
+        # core subset (None / the full set = the healthy machine)
+        if allowed_cores is not None:
+            alive = tuple(sorted({int(c) for c in allowed_cores}))
+            if alive == tuple(range(cores)):
+                alive = None
+            elif alive and (alive[0] < 0 or alive[-1] >= cores):
+                raise ValueError(f"allowed_cores {alive} outside the "
+                                 f"{cores}-core machine")
+            elif not alive:
+                raise ValueError("allowed_cores must name at least one core")
+            allowed_cores = alive
+        self.allowed_cores = allowed_cores
 
     def config_fingerprint(self) -> str:
         fp = (f"{self.processor.name}/cores={self.cores}"
@@ -352,7 +366,26 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
             fp += f"/tune={self.autotune}:{self.autotune_seed}"
         if self.tune_config is not None:
             fp += f"/cfg={self.tune_config.fingerprint()}"
+        if self.allowed_cores is not None:
+            fp += "/alive=" + ".".join(str(c) for c in self.allowed_cores)
         return fp
+
+    def degraded(self, alive, dead_links=(), slow_links=()):
+        """A new substrate instance targeting the surviving fabric.
+
+        ``alive`` are the physical core ids still serving; dead/slow
+        links are merged into the interconnect config (so they show in
+        the fingerprint → distinct cache key, and routing avoids them).
+        Autotuning is intentionally dropped: degraded artifacts compile
+        the plain comm-aware pipeline.
+        """
+        return type(self)(
+            processor=self.processor, cores=self.cores,
+            interconnect=self.interconnect.degraded(
+                dead_links=dead_links, slow_links=slow_links),
+            seed=self.seed, strategy=self.strategy,
+            eta_iters=self.eta_iters, placement=self.placement,
+            allowed_cores=tuple(alive))
 
     def _resolve_tuning(self, prog):
         """The TuneConfig to compile with, or (None, None) when untuned.
@@ -382,27 +415,43 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
         return result.config, dict(result.summary(), mode=self.autotune)
 
     def _build(self, prog, log_domain, batch_tile):
-        tc, tune_summary = self._resolve_tuning(prog)
+        alive = self.allowed_cores
+        # degraded compiles never autotune: degraded mode optimizes for
+        # serving *at all* on the surviving fabric, not the last cycle,
+        # and the tuner's probe machine would not see the faults anyway
+        tc, tune_summary = ((None, None) if alive is not None
+                            else self._resolve_tuning(prog))
         if tc is not None:
             return self._build_tuned(prog, tc, tune_summary)
         mcp = multicore.compile_multicore(
             prog, self.processor, self.cores, self.interconnect,
             seed=self.seed, strategy=self.strategy,
-            eta_iters=self.eta_iters, placement=self.placement)
+            eta_iters=self.eta_iters, placement=self.placement,
+            allowed_cores=alive)
         decision = {"requested": self.cores, "chosen": self.cores,
                     "reason": "multicore"}
-        if self.cores > 1:
+        if alive is not None:
+            decision.update(chosen=len(alive), reason="degraded",
+                            alive=list(alive))
+        if self.cores > 1 and (alive is None or len(alive) > 1):
             # cheap single-core probe: when SEND/RECV overhead makes the
             # partitioned program *slower* than one core (tiny SPNs),
             # serve the single-core compile instead of paying comm for a
-            # slowdown — and record the decision either way
+            # slowdown — and record the decision either way (degraded
+            # machines probe one *surviving* core: no routes, so always
+            # feasible even with dead links)
             single = multicore.compile_multicore(
-                prog, self.processor, 1, self.interconnect, eta_iters=0)
+                prog, self.processor,
+                1 if alive is None else self.cores, self.interconnect,
+                eta_iters=0,
+                allowed_cores=None if alive is None else (alive[0],))
             decision["single_core_cycles"] = single.meta["cycles"]
             decision["multicore_cycles"] = mcp.meta["cycles"]
             if single.meta["cycles"] < mcp.meta["cycles"]:
                 mcp = single
-                decision.update(chosen=1, reason="single-core-fallback")
+                decision.update(
+                    chosen=1, reason="single-core-fallback"
+                    if alive is None else "degraded-single-core")
         dense = multicore.decode_multicore(mcp, cycles=mcp.meta["cycles"])
         meta = {"cycles": mcp.meta["cycles"],
                 "ops_per_cycle": mcp.meta["ops_per_cycle"],

@@ -1,0 +1,369 @@
+"""Fault-tolerant serving fabric: deterministic fault plans, the
+injector tick clock, circuit-breaker state machine, hardened request
+path (retry / degrade / fallback / backpressure), batcher rejection +
+split-retry, and the chaos-drill sweep — every answer under injected
+faults is either bit-consistent with the numpy oracle or a *typed*
+fabric error; never a hang, never silent corruption."""
+import types
+
+import numpy as np
+import pytest
+
+from repro.obs import metrics
+from repro.runtime import (Backpressure, CircuitBreaker, CoreFault,
+                           FabricError, FailureInjector, FaultEvent,
+                           FaultInjector, FaultPlan, MicroBatcher,
+                           ParityError, ResilienceExhausted,
+                           ResiliencePolicy, RestartPolicy, Server,
+                           TrainingAborted, TransientFault,
+                           run_with_restarts, verify_parity)
+from repro.runtime.fault import Heartbeat, Watchdog
+
+
+def _mask(num_vars, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, 2, (n, num_vars))
+    X[rng.random(X.shape) < 0.3] = -1
+    return X
+
+
+def _art(substrate="vliw-sim", meta=None):
+    """Minimal artifact stand-in: the injector only reads these attrs."""
+    return types.SimpleNamespace(substrate=substrate, semiring="sum",
+                                 meta=meta or {})
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+def test_fault_plan_parse_roundtrip():
+    plan = FaultPlan.parse("core=1@t3, link=0-2, slow=1-3x4@t2, flip@t5")
+    assert plan.specs() == ["link=0-2@t0", "slow=1-3x4@t2",
+                            "core=1@t3", "flip@t5"]      # sorted by tick
+    assert FaultPlan.parse(plan.specs()).events == plan.events
+
+
+def test_fault_plan_parse_rejects_garbage():
+    for bad in ("core=x", "link=1", "slow=1-2", "core=1@z9", "nuke"):
+        with pytest.raises(ValueError, match="bad fault spec"):
+            FaultPlan.parse(bad)
+
+
+def test_fault_plan_random_deterministic_and_survivable():
+    a = FaultPlan.random(7, n_cores=4)
+    assert a.specs() == FaultPlan.random(7, n_cores=4).specs()
+    # a core-kill-only plan can never schedule the whole machine dead
+    plan = FaultPlan.random(0, n_cores=2, n_events=10, kinds=("core",))
+    assert len({e.core for e in plan.events}) <= 1
+
+
+# ---------------------------------------------------------------------------
+# injector: tick clock, footprints, immunity
+# ---------------------------------------------------------------------------
+def test_injector_kills_core_and_spares_host_substrates():
+    inj = FaultInjector(FaultPlan.parse("core=0@t0"), n_cores=2)
+    inj.before_execute(_art("numpy"))           # oracle is immune
+    assert inj.state.dead_cores == {0}
+    with pytest.raises(CoreFault) as ei:
+        inj.before_execute(_art("vliw-sim"))    # single-core ⇒ core 0
+    assert ei.value.core == 0
+    # a multicore artifact placed off the dead core is unaffected
+    inj.before_execute(_art("vliw-mc", meta={
+        "multicore": {"core_labels": [1], "links_used": []}}))
+
+
+def test_injector_never_kills_last_core():
+    inj = FaultInjector(FaultPlan.parse("core=0@t0,core=1@t1"), n_cores=2)
+    inj.before_execute(_art("numpy"))
+    inj.before_execute(_art("numpy"))
+    assert inj.state.dead_cores == {0}          # second kill refused
+    assert inj.state.healthy == [1]
+
+
+def test_injector_flip_is_one_shot_and_detected():
+    inj = FaultInjector(FaultPlan.parse("flip@t0"), n_cores=1)
+    art = _art("vliw-sim")
+    inj.before_execute(art)
+    with pytest.raises(TransientFault):
+        inj.after_execute(art, np.zeros(1))     # detected, discarded
+    inj.after_execute(art, np.zeros(1))         # the retry heals
+    # host substrates never consume (or suffer) a flip
+    inj2 = FaultInjector(FaultPlan.parse("flip@t0"), n_cores=1)
+    inj2.before_execute(_art("numpy"))
+    inj2.after_execute(_art("numpy"), np.zeros(1))
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker (deterministic fake clock)
+# ---------------------------------------------------------------------------
+def test_circuit_breaker_state_machine():
+    now = [0.0]
+    br = CircuitBreaker(threshold=2, cooldown_s=10.0, clock=lambda: now[0])
+    assert br.allow() and br.state == "closed"
+    br.record_failure()
+    assert br.allow()                           # below threshold
+    br.record_failure()
+    assert br.state == "open" and br.trips == 1
+    assert not br.allow()                       # cooling down
+    now[0] = 10.0
+    assert br.allow() and br.state == "half-open"
+    assert not br.allow()                       # one probe only
+    br.record_failure()                         # probe failed → re-open
+    assert br.state == "open" and br.trips == 2
+    now[0] = 20.0
+    assert br.allow()
+    br.record_success()                         # probe healed → closed
+    assert br.state == "closed" and br.failures == 0 and br.allow()
+
+
+# ---------------------------------------------------------------------------
+# batcher: rejection + split-retry
+# ---------------------------------------------------------------------------
+def test_pending_rejected_with_original_exception():
+    boom = RuntimeError("flaky backend")
+
+    def execute(rows):
+        raise boom
+
+    mb = MicroBatcher(execute)
+    p1 = mb.submit(np.ones((2, 4)))
+    p2 = mb.submit(np.ones((1, 4)))
+    with pytest.raises(RuntimeError, match="flaky backend"):
+        mb.flush()
+    # every member resolved with the ORIGINAL exception — no hangs
+    assert p1.ready() and p2.ready()
+    assert p1.exception() is boom and p2.exception() is boom
+    with pytest.raises(RuntimeError, match="flaky backend"):
+        p1.result()
+
+
+def test_split_retry_saves_nonfaulty_members():
+    def execute(rows):
+        if rows.shape[0] > 2:                   # coalesced batch fails
+            raise RuntimeError("batch too hot")
+        if np.isneginf(rows).any():             # one poisoned request
+            raise RuntimeError("poison row")
+        return rows.sum(axis=1)
+
+    mb = MicroBatcher(execute, split_retry=True)
+    good = mb.submit(np.ones((2, 4)))
+    bad = mb.submit(np.full((1, 4), -np.inf))
+    mb.flush()                                  # does not raise
+    np.testing.assert_array_equal(good.result(), np.full(2, 4.0))
+    assert isinstance(bad.exception(), RuntimeError)
+    assert mb.stats["batches"] == 1
+
+
+# ---------------------------------------------------------------------------
+# watchdog hardening
+# ---------------------------------------------------------------------------
+def test_watchdog_skips_corrupt_heartbeats(tmp_path):
+    hb_dir = str(tmp_path)
+    Heartbeat(hb_dir, 3).beat(1)
+    (tmp_path / "worker_.hb").write_text("{}")          # unparseable id
+    (tmp_path / "worker_0xbad.hb").write_text("{}")     # non-numeric id
+    (tmp_path / "worker_00007.hb").write_text("{not json")
+    (tmp_path / "worker_00008.hb").write_text('["t"]')  # not a dict
+    before = metrics.counter("fault.heartbeat_corrupt").value
+    wd = Watchdog(hb_dir, timeout_s=60)
+    assert [wid for wid, _ in wd._workers()] == [3]
+    # one scan counted each of the 4 corrupt files exactly once
+    assert metrics.counter("fault.heartbeat_corrupt").value == before + 4
+    assert wd.dead_workers() == []              # never crashes
+
+
+# ---------------------------------------------------------------------------
+# restart harness × failure injection (end to end)
+# ---------------------------------------------------------------------------
+def test_restart_harness_with_injector_end_to_end():
+    inj = FailureInjector({2, 4})
+    saved = {"state": None}
+    before = metrics.counter("fault.restarts").value
+
+    def run(state):
+        for step in range(state["step"], 6):
+            inj.maybe_fail(step)
+            saved["state"] = {"step": step + 1}     # "checkpoint"
+        return saved["state"]
+
+    out = run_with_restarts(lambda: {"step": 0}, lambda: saved["state"],
+                            run, RestartPolicy(max_failures=3))
+    assert out["step"] == 6
+    assert inj.tripped == {2, 4}
+    assert metrics.counter("fault.restarts").value == before + 2
+
+
+def test_restart_budget_exhaustion_chains_cause_and_backs_off(monkeypatch):
+    import repro.runtime.fault as fault_mod
+    sleeps = []
+    monkeypatch.setattr(fault_mod.time, "sleep", sleeps.append)
+
+    def run(_):
+        raise RuntimeError("root cause")
+
+    with pytest.raises(TrainingAborted) as ei:
+        run_with_restarts(lambda: {}, lambda: None, run,
+                          RestartPolicy(max_failures=2, backoff_s=0.5))
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    assert "root cause" in str(ei.value.__cause__)
+    assert sleeps == [0.5, 0.5]                 # once per allowed restart
+
+
+# ---------------------------------------------------------------------------
+# verify_parity: typed errors, never a hang
+# ---------------------------------------------------------------------------
+def test_verify_parity_raises_typed_error_on_broken_backend(small_spn):
+    srv = Server(small_spn, substrates=("numpy", "vliw-sim"))
+
+    def broken(art, leaves):
+        raise RuntimeError("datapath offline")
+
+    srv.substrate("vliw-sim").execute = broken
+    with pytest.raises(ParityError, match="failed to execute") as ei:
+        verify_parity(srv, _mask(srv.prog.num_vars), query="marginal")
+    assert isinstance(ei.value.__cause__, RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# hardened request path
+# ---------------------------------------------------------------------------
+def test_transient_flip_retries_and_heals(small_spn):
+    srv = Server(small_spn, substrates=("vliw-sim", "numpy"),
+                 faults="flip@t0")
+    X = _mask(srv.prog.num_vars)
+    ref = srv.query_once(X, "marginal", "numpy")
+    np.testing.assert_allclose(srv.query(X, "marginal", "vliw-sim"), ref,
+                               atol=1e-5)
+    res = srv.stats()["resilience"]
+    assert res["enabled"] and res["applied"]
+    assert not res["redirects"]                 # healed, no fallback
+
+
+def test_core_fault_falls_back_and_redirects(small_spn):
+    # vliw-sim is single-core and cannot repartition → the chain serves
+    # the request from the numpy oracle and pins the redirect
+    srv = Server(small_spn, substrates=("vliw-sim", "numpy"), cores=2,
+                 faults="core=0@t0")
+    X = _mask(srv.prog.num_vars)
+    ref = srv.query_once(X, "marginal", "numpy")
+    np.testing.assert_allclose(srv.query(X, "marginal", "vliw-sim"), ref,
+                               atol=1e-6)
+    res = srv.stats()["resilience"]
+    assert res["redirects"] == {"vliw-sim": "numpy"}
+    assert [h["kind"] for h in res["history"]] == ["fabric_fault",
+                                                   "fallback"]
+    # subsequent requests serve straight from the redirect
+    np.testing.assert_allclose(srv.query(X, "marginal", "vliw-sim"), ref,
+                               atol=1e-6)
+    assert len(srv.stats()["resilience"]["history"]) == 2
+
+
+def test_core_fault_degrades_multicore_server(small_spn):
+    srv = Server(small_spn, substrates=("vliw-mc",), cores=4,
+                 topology="mesh", faults="core=1@t0")
+    X = _mask(srv.prog.num_vars)
+    out = srv.query(X, "marginal", "vliw-mc")
+    oracle = Server(small_spn, substrates=("numpy",))
+    np.testing.assert_allclose(
+        out, oracle.query(X, "marginal", "numpy"), atol=1e-5)
+    res = srv.stats()["resilience"]
+    assert res["fabric"]["dead_cores"] == [1]
+    assert not res["redirects"]                 # repartitioned, no fallback
+    art = srv.artifact("marginal", "vliw-mc")
+    assert art.meta["degraded"]["to_cores"] == 3
+    assert 1 not in art.meta["multicore"]["core_labels"]
+    assert "/alive=0.2.3" in srv.substrate("vliw-mc").config_fingerprint()
+
+
+def test_exhausted_chain_is_a_typed_error(small_spn):
+    # no fallback, no way to degrade ⇒ honest ResilienceExhausted that
+    # chains the real CoreFault — never a hang, never a bare crash
+    srv = Server(small_spn, substrates=("vliw-sim",), cores=2,
+                 faults="core=0@t0",
+                 resilience=ResiliencePolicy(fallback=False))
+    with pytest.raises(ResilienceExhausted) as ei:
+        srv.query(_mask(srv.prog.num_vars), "marginal", "vliw-sim")
+    assert isinstance(ei.value.__cause__, CoreFault)
+
+
+def test_client_errors_bypass_the_breaker(small_spn):
+    srv = Server(small_spn, substrates=("numpy",), faults="flip@t99999")
+    X = _mask(srv.prog.num_vars)
+    with pytest.raises(ValueError, match="full evidence"):
+        srv.query(X, "joint", "numpy")          # partial evidence
+    br = srv.resilience.breaker("numpy", "sum")
+    assert br.failures == 0 and br.state == "closed"
+
+
+def test_backpressure_rejects_oversized_requests(small_spn):
+    srv = Server(small_spn, substrates=("numpy",), max_rows=8,
+                 faults="flip@t99999")
+    with pytest.raises(Backpressure, match="admission limit"):
+        srv.submit(np.zeros((9, srv.prog.num_vars), np.int64), "marginal",
+                   "numpy")
+    # an un-hardened server keeps the legacy contract (no admission gate)
+    legacy = Server(small_spn, substrates=("numpy",), max_rows=8)
+    assert legacy.submit(
+        np.zeros((9, legacy.prog.num_vars), np.int64), "marginal",
+        "numpy").result().shape == (9,)
+
+
+# ---------------------------------------------------------------------------
+# chaos drill: fault plans × substrates × topologies × core counts
+# ---------------------------------------------------------------------------
+CHAOS_PLANS = ("core=1@t1", "link=0-1@t0,flip@t2", "random:3", "random:11")
+
+
+def _chaos_plan(spec: str, n_cores: int) -> FaultPlan:
+    if spec.startswith("random:"):
+        return FaultPlan.random(int(spec.split(":")[1]), n_cores=n_cores,
+                                n_events=3, ticks=4)
+    return FaultPlan.parse(spec)
+
+
+@pytest.mark.parametrize("plan_spec", CHAOS_PLANS)
+@pytest.mark.parametrize("substrate,topology,cores", [
+    ("vliw-mc", "xbar", 2), ("vliw-mc", "xbar", 4),
+    ("vliw-mc", "mesh", 2), ("vliw-mc", "mesh", 4),
+    ("vliw-sim", "xbar", 2), ("vliw-sim", "mesh", 4),
+])
+def test_chaos_drill(small_spn, plan_spec, substrate, topology, cores):
+    """Under every drilled fault plan the hardened server either answers
+    bit-consistently with the numpy oracle or raises a typed
+    FabricError — and every pending resolves (the test completing at
+    all is the no-hang assertion)."""
+    plan = _chaos_plan(plan_spec, cores)
+    srv = Server(small_spn, substrates=(substrate, "vliw-sim", "numpy"),
+                 cores=cores, topology=topology, faults=plan)
+    X = _mask(srv.prog.num_vars, n=5)
+    ref = srv.query_once(X, "marginal", "numpy")    # oracle is immune
+    for _ in range(4):                              # outlive every tick
+        try:
+            out = srv.query(X, "marginal", substrate)
+        except FabricError:
+            continue                                # honest typed error
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+    res = srv.stats()["resilience"]
+    assert res["enabled"] and res["tick"] > 0
+    assert res["plan"] == plan.specs()
+    # persistent fabric damage must be visible in the snapshot
+    if any(e.kind in ("core", "link") for e in plan.events):
+        assert res["applied"]
+
+
+def test_degraded_nltcs_serves_from_three_cores(nltcs_spn, nltcs_data):
+    """The acceptance drill: kill 1 of 4 cores on nltcs — the server
+    repartitions onto the 3 survivors and keeps answering with oracle
+    parity, recorded in stats()['resilience']."""
+    srv = Server(nltcs_spn, substrates=("vliw-mc",), cores=4,
+                 topology="mesh", faults="core=1@t0")
+    X = nltcs_data[:32].copy()
+    X[np.random.default_rng(0).random(X.shape) < 0.3] = -1
+    srv.query(X, "marginal", "vliw-mc")             # fault → degrade
+    devs = verify_parity(srv, X, query="marginal", substrates=("vliw-mc",))
+    assert devs["vliw-mc/checked"] == 0.0           # fast sim bit-exact
+    res = srv.stats()["resilience"]
+    assert res["fabric"]["healthy_cores"] == [0, 2, 3]
+    assert res["degraded_artifacts"]
+    assert any(h["kind"] == "degrade" and h["alive"] == [0, 2, 3]
+               for h in res["history"])
