@@ -1,0 +1,205 @@
+"""Bench-history regression sentinel over ``BENCH_history.jsonl``.
+
+``BENCH_serve.json`` is a snapshot — it holds exactly one run, and the
+``--compare`` gate can only see the single committed baseline. This
+module gives the bench a *memory*: every ``serve_bench`` run appends one
+JSONL record (git SHA, timestamp, workload fingerprint, the run's
+deterministic metrics) to ``BENCH_history.jsonl``, and the sentinel
+compares each new run against the **best prior run with the same
+fingerprint** — so a slow creep across many commits is caught even when
+every individual step stays inside the snapshot gate's tolerance.
+
+Only *deterministic* metrics participate: modeled lockstep cycle counts
+(NoC topology sweep, multicore scaling curve, single-core VLIW,
+autotuned cycles/eval). They are value- and machine-independent, so the
+sentinel holds them **exactly**: any increase over the historical best
+for the same workload fingerprint is a failure. Wall-clock throughput
+is deliberately excluded — machines differ; the snapshot gate already
+covers it with machine-speed normalization.
+
+The fingerprint hashes every knob that changes what the deterministic
+metrics mean (dataset, batch, query, topology, sweep shapes, autotune
+budget/cores): runs with different fingerprints are incommensurable and
+never compared, so changing the bench config can't fake a win or a
+regression.
+
+    PYTHONPATH=src python -m benchmarks.history \\
+        --record BENCH_serve.json --history BENCH_history.jsonl [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import subprocess
+import sys
+import time
+
+DEFAULT_HISTORY = "BENCH_history.jsonl"
+
+
+def git_sha(cwd: str | None = None) -> str:
+    """Short git SHA of HEAD, or ``"unknown"`` outside a checkout."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, cwd=cwd,
+                             timeout=10)
+    except (OSError, subprocess.TimeoutExpired):
+        return "unknown"
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else "unknown"
+
+
+def run_fingerprint(record: dict) -> str:
+    """Stable hash of every knob the deterministic metrics depend on.
+
+    Two runs compare iff their fingerprints match; anything that changes
+    the *meaning* of a cycle count (workload, topology, sweep shape,
+    autotune search context) must land here.
+    """
+    at = record.get("autotune") or {}
+    key = {
+        "dataset": record.get("dataset"),
+        "batch": record.get("batch"),
+        "query": record.get("query"),
+        "mc_topology": record.get("mc_topology", "xbar"),
+        "noc": {ds: {"cores": sweep.get("cores"),
+                     "topologies": sorted(sweep.get("topologies", {}))}
+                for ds, sweep in sorted((record.get("noc") or {}).items())},
+        "scaling": {ds: {"topology": s.get("topology"),
+                         "cores": sorted(s.get("cores", {}))}
+                    for ds, s in sorted(
+                        (record.get("multicore_scaling") or {}).items())},
+        "autotune": {"budget": at.get("budget"),
+                     "max_cores": at.get("max_cores"),
+                     "datasets": sorted(at.get("datasets", {}))},
+    }
+    blob = json.dumps(key, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def deterministic_metrics(record: dict) -> dict:
+    """Flatten the record's deterministic cycle counts; all lower-is-
+    better, all machine-independent, all held exactly by the sentinel."""
+    out: dict[str, float] = {}
+    for ds, sweep in sorted((record.get("noc") or {}).items()):
+        for topo, entry in sorted(sweep.get("topologies", {}).items()):
+            out[f"noc.{ds}.{topo}.cycles"] = int(entry["cycles"])
+    for ds, s in sorted((record.get("multicore_scaling") or {}).items()):
+        out[f"scaling.{ds}.single_core.cycles"] = \
+            int(s["single_core_cycles"])
+        for k, entry in sorted(s.get("cores", {}).items()):
+            out[f"scaling.{ds}.c{k}.cycles"] = int(entry["cycles"])
+    at = record.get("autotune") or {}
+    for ds, entry in sorted(at.get("datasets", {}).items()):
+        out[f"autotune.{ds}.tuned_cycles_per_eval"] = \
+            float(entry["tuned_cycles_per_eval"])
+    fast = record.get("vliw_fastsim") or {}
+    if "cycles" in fast:
+        out["vliw_sim.cycles"] = int(fast["cycles"])
+    return out
+
+
+def make_entry(record: dict, *, sha: str | None = None,
+               now: float | None = None) -> dict:
+    """One history line for ``record`` (sha/now injectable for tests)."""
+    return {"sha": sha if sha is not None else git_sha(),
+            "time": round(float(time.time() if now is None else now), 3),
+            "fingerprint": run_fingerprint(record),
+            "metrics": deterministic_metrics(record)}
+
+
+def load_history(path: str) -> list[dict]:
+    """All prior entries; a missing file is an empty history."""
+    try:
+        with open(path) as fh:
+            return [json.loads(line) for line in fh if line.strip()]
+    except FileNotFoundError:
+        return []
+
+
+def append_run(path: str, record: dict, *, sha: str | None = None,
+               now: float | None = None) -> dict:
+    """Append one entry for ``record`` to the history; returns it."""
+    entry = make_entry(record, sha=sha, now=now)
+    with open(path, "a") as fh:
+        fh.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def best_prior(history: list[dict], fingerprint: str) -> dict:
+    """Per-metric historical best among entries with this fingerprint.
+
+    Returns ``{metric: (value, sha)}`` — the lowest value ever recorded
+    for each metric, and the commit that recorded it.
+    """
+    best: dict[str, tuple] = {}
+    for entry in history:
+        if entry.get("fingerprint") != fingerprint:
+            continue
+        for name, value in (entry.get("metrics") or {}).items():
+            if name not in best or value < best[name][0]:
+                best[name] = (value, entry.get("sha", "unknown"))
+    return best
+
+
+def sentinel_compare(record: dict, history: list[dict]) -> list[str]:
+    """New run vs the historical best for the same fingerprint.
+
+    Returns human-readable failure lines (empty = sentinel passes).
+    Deterministic metrics are held exactly: any increase over the best
+    prior value fails. Metrics never seen before pass (they become the
+    new best on append), and an empty matching history passes trivially.
+    """
+    fp = run_fingerprint(record)
+    best = best_prior(history, fp)
+    failures: list[str] = []
+    for name, value in deterministic_metrics(record).items():
+        prior = best.get(name)
+        if prior is None:
+            continue
+        prior_value, prior_sha = prior
+        if value > prior_value:
+            failures.append(
+                f"history sentinel: {name} = {value:g} vs best prior "
+                f"{prior_value:g} (commit {prior_sha}) — deterministic "
+                "counts are held exactly against the historical best")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--record", default="BENCH_serve.json",
+                    help="bench record to append/compare")
+    ap.add_argument("--history", default=DEFAULT_HISTORY,
+                    help="history JSONL path")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when the record regresses "
+                         "against the historical best (compare runs "
+                         "BEFORE the record is appended)")
+    ap.add_argument("--no-append", action="store_true",
+                    help="compare only; do not append the record")
+    args = ap.parse_args(argv)
+    with open(args.record) as fh:
+        record = json.load(fh)
+    history = load_history(args.history)
+    failures = sentinel_compare(record, history)
+    n_same = sum(1 for e in history
+                 if e.get("fingerprint") == run_fingerprint(record))
+    if not args.no_append:
+        entry = append_run(args.history, record)
+        print(f"  appended {entry['sha']}@{entry['fingerprint']} to "
+              f"{args.history} ({len(entry['metrics'])} metrics, "
+              f"{n_same} prior comparable runs)")
+    for line in failures:
+        print(f"  {line}")
+    if failures and args.check:
+        return 2
+    if not failures:
+        print(f"  history sentinel: ok vs {n_same} comparable prior "
+              f"run(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -76,6 +76,8 @@ from repro.queries import random_mask
 from repro.runtime import DEFAULT_SUBSTRATES, Server, verify_parity
 
 from .common import BENCH_SUITE, bench_spn, csv_row
+from .history import (DEFAULT_HISTORY, append_run, load_history,
+                      sentinel_compare)
 
 #: per-substrate throughput regression tolerance for ``--compare``
 REGRESSION_TOLERANCE = 0.25
@@ -408,7 +410,8 @@ def main(dataset: str = "nltcs", batch: int = 256,
          compare_path: str | None = None,
          cores_list: list[int] | None = None,
          topology: str = "xbar",
-         noc_datasets: list[str] | None = None) -> list[str]:
+         noc_datasets: list[str] | None = None,
+         history_path: str | None = DEFAULT_HISTORY) -> list[str]:
     baseline = None
     if compare_path:
         try:
@@ -592,8 +595,26 @@ def main(dataset: str = "nltcs", batch: int = 256,
         json.dump(record, f, indent=2)
     print(f"  wrote {out_path}")
 
+    # bench-history sentinel: compare against the best prior run with
+    # the same workload fingerprint BEFORE appending this one, so a
+    # slow creep across commits is caught even when each step clears
+    # the single-baseline gate; failures only fail the process under
+    # --compare (standalone runs append + report)
+    sentinel_failures: list[str] = []
+    if history_path and history_path != "none":
+        history = load_history(history_path)
+        sentinel_failures = sentinel_compare(record, history)
+        entry = append_run(history_path, record)
+        print(f"  history: appended {entry['sha']}@{entry['fingerprint']} "
+              f"to {history_path} ({len(history)} prior entries)")
+        if sentinel_failures and baseline is None:
+            for line in sentinel_failures:
+                print(f"  WARNING: {line}")
+        elif not sentinel_failures:
+            print("  history sentinel: ok vs historical best")
+
     if baseline is not None:
-        failures = compare_records(record, baseline)
+        failures = compare_records(record, baseline) + sentinel_failures
         ov = record["obs_overhead"]
         if ov["overhead_frac"] > OBS_OVERHEAD_BUDGET:
             failures.append(
@@ -631,10 +652,16 @@ if __name__ == "__main__":
     ap.add_argument("--noc-datasets", default=None, metavar="nltcs,kdd",
                     help="datasets for the NoC topology sweep "
                          "(default: the bench dataset + kdd)")
+    ap.add_argument("--history", default=DEFAULT_HISTORY,
+                    metavar="HISTORY.jsonl",
+                    help="bench-history JSONL the run appends to and the "
+                         "regression sentinel compares against "
+                         "(see benchmarks.history; 'none' disables)")
     args = ap.parse_args()
     cores = ([int(c) for c in args.cores.split(",")]
              if args.cores else None)
     main(args.dataset, args.batch, args.out, args.compare, cores,
          topology=args.topology,
          noc_datasets=(args.noc_datasets.split(",")
-                       if args.noc_datasets else None))
+                       if args.noc_datasets else None),
+         history_path=args.history)

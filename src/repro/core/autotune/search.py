@@ -12,6 +12,17 @@ Determinism contract (property-tested): ``tune_program`` is a pure
 function of (program digest, processor, interconnect, max_cores,
 placement, max_interleave, budget, seed). No wall-clock measurement
 enters the objective.
+
+The search is *attribution-guided*: after probing the default config it
+runs the cycle-attribution engine (:mod:`repro.obs.attr`) on the
+default compilation and spends its next trials on candidates targeting
+the named bottleneck — comm-bound programs try placement passes /
+higher interleave / fewer cores, imbalance-bound ones try alternative
+partition strategies and seeds, compute-bound ones try arity rebalance
+and interleave. The prior is itself deterministic (it derives from the
+same value-independent lockstep probe), so the contract above still
+holds; :meth:`TuneResult.summary` records the prior and whether a
+guided candidate won.
 """
 from __future__ import annotations
 
@@ -94,6 +105,9 @@ class TuneResult:
     evaluated: int
     budget: int
     seed: int
+    prior: dict | None = None      # attribution prior of the default config
+    guided: list = dataclasses.field(default_factory=list)
+    guided_win: bool = False       # best config came from the prior
 
     @property
     def improved(self) -> bool:
@@ -109,7 +123,10 @@ class TuneResult:
                 "default_cycles_per_eval": self.default_cycles_per_eval,
                 "evaluated": self.evaluated,
                 "budget": self.budget,
-                "seed": self.seed}
+                "seed": self.seed,
+                "prior": self.prior,
+                "guided": list(self.guided),
+                "guided_win": self.guided_win}
 
 
 def default_config(max_cores: int) -> TuneConfig:
@@ -138,6 +155,46 @@ def _grain_ladder(prog: TensorProgram) -> tuple:
     n = max(1, prog.n_ops)
     return (None,) + tuple(sorted({max(1, n // d)
                                    for d in (6, 12, 24, 48, 96)}))
+
+
+def _guided_candidates(group: str, max_cores: int, ks: tuple,
+                       grains: tuple) -> list[TuneConfig]:
+    """Candidates targeted at the attributed bottleneck of the default.
+
+    ``group`` is the coarse verdict from :mod:`repro.obs.attr`
+    (``compute`` / ``comm`` / ``imbalance``). Order within each arm is
+    by expected leverage so a small budget still covers the top picks.
+    """
+    out: list[TuneConfig] = []
+    top_k = ks[-1]
+    if group == "comm":
+        # comm-bound: hide transfer latency (placement passes), raise
+        # arithmetic intensity per row (interleave), or cut the wires
+        # entirely (fewer cores)
+        for p in (1, 2):
+            out.append(TuneConfig(cores=max_cores, passes=p))
+        if top_k > 1:
+            out.append(TuneConfig(cores=max_cores, interleave=top_k,
+                                  passes=1))
+        if max_cores > 1:
+            out.append(TuneConfig(cores=max_cores - 1))
+    elif group == "imbalance":
+        # barrier-bound: the partition is lopsided — different cut
+        # strategies and partition seeds move work between cores
+        for strat in _STRATEGIES[1:]:
+            out.append(TuneConfig(cores=max_cores, strategy=strat))
+        out.append(TuneConfig(cores=max_cores, seed=1))
+        if len(grains) > 1:
+            out.append(TuneConfig(cores=max_cores, strategy="cone",
+                                  grain=grains[1]))
+    else:
+        # compute-bound: the machine is busy — rebalance the tree
+        # (max_arity) or amortize fixed schedule overhead (interleave)
+        for a in (2, 4):
+            out.append(TuneConfig(cores=max_cores, max_arity=a))
+        if top_k > 1:
+            out.append(TuneConfig(cores=max_cores, interleave=top_k))
+    return out
 
 
 def tune_program(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
@@ -180,8 +237,9 @@ def tune_program(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
 
     scores: dict[TuneConfig, int] = {}
     trials: list[tuple[str, int, float]] = []
+    captured: dict[TuneConfig, object] = {}
 
-    def evaluate(tc: TuneConfig) -> int | None:
+    def evaluate(tc: TuneConfig, keep: bool = False) -> int | None:
         """Compile + probe one canonical config; None once over budget."""
         if tc in scores:
             return scores[tc]
@@ -197,6 +255,8 @@ def tune_program(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
                     placement=placement, grain=tc.grain,
                     max_arity=tc.max_arity, **(compile_kwargs or {}))
                 cycles = int(mcp.meta["cycles"])
+                if keep:
+                    captured[tc] = mcp
             except RuntimeError as exc:
                 cycles = INFEASIBLE
                 sp.set("infeasible", str(exc)[:160])
@@ -219,7 +279,29 @@ def tune_program(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
                              "max_cores": max_cores,
                              "digest": prog.digest()[:12]}) as span:
         default = default_config(max_cores)
-        evaluate(default)
+        evaluate(default, keep=True)
+
+        # phase 0 — attribution-guided candidates: run the cycle
+        # attribution engine on the default compilation and spend the
+        # next trials on its bottleneck's highest-leverage knobs. The
+        # prior derives from the same value-independent lockstep probe,
+        # so the search stays a pure function of the tune key.
+        prior: dict | None = None
+        guided_fps: list[str] = []
+        mcp0 = captured.pop(default, None)
+        if mcp0 is not None:
+            from ...obs.attr import attribute_multicore
+            a = attribute_multicore(mcp0, interleave=default.interleave)
+            prior = {"bottleneck": a.bottleneck,
+                     "group": a.bottleneck_group,
+                     "fractions": dict(a.fractions),
+                     "roofline_bound": a.roofline["bound"]}
+            span.set("prior", f"{a.bottleneck}/{a.bottleneck_group}")
+            for tc in _guided_candidates(a.bottleneck_group, max_cores,
+                                         ks, grains):
+                tc = tc.canonical(max_cores)
+                guided_fps.append(tc.fingerprint())
+                evaluate(tc)
 
         # phase 1 — seeded sweep, highest-leverage knobs first so even a
         # tiny budget covers them: interleave at full cores (the paper's
@@ -319,7 +401,11 @@ def tune_program(prog: TensorProgram, cfg: ProcessorConfig = PTREE,
         default_config=default, default_cycles=scores[default],
         default_cycles_per_eval=scores[default] / default.interleave,
         trials=trials, evaluated=len(scores), budget=budget,
-        seed=int(seed))
+        seed=int(seed), prior=prior, guided=guided_fps)
+    result.guided_win = (result.improved
+                         and best.fingerprint() in guided_fps)
+    if result.guided_win:
+        metrics.counter("autotune.guided_wins").inc()
     if use_cache:
         TUNE_CACHE[key] = result
     return result

@@ -476,6 +476,7 @@ class Interconnect:
 
     def push(self, row_id: int, payload: np.ndarray, now: int) -> None:
         route = self._route.get(row_id)
+        inject_wait = 0
         if route is None:
             # ideal crossbar: dedicated wires, no shared resources
             if row_id in self._dead_rows:
@@ -485,7 +486,8 @@ class Interconnect:
             icfg, serial = self.plan.icfg, self._serial[row_id]
             src = self._src[row_id]
             start = max(now, self.inject_free.get(src, 0))
-            self.inject_stall_cycles += start - now
+            inject_wait = start - now
+            self.inject_stall_cycles += inject_wait
             self.inject_free[src] = start + serial
             head, tail = start, serial
             for link in route:
@@ -505,7 +507,8 @@ class Interconnect:
         if self.recorder is not None:
             self.recorder.row_transit(row_id, self._src[row_id],
                                       self._dst[row_id], now, arrival,
-                                      self._members[row_id])
+                                      self._members[row_id],
+                                      inject=inject_wait)
         self.rows[row_id] = (arrival, payload)
         self.sends += 1
         self.values_sent += payload.shape[0]

@@ -70,10 +70,7 @@ def simulate_multicore(mcp: MultiCoreProgram, leaf_ind: np.ndarray,
         local = (leaf_ind[:, cp.leaf_map] if len(cp.leaf_map)
                  else np.zeros((batch, 0), leaf_ind.dtype))
         cores.append(CoreSim(cp.vprog, local, cfg, core_id=cp.core,
-                             interconnect=net))
-    if recorder is not None:
-        for c in cores:
-            c.recorder = recorder
+                             interconnect=net, recorder=recorder))
 
     g = 0
     while any(not c.finished() for c in cores):

@@ -85,7 +85,7 @@ class CoreSim:
 
     def __init__(self, vprog: isa.VLIWProgram, leaf_ind: np.ndarray,
                  cfg: ProcessorConfig, *, core_id: int = 0,
-                 interconnect=None):
+                 interconnect=None, recorder=None):
         leaf_ind = np.atleast_2d(leaf_ind)
         self.vprog, self.cfg, self.core_id = vprog, cfg, core_id
         self.net = interconnect
@@ -110,9 +110,10 @@ class CoreSim:
         self.stall_cycles = 0
         self.finish_at: int | None = None   # global cycle of last instr
         # optional cycle-timeline recorder (repro.obs.timeline); the
-        # lockstep driver attaches one for `serve --trace` profiling —
-        # None keeps the hot simulation path branch-cheap
-        self.recorder = None
+        # lockstep driver passes one for `serve --trace` profiling and
+        # the attribution engine's probe — None keeps the hot
+        # simulation path branch-cheap
+        self.recorder = recorder
         self.checks = {"read_conflicts_checked": 0,
                        "write_conflicts_checked": 0}
 

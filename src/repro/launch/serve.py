@@ -66,8 +66,48 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
               autotune: str | None = None,
               faults=None,
               trace_path: str | None = None,
+              observe_path: str | None = None,
               metrics_dump: bool = False) -> dict:
     from .. import obs
+
+    # ``--trace out.json``: record every request/compile/execute span and
+    # write a Chrome trace_event file (open in https://ui.perfetto.dev);
+    # if vliw-mc is served, the per-core simulated-cycle timelines land
+    # in the same file on a second process track (virtual cycles clock).
+    # The finally clause flushes a valid *partial* trace when the run
+    # dies mid-flight (exception, Ctrl-C): write_chrome_trace always
+    # emits complete JSON, so a crashed serve still leaves evidence.
+    tracer = obs.trace.install() if trace_path else None
+    trace_written = False
+    try:
+        out = _serve_spn_run(
+            obs, dataset, batch, n_batches, substrate, query, mask_frac,
+            interpret, cores, topology, link_width, autotune,
+            faults, observe_path, metrics_dump, tracer)
+        if tracer is not None:
+            extra = out.pop("_trace_extra", [])
+            n_events = obs.trace.write_chrome_trace(trace_path, tracer,
+                                                    extra_events=extra)
+            trace_written = True
+            print(f"  wrote {trace_path}: {n_events} trace events "
+                  f"({len(tracer.events)} wall-clock spans"
+                  + (f", {len(extra)} cycle-timeline events" if extra
+                     else "")
+                  + ") — open in https://ui.perfetto.dev")
+        return out
+    finally:
+        if tracer is not None:
+            if not trace_written:
+                n_events = obs.trace.write_chrome_trace(trace_path, tracer)
+                print(f"  wrote PARTIAL trace {trace_path}: "
+                      f"{n_events} events (run did not finish)")
+            obs.trace.uninstall()
+
+
+def _serve_spn_run(obs, dataset, batch, n_batches, substrate, query,
+                   mask_frac, interpret, cores, topology, link_width,
+                   autotune, faults, observe_path,
+                   metrics_dump, tracer) -> dict:
     from ..core import learn
     from ..data import spn_datasets
     from ..queries import (mpe_backtrace, random_mask, sample_ancestral_jax,
@@ -75,12 +115,6 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
     from ..runtime import Server, verify_parity
 
     from ..core.multicore import named_interconnect
-
-    # ``--trace out.json``: record every request/compile/execute span and
-    # write a Chrome trace_event file (open in https://ui.perfetto.dev);
-    # if vliw-mc is served, the per-core simulated-cycle timelines land
-    # in the same file on a second process track (virtual cycles clock)
-    tracer = obs.trace.install() if trace_path else None
 
     X = spn_datasets.load(dataset, "train", 400)
     spn = learn.learn_spn(X, min_instances=64)
@@ -219,6 +253,30 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
                   f"{d['multicore_cycles']} cycles at "
                   f"{d['requested']} cores)")
 
+    # cycle attribution: where every vliw artifact's cycles go, from the
+    # meta attached at compile time (see repro.obs.attr)
+    for art in server.cache.artifacts():
+        attr = art.meta.get("attribution")
+        if not attr or art.substrate != "vliw-mc":
+            continue
+        frac = attr["fractions"][attr["bottleneck"]]
+        print(f"  attribution[{art.semiring}/{art.substrate}]: "
+              f"bottleneck={attr['bottleneck']} "
+              f"({attr['bottleneck_group']}-bound, {frac:.1%}), "
+              f"roofline={attr['roofline']['bound']} "
+              f"util={attr['roofline']['utilization']:.1%}")
+
+    if observe_path:
+        # ``--observe report.json``: one self-contained observatory
+        # report — attribution tables, rooflines, SLO status, the
+        # resilience snapshot, autotune decisions and the OpenMetrics
+        # rendering (see repro.obs.export)
+        report = obs.export.write_observatory_report(observe_path, server)
+        out["observatory"] = {"path": observe_path,
+                              "artifacts": len(report["attribution"])}
+        print(f"  wrote {observe_path}: observatory report "
+              f"({len(report['attribution'])} attributed artifacts)")
+
     if tracer is not None:
         extra: list = []
         if "vliw-mc" in names:
@@ -235,13 +293,7 @@ def serve_spn(dataset: str, batch: int, n_batches: int,
             out["cycle_timeline"] = {
                 "cycles": res.cycles,
                 "core_totals": {str(c): t for c, t in totals.items()}}
-        n_events = obs.trace.write_chrome_trace(trace_path, tracer,
-                                                extra_events=extra)
-        obs.trace.uninstall()
-        print(f"  wrote {trace_path}: {n_events} trace events "
-              f"({len(tracer.events)} wall-clock spans"
-              + (f", {len(extra)} cycle-timeline events" if extra else "")
-              + ") — open in https://ui.perfetto.dev")
+        out["_trace_extra"] = extra   # written by serve_spn's wrapper
     if metrics_dump:
         print("  metrics registry:")
         for line in obs.metrics.dump().splitlines():
@@ -337,6 +389,14 @@ def main() -> None:
                          "wall-clock request/compile/execute spans plus "
                          "(for vliw-mc) per-core simulated-cycle "
                          "timelines; open in https://ui.perfetto.dev")
+    ap.add_argument("--observe", default=None, metavar="OUT.json",
+                    help="write a self-contained observatory report: "
+                         "per-artifact cycle attribution (issue/stall/"
+                         "barrier/link/inject per core + roofline + "
+                         "named bottleneck), SLO burn-rate status, the "
+                         "resilience snapshot, autotune decisions, and "
+                         "an OpenMetrics rendering of the metrics "
+                         "registry (see repro.obs.export)")
     ap.add_argument("--metrics-dump", action="store_true",
                     help="print the metrics registry (counters, gauges, "
                          "latency percentiles) after serving")
@@ -358,7 +418,8 @@ def main() -> None:
                   autotune=(None if args.autotune == "off"
                             else args.autotune),
                   faults=args.inject_faults,
-                  trace_path=args.trace, metrics_dump=args.metrics_dump)
+                  trace_path=args.trace, observe_path=args.observe,
+                  metrics_dump=args.metrics_dump)
     else:
         serve_lm(args.arch, min(args.batch, 8), args.prompt_len,
                  args.gen_len)

@@ -1,7 +1,7 @@
-"""End-to-end observability: tracing, metrics, cycle-level timelines.
+"""End-to-end observability: tracing, metrics, timelines, observatory.
 
 Zero-dependency (stdlib + numpy only at the edges) subsystem threaded
-through the whole serving path. Three pillars:
+through the whole serving path. Six pillars:
 
 :mod:`repro.obs.trace`
     Lightweight span API with per-request trace ids and a Chrome
@@ -15,6 +15,18 @@ through the whole serving path. Three pillars:
     Per-core, per-cycle timelines (issue / stall / barrier, SEND/RECV
     markers, NoC link occupancy) of the multi-core lockstep simulator,
     exported into the same Chrome trace on a virtual cycles clock.
+:mod:`repro.obs.attr`
+    Cycle-attribution engine: exact per-core decomposition of every
+    VLIW artifact's cycles into issue / stall / barrier / link /
+    inject, a compute-vs-comm roofline point, and a named dominant
+    bottleneck that seeds the autotuner's guided candidates.
+:mod:`repro.obs.slo`
+    Per-(substrate, query-kind) latency/error-budget objectives over
+    rolling windows with burn-rate computation; feeds the server's
+    admission control (shed before the budget burns).
+:mod:`repro.obs.export`
+    OpenMetrics text exposition, JSONL snapshot streams, and the
+    self-contained observatory report behind ``serve --observe``.
 
 Quick use::
 
@@ -23,10 +35,11 @@ Quick use::
     ... serve requests ...
     obs.trace.write_chrome_trace("out.json", tracer)
     print(obs.metrics.dump())
+    print(obs.export.render_openmetrics())
 """
-from . import metrics, timeline, trace
+from . import attr, export, metrics, slo, timeline, trace
 from .metrics import REGISTRY
 from .trace import active, install, instant, span, uninstall
 
-__all__ = ["trace", "metrics", "timeline", "REGISTRY",
-           "span", "instant", "install", "uninstall", "active"]
+__all__ = ["trace", "metrics", "timeline", "attr", "slo", "export",
+           "REGISTRY", "span", "instant", "install", "uninstall", "active"]

@@ -1,0 +1,250 @@
+"""Cycle-attribution engine: where do a VLIW artifact's cycles go?
+
+PR 6's :class:`~repro.obs.timeline.TimelineRecorder` records *what* each
+core did every global cycle (issue / stall / barrier run-lengths that
+sum exactly to the lockstep cycle count); this module turns the raw
+timeline plus the NoC transit log into an *answer*: a per-core
+decomposition of every cycle into five attribution classes
+
+``issue``
+    the core executed one VLIW instruction (useful work + SEND/RECV
+    slot occupancy — the compute axis);
+``stall``
+    flow-control stall charged to *latency*: the core waited on a row
+    whose transfer was still inside its uncontended hop+serialization
+    window;
+``link``
+    flow-control stall charged to *link contention*: the wait extended
+    past the uncontended window because route links were busy with
+    other transfers (includes degraded slow-link serialization);
+``inject``
+    flow-control stall charged to injection-port arbitration at the
+    producing core's NIC;
+``barrier``
+    finished, idling at the implicit end-of-program barrier (load
+    imbalance).
+
+The decomposition is **exact by construction**: ``issue + stall +
+barrier`` per core comes from the recorder's run-lengths (asserted
+against the checked sim's cycle count by ``tests/test_obs.py`` and the
+golden fixtures), and the ``link``/``inject`` classes are carved *out
+of* each destination core's recorded stall total (clamped, never
+invented), so the five classes still sum bit-exactly to ``cycles`` for
+every core — the acceptance criterion ``tests/test_observatory.py``
+pins for every ``golden_cycles.json`` point.
+
+On top of the decomposition the engine computes a compute-vs-comm
+**roofline point** (achieved ops/cycle vs the machine's peak and the
+NoC's modeled delivery ceiling at the artifact's operational intensity)
+and names the **dominant bottleneck** — the knob prior
+:func:`repro.core.autotune.search.tune_program` seeds its guided
+candidates from (comm-bound → placement passes / interleave;
+issue-bound → max_arity / interleave; barrier → repartition).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["CLASSES", "Attribution", "attribute_multicore",
+           "attribute_single", "attribute_artifact", "GROUP_OF_CLASS"]
+
+#: the attribution classes; per core they sum exactly to ``cycles``
+CLASSES = ("issue", "stall", "barrier", "link", "inject")
+
+#: class -> coarse bottleneck group (the autotuner's prior vocabulary)
+GROUP_OF_CLASS = {"issue": "compute", "stall": "comm", "link": "comm",
+                  "inject": "comm", "barrier": "imbalance"}
+
+#: an artifact is called compute-bound ("issue") when less than this
+#: fraction of its core-cycles is overhead, regardless of which
+#: overhead class is largest — a 95%-utilized machine is not
+#: "barrier-bound" because 3% of its cycles idle at the barrier
+_OVERHEAD_THRESHOLD = 0.25
+
+
+@dataclasses.dataclass
+class Attribution:
+    """Exact per-core cycle decomposition of one compiled artifact."""
+    substrate: str
+    cycles: int                      # lockstep global cycles (per batch)
+    interleave: int                  # evals packed per row (tuned artifacts)
+    per_core: dict                   # core -> {class: cycles}
+    totals: dict                     # class -> cycles summed over cores
+    fractions: dict                  # class -> share of cores * cycles
+    bottleneck: str                  # dominant class (one of CLASSES)
+    bottleneck_group: str            # compute | comm | imbalance
+    roofline: dict                   # achieved/peak/ceiling ops-per-cycle
+
+    @property
+    def cycles_per_eval(self) -> float:
+        return self.cycles / max(self.interleave, 1)
+
+    def to_dict(self) -> dict:
+        return {"substrate": self.substrate,
+                "cycles": self.cycles,
+                "interleave": self.interleave,
+                "cycles_per_eval": self.cycles_per_eval,
+                "per_core": {str(c): dict(t)
+                             for c, t in sorted(self.per_core.items())},
+                "totals": dict(self.totals),
+                "fractions": dict(self.fractions),
+                "bottleneck": self.bottleneck,
+                "bottleneck_group": self.bottleneck_group,
+                "roofline": dict(self.roofline)}
+
+    def table(self) -> str:
+        """Fixed-width text table (one row per core + totals)."""
+        head = f"{'core':>6} " + " ".join(f"{c:>9}" for c in CLASSES)
+        lines = [head]
+        for core, tot in sorted(self.per_core.items()):
+            lines.append(f"{core:>6} "
+                         + " ".join(f"{tot[c]:>9}" for c in CLASSES))
+        lines.append(f"{'total':>6} "
+                     + " ".join(f"{self.totals[c]:>9}" for c in CLASSES))
+        lines.append(f"bottleneck: {self.bottleneck} "
+                     f"({self.bottleneck_group}-bound, "
+                     f"{self.fractions[self.bottleneck]:.1%} of "
+                     f"core-cycles)")
+        return "\n".join(lines)
+
+
+def _finalize(substrate: str, cycles: int, interleave: int,
+              per_core: dict, roofline: dict) -> Attribution:
+    n_cores = max(len(per_core), 1)
+    totals = {c: sum(t[c] for t in per_core.values()) for c in CLASSES}
+    denom = max(n_cores * cycles, 1)
+    fractions = {c: round(totals[c] / denom, 6) for c in CLASSES}
+    overhead = sum(totals[c] for c in CLASSES if c != "issue")
+    if overhead == 0 or overhead / denom < _OVERHEAD_THRESHOLD:
+        bottleneck = "issue"
+    else:
+        # dominant overhead class; ties break in CLASSES order so the
+        # name is deterministic
+        bottleneck = max((c for c in CLASSES if c != "issue"),
+                         key=lambda c: (totals[c], -CLASSES.index(c)))
+    return Attribution(
+        substrate=substrate, cycles=int(cycles),
+        interleave=max(int(interleave), 1),
+        per_core=per_core, totals=totals, fractions=fractions,
+        bottleneck=bottleneck,
+        bottleneck_group=GROUP_OF_CLASS[bottleneck],
+        roofline=roofline)
+
+
+def _roofline(cycles: int, useful_ops: int, comm_values: int,
+              num_pes: int, n_cores: int, link_width: int) -> dict:
+    """Compute-vs-comm roofline point of one artifact.
+
+    ``intensity`` is operational intensity in ops per communicated
+    value; the comm ceiling is the modeled NoC delivery bound at that
+    intensity (every core's injection port admits ``link_width`` values
+    per cycle). ``bound`` names which roof is lower at this point —
+    independent corroboration of the cycle-level bottleneck classes.
+    """
+    cycles = max(int(cycles), 1)
+    achieved = useful_ops / cycles
+    peak = float(num_pes * max(n_cores, 1))
+    intensity = useful_ops / max(comm_values, 1)
+    comm_ceiling = (float("inf") if comm_values == 0
+                    else intensity * link_width * max(n_cores, 1))
+    return {"achieved_ops_per_cycle": round(achieved, 4),
+            "peak_ops_per_cycle": peak,
+            "intensity_ops_per_value": round(intensity, 4),
+            "comm_values_per_batch": int(comm_values),
+            "comm_ceiling_ops_per_cycle": (
+                None if comm_ceiling == float("inf")
+                else round(comm_ceiling, 4)),
+            "utilization": round(achieved / peak, 4),
+            "bound": ("communication" if comm_ceiling < peak
+                      else "compute")}
+
+
+def attribute_multicore(mcp, interleave: int = 1) -> Attribution:
+    """Exact attribution of a compiled ``MultiCoreProgram``.
+
+    Runs one recorded 1-row lockstep probe (cycle counts are
+    value-independent, so the probe IS the serving timeline), splits
+    each core's recorded stall total into latency / link-contention /
+    injection-arbitration shares using the NoC transit log, and returns
+    the five-class decomposition plus the roofline point.
+    """
+    from .timeline import record_multicore
+
+    recorder, res = record_multicore(mcp)
+    totals = recorder.core_totals()
+
+    # ---- carve link/inject waits out of each destination core's stall -
+    # Per transit the recorder logged (send, arrival, inject-wait); the
+    # uncontended window is hops * hop_latency + serial cycles, so the
+    # excess beyond it is contention: inject-wait at the source NIC plus
+    # link serialization conflicts along the route. Both delay exactly
+    # the rows the *destination* core flow-control stalls on, so they
+    # are charged there — clamped to the stall cycles actually recorded
+    # (attribution never invents cycles; the residual stays ``stall``).
+    icfg = mcp.plan.icfg
+    n_geom = mcp.plan.n_geom
+    eff_of_phys = {mcp.plan.geometry(cp.core): cp.core for cp in mcp.cores}
+    inject_raw: dict[int, int] = {}
+    link_raw: dict[int, int] = {}
+    for transit in recorder.row_transits:
+        row_id, src, dst, send, arrival, members = transit[:6]
+        inject = int(transit[6]) if len(transit) > 6 else 0
+        base = (icfg.hops(src, dst, n_geom) * icfg.hop_latency
+                + icfg.serial_cycles(members))
+        excess = max(int(arrival - send) - base, 0)
+        dst_eff = eff_of_phys.get(int(dst), int(dst))
+        inject_raw[dst_eff] = inject_raw.get(dst_eff, 0) + min(inject,
+                                                               excess)
+        link_raw[dst_eff] = (link_raw.get(dst_eff, 0)
+                             + max(excess - inject, 0))
+
+    per_core: dict[int, dict[str, int]] = {}
+    for core, tot in totals.items():
+        stall = tot["stall"]
+        inject = min(inject_raw.get(core, 0), stall)
+        link = min(link_raw.get(core, 0), stall - inject)
+        per_core[core] = {"issue": tot["issue"],
+                          "stall": stall - inject - link,
+                          "barrier": tot["barrier"],
+                          "link": link, "inject": inject}
+
+    roofline = _roofline(res.cycles, res.useful_ops,
+                         mcp.plan.volume, mcp.cfg.num_pes,
+                         len(mcp.cores), icfg.link_width)
+    return _finalize("vliw-mc", res.cycles, interleave, per_core, roofline)
+
+
+def attribute_single(cycles: int, useful_ops: int,
+                     num_pes: int) -> Attribution:
+    """Trivial attribution of a single-core ``vliw-sim`` artifact.
+
+    One core, no interconnect: every global cycle issues exactly one
+    VLIW instruction — no flow-control stalls, no barrier, no NoC.
+    """
+    per_core = {0: {"issue": int(cycles), "stall": 0, "barrier": 0,
+                    "link": 0, "inject": 0}}
+    roofline = _roofline(cycles, useful_ops, 0, num_pes, 1, 0)
+    return _finalize("vliw-sim", cycles, 1, per_core, roofline)
+
+
+def attribute_artifact(artifact) -> Attribution | None:
+    """Attribution of a compiled runtime artifact, or ``None`` when the
+    substrate has no cycle model (numpy / leveled-jax / pallas).
+
+    ``vliw-mc``/``vliw-sim`` artifacts carry their attribution in
+    ``meta["attribution"]`` (attached at compile time); this re-derives
+    it from the payload — the from-scratch path the tests cross-check
+    the cached meta against.
+    """
+    if artifact.substrate == "vliw-mc":
+        mcp = artifact.payload[0]
+        return attribute_multicore(
+            mcp, interleave=int(artifact.meta.get("interleave", 1)))
+    if artifact.substrate == "vliw-sim":
+        from ..core.processor.config import PTREE, PVECT
+        vprog = artifact.payload[0]
+        by_name = {c.name: c for c in (PTREE, PVECT)}
+        cfg = by_name.get(artifact.meta.get("processor"), PTREE)
+        return attribute_single(vprog.num_cycles, vprog.n_useful_ops,
+                                num_pes=cfg.num_pes)
+    return None

@@ -1,0 +1,246 @@
+"""Telemetry export: OpenMetrics text, JSONL event streams, reports.
+
+Three ways out of the process for the observability state PR 6-9 built
+up in-memory:
+
+- :func:`render_openmetrics` — the metrics registry as OpenMetrics
+  text exposition (counters as ``_total``, gauges, histograms as
+  summaries with ``quantile`` labels, terminated by ``# EOF``), plus
+  :func:`parse_openmetrics`, a minimal line parser used by the
+  round-trip test to prove the rendering is well-formed.
+- :class:`JsonlExporter` — append-only JSONL event stream: each
+  :meth:`~JsonlExporter.tick` writes one self-describing line
+  ``{"seq", "ts", "metrics": snapshot}``; ``maybe_tick`` rate-limits
+  to a configured interval for use inside serving loops. The clock is
+  injectable for deterministic tests.
+- :func:`observatory_report` / :func:`write_observatory_report` — one
+  self-contained JSON observatory report for a live
+  :class:`~repro.runtime.server.Server`: cycle-attribution tables and
+  roofline points for every VLIW artifact (:mod:`repro.obs.attr`),
+  SLO/burn-rate status (:mod:`repro.obs.slo`), the resilience
+  snapshot, autotune decisions, the full metrics snapshot, and the
+  OpenMetrics text — what ``serve --observe report.json`` emits.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from . import metrics as _metrics
+from .attr import CLASSES
+
+__all__ = ["render_openmetrics", "parse_openmetrics", "JsonlExporter",
+           "observatory_report", "write_observatory_report",
+           "attribution_table"]
+
+_QUANTILES = (("0.5", 50), ("0.95", 95), ("0.99", 99))
+
+
+def _om_name(name: str) -> str:
+    """OpenMetrics metric name: dots and dashes become underscores."""
+    out = []
+    for ch in name:
+        out.append(ch if ch.isalnum() or ch == "_" else "_")
+    s = "".join(out)
+    return s if not s[:1].isdigit() else "_" + s
+
+
+# --------------------------------------------------------------------- #
+# OpenMetrics text exposition
+# --------------------------------------------------------------------- #
+def render_openmetrics(registry: _metrics.Registry | None = None) -> str:
+    """The registry as OpenMetrics text exposition format.
+
+    Counters render as ``<name>_total``, gauges as plain samples, and
+    histograms as OpenMetrics summaries (``quantile`` labels plus
+    ``_sum``/``_count``). The output always ends with the mandatory
+    ``# EOF`` terminator.
+    """
+    reg = registry if registry is not None else _metrics.REGISTRY
+    lines: list[str] = []
+    for name in reg.names():
+        m = reg._metrics[name]
+        om = _om_name(name)
+        if isinstance(m, _metrics.Counter):
+            lines.append(f"# TYPE {om} counter")
+            lines.append(f"{om}_total {m.value}")
+        elif isinstance(m, _metrics.Gauge):
+            lines.append(f"# TYPE {om} gauge")
+            lines.append(f"{om} {m.value}")
+        elif isinstance(m, _metrics.Histogram):
+            lines.append(f"# TYPE {om} summary")
+            if m.count:
+                for label, p in _QUANTILES:
+                    lines.append(f'{om}{{quantile="{label}"}} '
+                                 f"{m.percentile(p)}")
+            lines.append(f"{om}_sum {m.sum}")
+            lines.append(f"{om}_count {m.count}")
+    lines.append("# EOF")
+    return "\n".join(lines) + "\n"
+
+
+def parse_openmetrics(text: str) -> dict:
+    """Minimal OpenMetrics parser (the subset we render).
+
+    Returns ``{family: {"type": t, "samples": [(name, labels, value)]}}``
+    and raises :class:`ValueError` on malformed lines or a missing
+    ``# EOF`` terminator — the round-trip check in
+    ``tests/test_observatory.py``.
+    """
+    families: dict[str, dict] = {}
+    saw_eof = False
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if saw_eof:
+            raise ValueError("content after # EOF")
+        if line == "# EOF":
+            saw_eof = True
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4:
+                raise ValueError(f"malformed TYPE line: {raw!r}")
+            _h, _t, fam, typ = parts
+            families.setdefault(fam, {"type": typ, "samples": []})
+            continue
+        if line.startswith("#"):
+            continue
+        # sample line: name[{labels}] value
+        labels: dict[str, str] = {}
+        rest = line
+        if "{" in line:
+            name, rest = line.split("{", 1)
+            labelstr, rest = rest.split("}", 1)
+            for pair in labelstr.split(","):
+                if not pair:
+                    continue
+                k, v = pair.split("=", 1)
+                labels[k.strip()] = v.strip().strip('"')
+        else:
+            name, rest = line.split(None, 1)
+        try:
+            value = float(rest.strip())
+        except ValueError as e:
+            raise ValueError(f"malformed sample line: {raw!r}") from e
+        name = name.strip()
+        fam = name
+        for suffix in ("_total", "_sum", "_count"):
+            if fam.endswith(suffix) and fam[:-len(suffix)] in families:
+                fam = fam[:-len(suffix)]
+                break
+        if fam not in families:
+            raise ValueError(f"sample before TYPE declaration: {raw!r}")
+        families[fam]["samples"].append((name, labels, value))
+    if not saw_eof:
+        raise ValueError("missing # EOF terminator")
+    return families
+
+
+# --------------------------------------------------------------------- #
+# JSONL event stream
+# --------------------------------------------------------------------- #
+class JsonlExporter:
+    """Append-only JSONL stream of registry snapshots.
+
+    Each :meth:`tick` appends one line; :meth:`maybe_tick` only fires
+    when at least ``interval_s`` has elapsed since the last tick —
+    suitable for calling from inside a serving loop unconditionally.
+    """
+
+    def __init__(self, path, *, registry: _metrics.Registry | None = None,
+                 interval_s: float = 0.0, clock=time.time):
+        self.path = str(path)
+        self.registry = registry if registry is not None \
+            else _metrics.REGISTRY
+        self.interval_s = float(interval_s)
+        self.clock = clock
+        self.seq = 0
+        self._last: float | None = None
+
+    def tick(self) -> dict:
+        """Snapshot the registry and append one JSONL line."""
+        now = self.clock()
+        event = {"seq": self.seq, "ts": round(float(now), 6),
+                 "metrics": self.registry.snapshot()}
+        with open(self.path, "a") as fh:
+            fh.write(json.dumps(event, sort_keys=True) + "\n")
+        self.seq += 1
+        self._last = now
+        return event
+
+    def maybe_tick(self) -> dict | None:
+        """Tick only if the interval elapsed; ``None`` when skipped."""
+        now = self.clock()
+        if self._last is not None and now - self._last < self.interval_s:
+            return None
+        return self.tick()
+
+    @staticmethod
+    def read(path) -> list[dict]:
+        with open(path) as fh:
+            return [json.loads(line) for line in fh if line.strip()]
+
+
+# --------------------------------------------------------------------- #
+# the observatory report
+# --------------------------------------------------------------------- #
+def attribution_table(attr: dict) -> str:
+    """Fixed-width text table from a serialized attribution dict
+    (``Attribution.to_dict()`` shape, as stored in artifact meta)."""
+    head = f"{'core':>6} " + " ".join(f"{c:>9}" for c in CLASSES)
+    lines = [head]
+    for core in sorted(attr["per_core"], key=int):
+        tot = attr["per_core"][core]
+        lines.append(f"{core:>6} "
+                     + " ".join(f"{tot[c]:>9}" for c in CLASSES))
+    lines.append(f"{'total':>6} "
+                 + " ".join(f"{attr['totals'][c]:>9}" for c in CLASSES))
+    lines.append(f"bottleneck: {attr['bottleneck']} "
+                 f"({attr['bottleneck_group']}-bound)")
+    return "\n".join(lines)
+
+
+def observatory_report(server) -> dict:
+    """One self-contained observatory report for a live server.
+
+    Sections: per-artifact cycle attribution (tables + rooflines +
+    named bottlenecks), SLO status, resilience snapshot, autotune
+    decisions, the metrics snapshot, and the OpenMetrics rendering —
+    everything JSON-serializable.
+    """
+    stats = server.stats()
+    artifacts = []
+    for art in server.cache.artifacts():
+        attr = art.meta.get("attribution")
+        if not attr:
+            continue
+        artifacts.append({
+            "substrate": art.substrate,
+            "semiring": getattr(art, "semiring", None),
+            "bottleneck": art.meta.get("bottleneck"),
+            "attribution": attr,
+            "table": attribution_table(attr),
+        })
+    return {
+        "version": 1,
+        "config": {name: sub.config_fingerprint()
+                   for name, sub in server.substrates.items()},
+        "attribution": artifacts,
+        "slo": stats.get("slo", {}),
+        "resilience": stats.get("resilience", {}),
+        "autotune": stats.get("autotune", {}),
+        "multicore": stats.get("multicore", {}),
+        "metrics": stats.get("metrics", {}),
+        "openmetrics": render_openmetrics(),
+    }
+
+
+def write_observatory_report(path, server) -> dict:
+    """Write :func:`observatory_report` as JSON; returns the report."""
+    report = observatory_report(server)
+    with open(path, "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return report

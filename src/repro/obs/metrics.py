@@ -90,12 +90,26 @@ class Histogram:
             self._head = (self._head + 1) % self._cap
 
     def percentile(self, p: float) -> float:
-        """Linearly-interpolated percentile ``p`` in [0, 100]."""
+        """Linearly-interpolated percentile ``p`` in [0, 100].
+
+        Matches ``numpy.percentile(xs, p)`` over the retained samples.
+        Defined at every edge: ``p`` outside [0, 100] raises
+        :class:`ValueError` (it used to wrap around via negative
+        indexing), zero samples return ``nan``, one sample returns that
+        sample for every ``p``, and ``p=0``/``p=100`` return the exact
+        min/max with no interpolation roundoff.
+        """
+        if not 0.0 <= p <= 100.0:
+            raise ValueError(f"percentile out of range: {p!r}")
         if not self._ring:
             return math.nan
         xs = sorted(self._ring)
         if len(xs) == 1:
             return xs[0]
+        if p == 0.0:
+            return xs[0]
+        if p == 100.0:
+            return xs[-1]
         rank = (p / 100.0) * (len(xs) - 1)
         lo = int(math.floor(rank))
         hi = min(lo + 1, len(xs) - 1)

@@ -1,0 +1,161 @@
+"""SLO tracking: latency/error-budget objectives with burn rates.
+
+One :class:`SLOTracker` per server watches every served
+``(substrate, semiring)`` pair over a rolling time window and answers
+the operational questions the raw latency histograms can't:
+
+- **Am I meeting the objective?** An event *breaches* when the request
+  failed or its latency exceeded the objective's target; the window's
+  breach fraction is compared against the allowed ``error_budget``.
+- **How fast am I burning budget?** ``burn_rate`` is the classic SRE
+  ratio *breach-fraction / error-budget*: 1.0 means breaching at
+  exactly the allowed rate (the budget lasts precisely one window),
+  10.0 means the window's budget is gone in a tenth of the window.
+- **Should I shed load now?** :meth:`SLOTracker.should_shed` fires when
+  the burn rate crosses the objective's ``shed_burn_rate`` with enough
+  samples in the window — the *before the budget burns* signal
+  :meth:`repro.runtime.Server.query` turns into
+  :class:`~repro.runtime.resilience.Backpressure` (only when the
+  server was constructed with an explicit ``slo=`` objective; plain
+  servers track and report but never shed).
+
+The clock is injectable, so the burn-rate math is unit-testable on a
+fake clock (``tests/test_observatory.py``), and every structure is
+bounded: one deque per served key, pruned to the window on touch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+__all__ = ["SLObjective", "SLOTracker", "DEFAULT_OBJECTIVE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SLObjective:
+    """One latency/error objective for a (substrate, query-kind) pair."""
+    latency_target_us: float = 250_000.0   # request latency objective
+    error_budget: float = 0.01             # allowed breach fraction
+    window_s: float = 60.0                 # rolling window length
+    min_samples: int = 20                  # below this, never shed
+    shed_burn_rate: float = 10.0           # shed when burning this fast
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+DEFAULT_OBJECTIVE = SLObjective()
+
+
+class SLOTracker:
+    """Rolling-window SLO state for every served (substrate, semiring).
+
+    ``objectives`` maps keys to per-pair overrides; a key is either a
+    ``(substrate, semiring)`` tuple, a bare substrate name (applies to
+    every semiring on it), or ``"default"``. ``objective`` is a
+    shorthand for ``{"default": objective}``.
+    """
+
+    def __init__(self, objective: SLObjective | None = None, *,
+                 objectives: dict | None = None,
+                 clock=time.monotonic):
+        self.clock = clock
+        self._objectives: dict = dict(objectives or {})
+        if objective is not None:
+            self._objectives.setdefault("default", objective)
+        self._objectives.setdefault("default", DEFAULT_OBJECTIVE)
+        # (substrate, semiring) -> deque[(t, latency_us, breached)]
+        self._events: dict[tuple, deque] = {}
+
+    # ---------------- configuration ------------------------------------ #
+    def objective_for(self, substrate: str, semiring: str) -> SLObjective:
+        for key in ((substrate, semiring), substrate, "default"):
+            obj = self._objectives.get(key)
+            if obj is not None:
+                return obj
+        return DEFAULT_OBJECTIVE
+
+    # ---------------- recording ---------------------------------------- #
+    def record(self, substrate: str, semiring: str, latency_us: float,
+               ok: bool = True) -> None:
+        """One finished request: latency + outcome.
+
+        A breach is a failed request or one over the latency target —
+        evaluated against the pair's objective at record time.
+        """
+        obj = self.objective_for(substrate, semiring)
+        breached = (not ok) or latency_us > obj.latency_target_us
+        key = (substrate, semiring)
+        dq = self._events.get(key)
+        if dq is None:
+            dq = self._events[key] = deque()
+        now = self.clock()
+        dq.append((now, float(latency_us), breached))
+        self._prune(dq, now - obj.window_s)
+
+    @staticmethod
+    def _prune(dq: deque, horizon: float) -> None:
+        while dq and dq[0][0] < horizon:
+            dq.popleft()
+
+    # ---------------- the SLO math -------------------------------------- #
+    def status(self, substrate: str, semiring: str) -> dict:
+        """Window snapshot: counts, breach fraction, burn rate, verdict.
+
+        ``burn_rate`` = breach-fraction / error-budget over the rolling
+        window (1.0 = consuming the budget exactly as fast as allowed);
+        ``budget_remaining`` is the fraction of the window's budget left
+        (clamped at 0 — a burn rate over 1 exhausts it).
+        """
+        obj = self.objective_for(substrate, semiring)
+        dq = self._events.get((substrate, semiring))
+        now = self.clock()
+        if dq is not None:
+            self._prune(dq, now - obj.window_s)
+        events = list(dq or ())
+        total = len(events)
+        breaches = sum(1 for _t, _l, b in events if b)
+        frac = breaches / total if total else 0.0
+        burn = frac / obj.error_budget if obj.error_budget > 0 \
+            else (float("inf") if breaches else 0.0)
+        return {
+            "objective": obj.to_dict(),
+            "window_events": total,
+            "breaches": breaches,
+            "breach_fraction": round(frac, 6),
+            "burn_rate": round(burn, 4),
+            "budget_remaining": round(max(0.0, 1.0 - burn), 4),
+            "healthy": frac <= obj.error_budget,
+            "shedding": self._should_shed(obj, total, burn),
+        }
+
+    @staticmethod
+    def _should_shed(obj: SLObjective, total: int, burn: float) -> bool:
+        return total >= obj.min_samples and burn >= obj.shed_burn_rate
+
+    def should_shed(self, substrate: str, semiring: str) -> bool:
+        """True when the pair is burning its error budget fast enough
+        that admitting more load would torch the rest of the window —
+        the admission-control consult in the hardened request path."""
+        obj = self.objective_for(substrate, semiring)
+        dq = self._events.get((substrate, semiring))
+        if not dq:
+            return False
+        now = self.clock()
+        self._prune(dq, now - obj.window_s)
+        total = len(dq)
+        if total < obj.min_samples:
+            return False
+        breaches = sum(1 for _t, _l, b in dq if b)
+        frac = breaches / total
+        burn = frac / obj.error_budget if obj.error_budget > 0 \
+            else (float("inf") if breaches else 0.0)
+        return burn >= obj.shed_burn_rate
+
+    # ---------------- introspection ------------------------------------- #
+    def snapshot(self) -> dict:
+        """``{"substrate/semiring": status, ...}`` for every tracked
+        pair — the ``Server.stats()["slo"]`` section."""
+        return {f"{s}/{q}": self.status(s, q)
+                for (s, q) in sorted(self._events)}

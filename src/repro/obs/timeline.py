@@ -45,7 +45,8 @@ class TimelineRecorder:
         self.comm_events: list[tuple] = []
         # ((src_node, dst_node), start, end, row_id)
         self.link_intervals: list[tuple] = []
-        # (row_id, src_core, dst_core, send_cycle, arrival_cycle, members)
+        # (row_id, src_core, dst_core, send_cycle, arrival_cycle,
+        #  members, inject_wait_cycles)
         self.row_transits: list[tuple] = []
         self.cycles = 0
 
@@ -68,8 +69,13 @@ class TimelineRecorder:
         self.link_intervals.append((link, start, end, row_id))
 
     def row_transit(self, row_id: int, src: int, dst: int,
-                    send: int, arrival: int, members: int) -> None:
-        self.row_transits.append((row_id, src, dst, send, arrival, members))
+                    send: int, arrival: int, members: int,
+                    inject: int = 0) -> None:
+        """``inject`` is the injection-port arbitration wait the
+        transfer paid at the source NIC — the attribution engine
+        (:mod:`repro.obs.attr`) splits it from link contention."""
+        self.row_transits.append((row_id, src, dst, send, arrival,
+                                  members, inject))
 
     # ------------- aggregation ------------------------------------------ #
     @property
@@ -123,14 +129,17 @@ class TimelineRecorder:
         if self.row_transits:
             events.append({"ph": "M", "name": "thread_name", "pid": pid,
                            "tid": _NOC_TID, "args": {"name": "NoC rows"}})
-            for row_id, src, dst, send, arrival, members in self.row_transits:
+            for transit in self.row_transits:
+                row_id, src, dst, send, arrival, members = transit[:6]
+                inject = transit[6] if len(transit) > 6 else 0
                 events.append({
                     "name": f"row {row_id}: {src}->{dst}", "ph": "X",
                     "ts": float(send), "dur": float(max(arrival - send, 1)),
                     "pid": pid, "tid": _NOC_TID, "cat": "noc",
                     "args": {"row": row_id, "src": src, "dst": dst,
                              "members": members,
-                             "latency": arrival - send},
+                             "latency": arrival - send,
+                             "inject_wait": inject},
                 })
         link_tid: dict[tuple, int] = {}
         for link, start, end, row_id in self.link_intervals:

@@ -158,7 +158,13 @@ class MicroBatcher:
     def _flush_split(self, queue) -> None:
         """Per-member retry after a failed coalesced execute: rows from
         non-faulty requests still get correct results; only the members
-        that fail on their own carry an exception."""
+        that fail on their own carry an exception.
+
+        Every retried member gets its own ``batch.flush`` span carrying
+        the member's ORIGINAL ``trace_id`` (and a ``split_retry`` mark),
+        so in the trace view the re-execution still links back to the
+        request that submitted the rows — the coalesced flush's error
+        span alone would orphan them."""
         metrics.counter("batch.split_retries").inc()
         trace.instant("batch.split_retry", {"requests": len(queue)})
         for leaves, pending in queue:
@@ -169,7 +175,15 @@ class MicroBatcher:
                 pad = np.ones((k_pad - k, leaves.shape[1]), leaves.dtype)
                 rows = np.concatenate([leaves, pad], axis=0)
             try:
-                vals = np.asarray(self.execute(rows))[:k]
+                # the span wraps only the execute: a failing member's
+                # error span is recorded first, then the exception is
+                # stored on the pending (not propagated)
+                with trace.span("batch.flush",
+                                lambda: {"requests": 1, "rows": k,
+                                         "padded_rows": k_pad - k,
+                                         "trace_ids": [pending.trace_id],
+                                         "split_retry": True}):
+                    vals = np.asarray(self.execute(rows))[:k]
             except Exception as exc:
                 pending._exc = exc
             else:

@@ -32,6 +32,7 @@ counters) and surface in ``Server.stats()["resilience"]``.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import re
 import time
@@ -498,5 +499,7 @@ class ResilienceManager:
                                       "trips": b.trips}
                          for (s, q), b in sorted(self._breakers.items())},
             "redirects": dict(self.redirects),
-            "history": list(self.history),
+            # deep copy: history entries are dicts — callers mutating a
+            # stats() snapshot must never corrupt the live record
+            "history": copy.deepcopy(self.history),
         }

@@ -22,6 +22,7 @@ shared by serve and the tests.
 """
 from __future__ import annotations
 
+import copy
 import time
 import weakref
 
@@ -32,6 +33,7 @@ from ..core.multicore.comm import LinkDownError
 from ..core.processor.config import PTREE, ProcessorConfig
 from ..core.spn import SPN
 from ..obs import metrics, trace
+from ..obs.slo import SLObjective, SLOTracker
 from .batcher import MicroBatcher, PendingResult
 from .cache import ArtifactCache
 from .resilience import (Backpressure, CircuitOpen, CoreFault, FabricError,
@@ -66,7 +68,8 @@ class Server:
                  batch_tile: int = LANE,
                  max_rows: int = 4096,
                  faults=None,
-                 resilience: ResiliencePolicy | None = None):
+                 resilience: ResiliencePolicy | None = None,
+                 slo: SLObjective | dict | None = None):
         if prog is None:
             if spn is None:
                 raise ValueError("need an SPN or a lowered TensorProgram")
@@ -106,6 +109,15 @@ class Server:
         self._hardened = faults is not None or resilience is not None
         self.resilience = ResilienceManager(
             resilience, n_cores=cores, injector=self._injector)
+        # ---- SLO tracking (see repro.obs.slo) -------------------------
+        # The tracker always records (``stats()["slo"]`` is free), but
+        # burn-rate *shedding* only engages when the caller passed an
+        # explicit objective: a plain Server never rejects work it used
+        # to accept.
+        if isinstance(slo, dict):
+            slo = SLObjective(**slo)
+        self._slo_shedding = slo is not None
+        self.slo = SLOTracker(slo)
 
     # ---------------- compilation ----------------------------------------- #
     def substrate(self, name: str) -> Substrate:
@@ -225,14 +237,29 @@ class Server:
         End-to-end latency (admission through execute) is observed into
         the per-substrate ``serve.latency_us.<name>`` histogram — the
         p50/p95/p99 source for ``Server.stats()["metrics"]`` and
-        ``BENCH_serve.json``.
+        ``BENCH_serve.json`` — and into the SLO tracker
+        (``stats()["slo"]``): failures and over-target latencies burn
+        the (substrate, query-kind) error budget, and a server
+        constructed with an explicit ``slo=`` objective sheds load
+        (:class:`Backpressure`) once the burn rate crosses the
+        objective's threshold — *before* the budget is gone.
         """
         t0 = time.perf_counter()
         name = canonical(substrate)
-        values = self._query_resilient(x, query, name, t0)
-        metrics.histogram(
-            "serve.latency_us." + name).observe(
-            (time.perf_counter() - t0) * 1e6)
+        semiring = SEMIRING_OF_QUERY.get(query, query)
+        try:
+            values = self._query_resilient(x, query, name, t0)
+        except (ValueError, TypeError):
+            raise               # client errors don't burn the budget
+        except Backpressure:
+            raise               # shed work was never admitted
+        except Exception:
+            self.slo.record(name, semiring,
+                            (time.perf_counter() - t0) * 1e6, ok=False)
+            raise
+        latency_us = (time.perf_counter() - t0) * 1e6
+        metrics.histogram("serve.latency_us." + name).observe(latency_us)
+        self.slo.record(name, semiring, latency_us)
         return values
 
     def query_once(self, x: np.ndarray, query: str = "joint",
@@ -251,6 +278,13 @@ class Server:
         deadline = t0 + pol.timeout_s
         serving = mgr.redirects.get(name, name)
         semiring = SEMIRING_OF_QUERY.get(query, query)
+        if self._slo_shedding and self.slo.should_shed(name, semiring):
+            # burn-rate admission control: shed before the breaker pays
+            # a failed attempt and before the window's budget is gone
+            metrics.counter("fault.slo_shed").inc()
+            raise Backpressure(
+                f"SLO burn rate for {name}/{semiring} exceeds the "
+                "shedding threshold; retry after the window cools")
         last_exc: Exception | None = None
         attempted = False
         for target in mgr.chain(serving, self.substrates):
@@ -368,7 +402,12 @@ class Server:
         """Serving statistics (backward-compatible keys) + a read-only
         snapshot of the process-global metrics registry (``"metrics"``:
         request counters, per-substrate latency percentiles, batch fill,
-        cache hit counters — see :mod:`repro.obs.metrics`)."""
+        cache hit counters — see :mod:`repro.obs.metrics`) + the SLO
+        burn-rate status (``"slo"``, see :mod:`repro.obs.slo`).
+
+        The returned structure is a **deep copy**: mutating it can never
+        corrupt the server's live registries or resilience history.
+        """
         out = {"metrics": metrics.snapshot(),
                "cache": self.cache.stats(),
                "compiles": {n: s.compile_count
@@ -377,6 +416,7 @@ class Server:
                "batchers": {},
                "multicore": {},
                "autotune": {},
+               "slo": self.slo.snapshot(),
                "resilience": self.resilience.stats()}
         for art, b in self._batchers.items():
             out["batchers"][f"{art.semiring}/{art.substrate}"] = dict(
@@ -414,6 +454,8 @@ class Server:
                         mc["comm"].get("link_stall_cycles", 0),
                     "inject_stall_cycles":
                         mc["comm"].get("inject_stall_cycles", 0),
+                    # cycle-attribution verdict (see repro.obs.attr)
+                    "bottleneck": art.meta.get("bottleneck"),
                 }
             # autotune outcomes: winning config, tuned vs default
             # cycles/eval, and the core-count fallback decisions
@@ -431,7 +473,7 @@ class Server:
                 degraded[key] = art.meta["degraded"]
         if degraded:
             out["resilience"]["degraded_artifacts"] = degraded
-        return out
+        return copy.deepcopy(out)
 
 
 def verify_parity(server: Server, x: np.ndarray, *, query: str = "marginal",

@@ -43,6 +43,7 @@ import numpy as np
 from ..core import executors, multicore, program, segments
 from ..core.processor import fastsim, sim
 from ..core.processor.config import PTREE, ProcessorConfig
+from ..obs.attr import attribute_multicore, attribute_single
 
 LANE = 128    # kernel lane tile — the batcher's padding unit
 
@@ -270,10 +271,15 @@ class VliwSimSubstrate(Substrate):
         from ..core.compiler.pipeline import compile_program
         vprog = compile_program(prog, self.processor)
         dense = fastsim.decode(vprog, self.processor)
+        attribution = attribute_single(vprog.num_cycles,
+                                       vprog.n_useful_ops,
+                                       self.processor.num_pes)
         meta = {"cycles": vprog.num_cycles,
                 "ops_per_cycle": vprog.ops_per_cycle,
                 "n_useful_ops": vprog.n_useful_ops,
-                "processor": self.processor.name}
+                "processor": self.processor.name,
+                "attribution": attribution.to_dict(),
+                "bottleneck": attribution.bottleneck}
         return (vprog, dense, {}), meta
 
     def _finish(self, artifact, root_f32: np.ndarray) -> np.ndarray:
@@ -453,12 +459,15 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
                     chosen=1, reason="single-core-fallback"
                     if alive is None else "degraded-single-core")
         dense = multicore.decode_multicore(mcp, cycles=mcp.meta["cycles"])
+        attribution = attribute_multicore(mcp)
         meta = {"cycles": mcp.meta["cycles"],
                 "ops_per_cycle": mcp.meta["ops_per_cycle"],
                 "n_useful_ops": dense.n_useful_ops,
                 "processor": self.processor.name,
                 "core_decision": decision,
-                "multicore": mcp.meta}
+                "multicore": mcp.meta,
+                "attribution": attribution.to_dict(),
+                "bottleneck": attribution.bottleneck}
         return (mcp, dense, {}), meta
 
     def _build_tuned(self, prog, tc, tune_summary):
@@ -484,6 +493,7 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
             max_arity=tc.max_arity)
         dense = fastsim.decode(compile_program(prog, self.processor),
                                self.processor)
+        attribution = attribute_multicore(mcp, interleave=k)
         meta = {"cycles": mcp.meta["cycles"],
                 "cycles_per_eval": mcp.meta["cycles"] / k,
                 "interleave": k,
@@ -494,7 +504,9 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
                 "core_decision": {"requested": self.cores,
                                   "chosen": tc.cores,
                                   "reason": "autotune"},
-                "multicore": mcp.meta}
+                "multicore": mcp.meta,
+                "attribution": attribution.to_dict(),
+                "bottleneck": attribution.bottleneck}
         return (mcp, dense, {}), meta
 
     def execute(self, artifact, leaves):

@@ -47,6 +47,24 @@ except ImportError:
         def sampled_from(elements):
             return _Strategy(elements)
 
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            """Representative lists: each endpoint value alone (at the
+            minimum feasible size), the full value cycle padded to
+            ``max_size``, and the empty list when allowed."""
+            ev = list(elements.values)
+            out = []
+            if min_size == 0:
+                out.append([])
+            lo = max(min_size, 1)
+            for v in ev:
+                out.append([v] * lo)
+            cycle = [ev[i % len(ev)] for i in range(max_size)]
+            if len(cycle) >= min_size:
+                out.append(cycle)
+            return _Strategy([x for x in out if min_size <= len(x)
+                              <= max_size])
+
     def settings(**_kw):
         def deco(fn):
             return fn

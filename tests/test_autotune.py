@@ -92,13 +92,16 @@ def test_tune_survives_infeasible_trials(nltcs_prog, monkeypatch):
         return real(prog, cfg, n_cores, *args, **kw)
 
     monkeypatch.setattr(mc_compile, "compile_multicore", flaky)
-    res = tune_program(nltcs_prog, PTREE, max_cores=4, budget=8,
+    # budget 16 guarantees the seeded sweep reaches the level-strategy
+    # candidate even after the attribution-guided phase spends its slots
+    res = tune_program(nltcs_prog, PTREE, max_cores=4, budget=16,
                        use_cache=False)
     assert res.config.strategy != "level"
     assert res.cycles_per_eval <= res.default_cycles_per_eval
     failed = [t for t in res.trials if t[1] is None]
-    assert len(failed) == 1 and "/level/" in failed[0][0]
-    assert res.evaluated == 8 and len(res.trials) == 8
+    assert len(failed) >= 1
+    assert all("/level/" in fp for fp, _, _ in failed)
+    assert res.evaluated == 16 and len(res.trials) == 16
 
 
 def test_tune_cache_memoizes(nltcs_prog):

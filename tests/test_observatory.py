@@ -1,0 +1,570 @@
+"""Serving-observatory conformance suite (PR 9).
+
+Pins the four observatory pillars end to end:
+
+- **attribution exactness** — the five cycle-attribution classes
+  (issue/stall/barrier/link/inject) sum *bit-exactly* to the checked
+  sim's lockstep cycle count, per core, for every
+  ``golden_cycles.json`` point (the PR's acceptance criterion);
+- **SLO/burn-rate math** — objective resolution, breach accounting,
+  burn rate, window pruning and shedding on an injectable fake clock,
+  plus the server-level shed path (only with an explicit ``slo=``);
+- **telemetry export** — OpenMetrics render/parse round-trip, JSONL
+  snapshot stream, and the self-contained observatory report;
+- **bench history sentinel** — deterministic fingerprints/metrics,
+  append/compare semantics, exact regression gates.
+
+Plus the satellite regressions: ``Histogram.percentile`` edge cases
+(property-tested against numpy), ``Server.stats()`` deep-copy
+isolation, split-retry ``trace_id`` propagation, the partial Chrome
+trace flushed by a crashed ``serve --trace`` run, and the
+attribution-guided autotune prior.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import multicore as mc
+from repro.core.multicore.comm import TOPOLOGIES, named_interconnect
+from repro.core.processor.config import PTREE
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace
+from repro.obs.attr import (CLASSES, GROUP_OF_CLASS, attribute_artifact,
+                            attribute_multicore, attribute_single)
+from repro.obs.export import (JsonlExporter, observatory_report,
+                              parse_openmetrics, render_openmetrics,
+                              write_observatory_report)
+from repro.obs.slo import SLObjective, SLOTracker
+from repro.runtime import Server
+from repro.runtime.batcher import MicroBatcher
+from repro.runtime.resilience import Backpressure
+
+from test_noc import GOLDEN_PATH, golden_prog
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# --------------------------------------------------------------------------- #
+# attribution exactness: classes sum bit-exactly to lockstep cycles
+# --------------------------------------------------------------------------- #
+def _golden_points():
+    golden = json.loads(GOLDEN_PATH.read_text())
+    for ds, per_cores in golden["cycles"].items():
+        for cores, per_topo in per_cores.items():
+            for topo, want in per_topo.items():
+                yield ds, int(cores), topo, int(want)
+
+
+@pytest.mark.parametrize("dataset,cores,topology,want",
+                         list(_golden_points()))
+def test_attribution_exact_on_every_golden_point(dataset, cores, topology,
+                                                 want):
+    """For every golden fixture point the five attribution classes sum
+    bit-exactly to the checked sim's cycle count on EVERY core — the
+    decomposition never invents or drops a cycle."""
+    mcp = mc.compile_multicore(golden_prog(dataset), PTREE, cores,
+                               named_interconnect(topology))
+    assert int(mcp.meta["cycles"]) == want, "fixture drift: regen golden"
+    a = attribute_multicore(mcp)
+    assert a.cycles == want
+    assert set(a.per_core) == {cp.core for cp in mcp.cores}
+    for core, tot in a.per_core.items():
+        assert set(tot) == set(CLASSES)
+        assert all(v >= 0 for v in tot.values()), (core, tot)
+        assert sum(tot.values()) == want, (
+            f"{dataset}@{cores}c/{topology} core {core}: attribution "
+            f"classes sum to {sum(tot.values())}, not {want}")
+    n = len(a.per_core)
+    assert sum(a.totals.values()) == n * want
+    assert abs(sum(a.fractions.values()) - 1.0) < 1e-5
+    assert a.bottleneck in CLASSES
+    assert a.bottleneck_group == GROUP_OF_CLASS[a.bottleneck]
+    rf = a.roofline
+    assert 0.0 < rf["utilization"] <= 1.0
+    assert rf["achieved_ops_per_cycle"] <= rf["peak_ops_per_cycle"]
+
+
+def test_attribution_contended_ring_charges_link_classes(nltcs_prog):
+    """On a deliberately narrow 8-core ring the NoC carve-out must
+    attribute some waits to latency (stall) AND to contention
+    (link/inject) — and every core must still sum exactly."""
+    icfg = named_interconnect("ring", link_width=1, hop_latency=4)
+    mcp = mc.compile_multicore(nltcs_prog, PTREE, 8, icfg)
+    a = attribute_multicore(mcp)
+    for tot in a.per_core.values():
+        assert sum(tot.values()) == a.cycles
+    assert a.totals["stall"] > 0           # hop+serialization latency
+    assert a.totals["link"] + a.totals["inject"] > 0   # contention
+
+
+def test_attribution_single_core_is_all_issue():
+    a = attribute_single(cycles=120, useful_ops=600, num_pes=8)
+    assert a.per_core == {0: {"issue": 120, "stall": 0, "barrier": 0,
+                              "link": 0, "inject": 0}}
+    assert a.bottleneck == "issue"
+    assert a.bottleneck_group == "compute"
+    assert a.roofline["achieved_ops_per_cycle"] == 5.0
+    assert a.roofline["comm_ceiling_ops_per_cycle"] is None
+    assert a.cycles_per_eval == 120
+
+
+def test_artifact_meta_attribution_matches_rederivation(nltcs_prog):
+    """The attribution attached to artifact meta at compile time equals
+    a from-scratch re-derivation from the payload (determinism)."""
+    server = Server(prog=nltcs_prog, substrates=("vliw-sim", "vliw-mc"),
+                    cores=4, topology="mesh")
+    for name in ("vliw-sim", "vliw-mc"):
+        art = server.artifact("marginal", name)
+        cached = art.meta["attribution"]
+        fresh = attribute_artifact(art).to_dict()
+        assert cached == fresh
+        assert art.meta["bottleneck"] == fresh["bottleneck"]
+    stats = server.stats()
+    key = "sum/vliw-mc"
+    assert stats["multicore"][key]["bottleneck"] in CLASSES
+
+
+def test_attribute_artifact_none_for_unmodeled_substrates(small_prog):
+    server = Server(prog=small_prog, substrates=("numpy",))
+    art = server.artifact("marginal", "numpy")
+    assert attribute_artifact(art) is None
+    assert "attribution" not in art.meta
+
+
+# --------------------------------------------------------------------------- #
+# SLO objectives, burn rate, shedding — on a fake clock
+# --------------------------------------------------------------------------- #
+def test_slo_burn_rate_math_on_fake_clock():
+    clock = FakeClock()
+    obj = SLObjective(latency_target_us=100.0, error_budget=0.1,
+                      window_s=60.0, min_samples=4, shed_burn_rate=5.0)
+    slo = SLOTracker(obj, clock=clock)
+    for _ in range(5):               # five in-budget requests
+        slo.record("vliw-mc", "sum", 50.0)
+        clock.advance(1.0)
+    for _ in range(5):               # five over-target requests
+        slo.record("vliw-mc", "sum", 500.0)
+        clock.advance(1.0)
+    s = slo.status("vliw-mc", "sum")
+    assert s["window_events"] == 10 and s["breaches"] == 5
+    assert s["breach_fraction"] == 0.5
+    assert s["burn_rate"] == pytest.approx(0.5 / 0.1)   # 5x budget burn
+    assert s["budget_remaining"] == 0.0
+    assert not s["healthy"]
+    assert s["shedding"] and slo.should_shed("vliw-mc", "sum")
+
+
+def test_slo_failures_burn_budget():
+    clock = FakeClock()
+    slo = SLOTracker(SLObjective(latency_target_us=1e9, error_budget=0.5),
+                     clock=clock)
+    slo.record("numpy", "sum", 1.0, ok=False)
+    slo.record("numpy", "sum", 1.0, ok=True)
+    s = slo.status("numpy", "sum")
+    assert s["breaches"] == 1 and s["breach_fraction"] == 0.5
+    assert s["burn_rate"] == 1.0     # burning exactly at the allowed rate
+    assert s["healthy"]              # <= budget is still healthy
+
+
+def test_slo_window_pruning_forgets_old_events():
+    clock = FakeClock()
+    obj = SLObjective(window_s=10.0, min_samples=1)
+    slo = SLOTracker(obj, clock=clock)
+    for _ in range(8):
+        slo.record("numpy", "sum", 1e9)      # all breaches
+    assert slo.status("numpy", "sum")["breaches"] == 8
+    clock.advance(11.0)                      # the window rolls past them
+    s = slo.status("numpy", "sum")
+    assert s["window_events"] == 0 and s["burn_rate"] == 0.0
+    assert s["healthy"] and not s["shedding"]
+
+
+def test_slo_min_samples_gates_shedding():
+    clock = FakeClock()
+    obj = SLObjective(latency_target_us=1.0, error_budget=0.01,
+                      min_samples=10, shed_burn_rate=1.0)
+    slo = SLOTracker(obj, clock=clock)
+    for _ in range(9):                       # every one a breach...
+        slo.record("numpy", "sum", 100.0)
+    assert not slo.should_shed("numpy", "sum")   # ...but too few samples
+    slo.record("numpy", "sum", 100.0)
+    assert slo.should_shed("numpy", "sum")
+
+
+def test_slo_objective_resolution_precedence():
+    pair = SLObjective(latency_target_us=1.0)
+    sub = SLObjective(latency_target_us=2.0)
+    default = SLObjective(latency_target_us=3.0)
+    slo = SLOTracker(objectives={("vliw-mc", "sum"): pair,
+                                 "vliw-mc": sub, "default": default})
+    assert slo.objective_for("vliw-mc", "sum") is pair
+    assert slo.objective_for("vliw-mc", "max") is sub
+    assert slo.objective_for("numpy", "sum") is default
+
+
+def test_server_with_explicit_slo_sheds_load(small_spn):
+    """A server constructed with an aggressive ``slo=`` objective sheds
+    (Backpressure) once the burn rate crosses the threshold; the shed
+    is counted and visible in stats()["slo"]."""
+    server = Server(small_spn, substrates=("numpy",),
+                    slo={"latency_target_us": 0.0, "error_budget": 0.5,
+                         "min_samples": 3, "shed_burn_rate": 1.0})
+    x = np.zeros((4, 8), dtype=np.int64)
+    for _ in range(3):               # latency target 0 => every breach
+        server.query(x, "joint", "numpy")
+    with pytest.raises(Backpressure):
+        server.query(x, "joint", "numpy")
+    s = server.stats()["slo"]["numpy/sum"]
+    assert s["shedding"] and s["window_events"] == 3
+
+
+def test_plain_server_tracks_slo_but_never_sheds(small_spn):
+    server = Server(small_spn, substrates=("numpy",))
+    x = np.zeros((2, 8), dtype=np.int64)
+    for _ in range(30):
+        server.query(x, "joint", "numpy")
+    slo = server.stats()["slo"]
+    assert "numpy/sum" in slo and slo["numpy/sum"]["window_events"] == 30
+    assert not slo["numpy/sum"]["shedding"]     # no objective: no shed
+
+
+# --------------------------------------------------------------------------- #
+# telemetry export: OpenMetrics round-trip, JSONL stream, the report
+# --------------------------------------------------------------------------- #
+def _fresh_registry():
+    reg = obs_metrics.Registry()
+    reg.counter("serve.requests").inc(7)
+    reg.gauge("cache.size").set(3.5)
+    h = reg.histogram("serve.latency_us.vliw-mc")
+    for v in (10.0, 20.0, 30.0, 40.0):
+        h.observe(v)
+    return reg
+
+
+def test_openmetrics_round_trip():
+    reg = _fresh_registry()
+    text = render_openmetrics(reg)
+    assert text.endswith("# EOF\n")
+    fams = parse_openmetrics(text)
+    assert fams["serve_requests"]["type"] == "counter"
+    assert fams["serve_requests"]["samples"] == [
+        ("serve_requests_total", {}, 7.0)]
+    assert fams["cache_size"]["samples"] == [("cache_size", {}, 3.5)]
+    summ = fams["serve_latency_us_vliw_mc"]
+    assert summ["type"] == "summary"
+    by_name = {}
+    for name, labels, value in summ["samples"]:
+        by_name[(name, labels.get("quantile"))] = value
+    h = reg.histogram("serve.latency_us.vliw-mc")
+    assert by_name[("serve_latency_us_vliw_mc", "0.5")] == h.percentile(50)
+    assert by_name[("serve_latency_us_vliw_mc_sum", None)] == 100.0
+    assert by_name[("serve_latency_us_vliw_mc_count", None)] == 4.0
+
+
+def test_openmetrics_parser_rejects_malformed():
+    with pytest.raises(ValueError, match="missing # EOF"):
+        parse_openmetrics("# TYPE a counter\na_total 1\n")
+    with pytest.raises(ValueError, match="before TYPE"):
+        parse_openmetrics("orphan 1\n# EOF\n")
+    with pytest.raises(ValueError, match="after # EOF"):
+        parse_openmetrics("# EOF\nstray 1\n")
+    with pytest.raises(ValueError, match="malformed sample"):
+        parse_openmetrics("# TYPE a gauge\na not-a-number\n# EOF\n")
+
+
+def test_jsonl_exporter_stream_and_rate_limit(tmp_path):
+    clock = FakeClock(100.0)
+    reg = _fresh_registry()
+    path = tmp_path / "telemetry.jsonl"
+    exp = JsonlExporter(path, registry=reg, interval_s=5.0, clock=clock)
+    assert exp.maybe_tick() is not None      # first tick always fires
+    clock.advance(1.0)
+    assert exp.maybe_tick() is None          # inside the interval
+    clock.advance(5.0)
+    reg.counter("serve.requests").inc()
+    assert exp.maybe_tick() is not None
+    events = JsonlExporter.read(path)
+    assert [e["seq"] for e in events] == [0, 1]
+    assert events[0]["metrics"]["serve.requests"] == 7
+    assert events[1]["metrics"]["serve.requests"] == 8
+    assert events[1]["ts"] == 106.0
+
+
+def test_observatory_report_is_self_contained(small_spn, tmp_path):
+    server = Server(small_spn, substrates=("numpy", "vliw-sim", "vliw-mc"),
+                    cores=2)
+    x = np.zeros((4, 8), dtype=np.int64)
+    for name in ("numpy", "vliw-sim", "vliw-mc"):
+        server.query(x, "joint", name)
+    path = tmp_path / "observatory.json"
+    report = write_observatory_report(path, server)
+    on_disk = json.loads(path.read_text())
+    assert on_disk == json.loads(json.dumps(report))   # serializable
+    assert report["version"] == 1
+    assert set(report["config"]) == {"numpy", "vliw-sim", "vliw-mc"}
+    subs = {a["substrate"] for a in report["attribution"]}
+    assert subs == {"vliw-sim", "vliw-mc"}
+    for entry in report["attribution"]:
+        assert entry["bottleneck"] in CLASSES
+        assert "core" in entry["table"] and "bottleneck:" in entry["table"]
+        tot = entry["attribution"]["per_core"]
+        for per in tot.values():
+            assert sum(per.values()) == entry["attribution"]["cycles"]
+    parse_openmetrics(report["openmetrics"])           # valid exposition
+    assert "slo" in report and "resilience" in report
+    assert observatory_report(server)["attribution"]   # re-derivable
+
+
+# --------------------------------------------------------------------------- #
+# bench-history regression sentinel
+# --------------------------------------------------------------------------- #
+def _bench_record(scale: int = 1) -> dict:
+    return {
+        "dataset": "nltcs", "batch": 256, "query": "marginal",
+        "mc_topology": "mesh",
+        "noc": {"nltcs": {"cores": 4,
+                          "topologies": {"xbar": {"cycles": 32 * scale},
+                                         "mesh": {"cycles": 33 * scale}}}},
+        "multicore_scaling": {"nltcs": {
+            "topology": "mesh", "single_core_cycles": 51 * scale,
+            "cores": {"2": {"cycles": 36 * scale},
+                      "4": {"cycles": 33 * scale}}}},
+        "autotune": {"budget": 16, "max_cores": 4,
+                     "datasets": {"nltcs":
+                                  {"tuned_cycles_per_eval": 15.0 * scale}}},
+        "vliw_fastsim": {"cycles": 51 * scale},
+    }
+
+
+def test_history_fingerprint_and_metrics_deterministic():
+    from benchmarks.history import deterministic_metrics, run_fingerprint
+    a, b = _bench_record(), _bench_record()
+    assert run_fingerprint(a) == run_fingerprint(b)
+    assert len(run_fingerprint(a)) == 16
+    # metric VALUES don't move the fingerprint; workload knobs do
+    assert run_fingerprint(_bench_record(scale=2)) == run_fingerprint(a)
+    other = _bench_record()
+    other["dataset"] = "kdd"
+    assert run_fingerprint(other) != run_fingerprint(a)
+    m = deterministic_metrics(a)
+    assert m == {"noc.nltcs.mesh.cycles": 33, "noc.nltcs.xbar.cycles": 32,
+                 "scaling.nltcs.single_core.cycles": 51,
+                 "scaling.nltcs.c2.cycles": 36,
+                 "scaling.nltcs.c4.cycles": 33,
+                 "autotune.nltcs.tuned_cycles_per_eval": 15.0,
+                 "vliw_sim.cycles": 51}
+
+
+def test_history_append_and_exact_sentinel(tmp_path):
+    from benchmarks.history import (append_run, best_prior, load_history,
+                                    run_fingerprint, sentinel_compare)
+    path = str(tmp_path / "BENCH_history.jsonl")
+    assert load_history(path) == []                     # missing file ok
+    rec = _bench_record()
+    assert sentinel_compare(rec, []) == []              # empty history ok
+    e1 = append_run(path, rec, sha="aaaa111", now=1000.0)
+    assert e1["sha"] == "aaaa111" and e1["time"] == 1000.0
+    history = load_history(path)
+    assert history == [e1]                              # round-trips
+    # identical run: exact equality passes
+    assert sentinel_compare(rec, history) == []
+    # strictly better run passes and becomes the new best
+    better = _bench_record()
+    better["noc"]["nltcs"]["topologies"]["mesh"]["cycles"] = 30
+    assert sentinel_compare(better, history) == []
+    append_run(path, better, sha="bbbb222", now=2000.0)
+    history = load_history(path)
+    best = best_prior(history, run_fingerprint(rec))
+    assert best["noc.nltcs.mesh.cycles"] == (30, "bbbb222")
+    assert best["noc.nltcs.xbar.cycles"] == (32, "aaaa111")
+    # +1 cycle over the best prior: the sentinel holds counts EXACTLY
+    worse = _bench_record()
+    worse["noc"]["nltcs"]["topologies"]["mesh"]["cycles"] = 31
+    failures = sentinel_compare(worse, history)
+    assert len(failures) == 1
+    assert "noc.nltcs.mesh.cycles" in failures[0]
+    assert "bbbb222" in failures[0]
+    # incommensurable fingerprint: never compared, never fails
+    other = _bench_record(scale=50)
+    other["dataset"] = "kdd"
+    other["noc"] = {"kdd": rec["noc"]["nltcs"]}
+    assert sentinel_compare(other, history) == []
+
+
+def test_history_cli_check_gate(tmp_path):
+    from benchmarks.history import load_history, main
+    rec_path = tmp_path / "BENCH_serve.json"
+    hist_path = tmp_path / "BENCH_history.jsonl"
+    rec_path.write_text(json.dumps(_bench_record()))
+    assert main(["--record", str(rec_path),
+                 "--history", str(hist_path)]) == 0
+    assert len(load_history(str(hist_path))) == 1
+    worse = _bench_record()
+    worse["vliw_fastsim"]["cycles"] = 52
+    rec_path.write_text(json.dumps(worse))
+    # without --check a regression warns but exits 0 (and appends)
+    assert main(["--record", str(rec_path),
+                 "--history", str(hist_path)]) == 0
+    assert len(load_history(str(hist_path))) == 2
+    # with --check the same regression fails the process, no append
+    assert main(["--record", str(rec_path), "--history", str(hist_path),
+                 "--check", "--no-append"]) == 2
+    assert len(load_history(str(hist_path))) == 2
+
+
+# --------------------------------------------------------------------------- #
+# Histogram.percentile: edge cases + numpy property test
+# --------------------------------------------------------------------------- #
+def _hist(values):
+    h = obs_metrics.Registry().histogram("h")
+    for v in values:
+        h.observe(v)
+    return h
+
+
+def test_percentile_edge_cases():
+    h = _hist([])
+    assert math.isnan(h.percentile(50))
+    for bad in (-0.001, 100.001, -5, 200):
+        with pytest.raises(ValueError, match="percentile"):
+            h.percentile(bad)
+    one = _hist([42.0])
+    assert one.percentile(0) == one.percentile(50) \
+        == one.percentile(100) == 42.0
+    two = _hist([1.0, 3.0])
+    assert two.percentile(0) == 1.0 and two.percentile(100) == 3.0
+    assert two.percentile(50) == 2.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(values=st.lists(st.floats(min_value=-1e6, max_value=1e6,
+                                 allow_nan=False, allow_infinity=False),
+                       min_size=1, max_size=50),
+       p=st.floats(min_value=0.0, max_value=100.0))
+def test_percentile_matches_numpy(values, p):
+    h = _hist(values)
+    got = h.percentile(p)
+    want = float(np.percentile(np.asarray(values, dtype=float), p))
+    assert got == pytest.approx(want, rel=1e-9, abs=1e-9)
+    assert h.percentile(0) == min(values)
+    assert h.percentile(100) == max(values)
+
+
+# --------------------------------------------------------------------------- #
+# stats() deep-copy isolation
+# --------------------------------------------------------------------------- #
+def test_stats_snapshot_is_deep_copied(small_spn):
+    server = Server(small_spn, substrates=("numpy",))
+    server.query(np.zeros((2, 8), dtype=np.int64), "joint", "numpy")
+    server.resilience.record("probe", detail="original")
+    s1 = server.stats()
+    # vandalize every mutable corner of the snapshot
+    s1["metrics"].clear()
+    s1["slo"].clear()
+    s1["resilience"]["history"][0]["detail"] = "vandalized"
+    s1["resilience"]["history"].append({"kind": "fake"})
+    s2 = server.stats()
+    assert s2["metrics"]          # live registry untouched
+    assert s2["slo"]
+    hist = s2["resilience"]["history"]
+    assert [h["kind"] for h in hist] == ["probe"]
+    assert hist[0]["detail"] == "original"
+    # and the manager's own history object was never aliased out
+    assert server.resilience.history[0]["detail"] == "original"
+
+
+# --------------------------------------------------------------------------- #
+# tracing: split-retry trace ids + partial flush on a crashed run
+# --------------------------------------------------------------------------- #
+def test_split_retry_spans_keep_original_trace_ids():
+    calls = {"n": 0}
+
+    def execute(rows):
+        calls["n"] += 1
+        if rows.shape[0] > 1:
+            raise RuntimeError("coalesced batch dies")
+        return rows[:, 0]
+
+    tracer = trace.install()
+    try:
+        b = MicroBatcher(execute, tile=1, split_retry=True)
+        p1 = b.submit(np.ones((1, 2), np.float32))
+        p2 = b.submit(np.ones((1, 2), np.float32) * 2)
+        p1.trace_id, p2.trace_id = 11, 22
+        b.flush()
+        assert p1.result() == [1.0] and p2.result() == [2.0]
+    finally:
+        trace.uninstall()
+    flushes = tracer.spans("batch.flush")
+    coalesced = [e for e in flushes if not e["args"].get("split_retry")]
+    retried = [e for e in flushes if e["args"].get("split_retry")]
+    # the failed coalesced flush linked both members...
+    assert len(coalesced) == 1
+    assert coalesced[0]["args"]["trace_ids"] == [11, 22]
+    assert coalesced[0]["args"]["requests"] == 2
+    # ...and each retried member keeps its ORIGINAL id — never a fresh
+    # one — so the re-execution still links back to its request
+    assert sorted(e["args"]["trace_ids"][0] for e in retried) == [11, 22]
+    assert all(e["args"]["requests"] == 1 for e in retried)
+    assert all(not e["error"] for e in retried)
+    assert tracer.spans("batch.split_retry")   # the retry is marked
+
+
+def test_serve_trace_partial_flush_on_crash(tmp_path, monkeypatch):
+    """A serve run that dies mid-flight still writes a complete, valid
+    Chrome trace file (marked PARTIAL on stdout) and uninstalls the
+    tracer — crashed runs leave evidence, not corruption."""
+    from repro.launch import serve as serve_mod
+
+    def doomed(obs, *args, **kwargs):
+        with obs.trace.span("serve.request", {"doomed": True}, root=True):
+            pass
+        raise RuntimeError("mid-flight crash")
+
+    monkeypatch.setattr(serve_mod, "_serve_spn_run", doomed)
+    path = tmp_path / "partial.json"
+    with pytest.raises(RuntimeError, match="mid-flight crash"):
+        serve_mod.serve_spn("nltcs", 8, 1, substrate="numpy",
+                            trace_path=str(path))
+    assert not trace.active()        # tracer uninstalled despite the crash
+    doc = json.loads(path.read_text())   # valid JSON, complete structure
+    names = [e.get("name") for e in doc["traceEvents"]]
+    assert "serve.request" in names
+
+
+# --------------------------------------------------------------------------- #
+# the attribution-guided autotune prior
+# --------------------------------------------------------------------------- #
+def test_autotune_prior_guides_the_search(nltcs_prog):
+    from repro.core.autotune import tune_program
+    res = tune_program(nltcs_prog, PTREE, max_cores=4, budget=8,
+                       use_cache=False)
+    assert res.prior is not None
+    assert res.prior["bottleneck"] in CLASSES
+    assert res.prior["group"] == GROUP_OF_CLASS[res.prior["bottleneck"]]
+    assert abs(sum(res.prior["fractions"].values()) - 1.0) < 1e-5
+    assert res.prior["roofline_bound"] in ("compute", "communication")
+    # guided candidates were actually evaluated right after the default
+    tried = [fp for fp, _, _ in res.trials]
+    assert res.guided and set(res.guided) <= set(tried)
+    assert tried[1: 1 + len(res.guided)] == res.guided
+    if res.guided_win:
+        assert res.config.fingerprint() in res.guided
+    # and the prior surfaces through the serving stats
+    server = Server(prog=nltcs_prog, substrates=("vliw-mc",), cores=4,
+                    autotune="budget=8")
+    server.query(np.zeros((4, 16), dtype=np.int64), "marginal", "vliw-mc")
+    tune = server.stats()["autotune"]["sum/vliw-mc"]
+    assert tune["prior"]["bottleneck"] in CLASSES
