@@ -74,6 +74,13 @@ def run_fingerprint(record: dict) -> str:
                      "max_cores": at.get("max_cores"),
                      "datasets": sorted(at.get("datasets", {}))},
     }
+    co = record.get("coresidency") or {}
+    if co:
+        # only present since the multi-tenant fabric landed; included
+        # conditionally so older records keep their fingerprints
+        key["coresidency"] = {"cores": co.get("cores"),
+                              "topology": co.get("topology"),
+                              "tenants": sorted(co.get("tenants", {}))}
     blob = json.dumps(key, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()[:16]
 
@@ -94,6 +101,11 @@ def deterministic_metrics(record: dict) -> dict:
     for ds, entry in sorted(at.get("datasets", {}).items()):
         out[f"autotune.{ds}.tuned_cycles_per_eval"] = \
             float(entry["tuned_cycles_per_eval"])
+    co = record.get("coresidency") or {}
+    for t, entry in sorted(co.get("tenants", {}).items()):
+        out[f"coresidency.{t}.cycles"] = int(entry["cycles"])
+        out[f"coresidency.{t}.full_fabric_cycles"] = \
+            int(entry["full_fabric_cycles"])
     fast = record.get("vliw_fastsim") or {}
     if "cycles" in fast:
         out["vliw_sim.cycles"] = int(fast["cycles"])

@@ -43,6 +43,17 @@ The degraded artifact is oracle-parity checked and the server's
 ``stats()["resilience"]`` snapshot (fault plan, applied events,
 degraded-artifact records) lands in ``record["resilience"]``.
 
+The run also records a **co-residency row** (``record["coresidency"]``):
+two suite SPNs served as tenants of ONE server, co-scheduled onto
+disjoint core sets of the same ``vliw-mc`` mesh fabric
+(:mod:`repro.runtime.tenancy`). The row compares the modeled aggregate
+throughput of the co-resident fabric against a time-sliced baseline
+where a full-fabric server alternates between the two SPNs — the
+co-resident side must win or tie (asserted), per-tenant oracle parity
+and core-set disjointness are asserted, and the per-tenant cycle
+counts are deterministic so the ``--compare`` gate and the history
+sentinel hold them exactly.
+
 ``--topology {xbar,ring,mesh,torus}`` selects the NoC the served
 ``vliw-mc`` substrate models. Independently of it, every run records a
 **NoC topology sweep** (``record["noc"]``): per topology the calibrated
@@ -98,6 +109,11 @@ AUTOTUNE_SWEEP_CORES = 4
 #: request path compiled onto the survivors
 DEGRADED_CORES = 4
 DEGRADED_FAULTS = "core=1@t0"
+#: the co-residency row: these suite SPNs share one mesh fabric as
+#: tenants of a single server, on disjoint core sets
+CORESIDENCY_TENANTS = ("nltcs", "kdd")
+CORESIDENCY_CORES = 8
+CORESIDENCY_TOPOLOGY = "mesh"
 
 
 def _best_round_us(fn, rounds: int = 4, n_iter: int = 5,
@@ -244,6 +260,33 @@ def compare_records(new: dict, baseline: dict,
                     f"tuned cycles/eval vs baseline "
                     f"{old_e['tuned_cycles_per_eval']:g} (deterministic "
                     f"counts are held exactly)")
+    # co-residency cycle counts are deterministic too — held exactly
+    # when the fabric/tenant shape matches, and the co-resident fabric
+    # must keep beating (or tying) its own time-sliced baseline
+    old_co = baseline.get("coresidency") or {}
+    new_co = new.get("coresidency") or {}
+    if old_co and (old_co.get("cores") != new_co.get("cores")
+                   or old_co.get("topology") != new_co.get("topology")
+                   or sorted(old_co.get("tenants", {}))
+                   != sorted(new_co.get("tenants", {}))):
+        print("  WARNING: coresidency gate skipped — fabric/tenant shape "
+              f"changed vs baseline (cores {old_co.get('cores')} -> "
+              f"{new_co.get('cores')}, topology {old_co.get('topology')} "
+              f"-> {new_co.get('topology')}); regenerate the baseline")
+    elif old_co:
+        for t, old_e in sorted(old_co.get("tenants", {}).items()):
+            cur_e = new_co["tenants"][t]
+            for fld in ("cycles", "full_fabric_cycles"):
+                if cur_e[fld] > old_e[fld]:
+                    failures.append(
+                        f"coresidency {t}: {cur_e[fld]} {fld} vs baseline "
+                        f"{old_e[fld]} (deterministic counts are held "
+                        f"exactly; update the baseline deliberately)")
+    if new_co and new_co.get("coresidency_gain", 1.0) < 1.0:
+        failures.append(
+            f"coresidency aggregate lost to the time-sliced baseline "
+            f"(gain {new_co['coresidency_gain']}x < 1.0)")
+
     for ds, cur_e in new_at.get("datasets", {}).items():
         if (cur_e["tuned_cycles_per_eval"]
                 > cur_e["default_cycles_per_eval"]):
@@ -405,6 +448,99 @@ def multicore_scaling(dataset: str, cores_list: list[int],
     return out
 
 
+def coresidency_bench(batch: int = 256,
+                      tenants: tuple = CORESIDENCY_TENANTS,
+                      cores: int = CORESIDENCY_CORES,
+                      topology: str = CORESIDENCY_TOPOLOGY,
+                      rows: list[str] | None = None) -> dict:
+    """Multi-SPN co-residency vs a time-sliced two-server baseline.
+
+    One :class:`~repro.runtime.Server` hosts every tenant SPN on the
+    same ``vliw-mc`` fabric, co-scheduled onto **disjoint core sets**
+    (QoS-weighted apportionment, :mod:`repro.runtime.tenancy`). The
+    modeled aggregate throughput — each tenant completing a batch every
+    ``cycles(tenant @ its cores)``, concurrently — is compared against
+    the time-sliced baseline where one full-fabric server alternates
+    between the tenants (one batch of each per
+    ``sum over tenants of cycles(tenant @ all cores)``). Both sides are
+    calibrated lockstep cycle counts: deterministic and machine-free,
+    so :func:`compare_records` and the history sentinel hold them
+    exactly. The co-resident fabric must win or tie (asserted), every
+    tenant is oracle-parity checked through the shared server, the core
+    sets must be pairwise disjoint, and wall-clock per-tenant serving
+    throughput on the shared server is recorded alongside.
+    """
+    server = Server(tenants={name: bench_spn(name)[1] for name in tenants},
+                    substrates=("numpy", "vliw-sim", "vliw-mc"),
+                    cores=cores, topology=topology)
+    out: dict = {"cores": cores, "topology": topology, "query": "marginal",
+                 "tenants": {}}
+    label_sets: dict[str, set] = {}
+    co_agg = 0.0           # batches/cycle, tenants running concurrently
+    ts_cycle_sum = 0       # full-fabric cycles to serve one batch of each
+    for name in tenants:
+        prog = server.registry.get(name).prog
+        art = server.artifact("marginal", "vliw-mc", tenant=name)
+        mc = art.meta["multicore"]
+        labels = list(mc["core_labels"])
+        label_sets[name] = set(labels)
+        Xq = random_mask(
+            np.random.default_rng(1).integers(0, 2, (batch, prog.num_vars)),
+            0.3, seed=1)
+        verify_parity(server, Xq[:32], query="marginal",
+                      substrates=("numpy", "vliw-sim", "vliw-mc"),
+                      tenant=name)
+        us = _best_round_us(
+            lambda X=Xq, n=name: server.query(X, "marginal", "vliw-mc",
+                                              tenant=n),
+            rounds=3, n_iter=5)
+        # the time-sliced baseline: the same SPN owning the WHOLE fabric
+        solo = Server(bench_spn(name)[0], substrates=("vliw-mc",),
+                      cores=cores, topology=topology)
+        full = int(solo.artifact("marginal", "vliw-mc")
+                   .meta["multicore"]["cycles"])
+        cyc = int(mc["cycles"])
+        co_agg += 1.0 / cyc
+        ts_cycle_sum += full
+        out["tenants"][name] = {
+            "cores": labels, "cycles": cyc, "full_fabric_cycles": full,
+            "us_per_batch": us, "evals_per_s": batch / (us / 1e6)}
+        if rows is not None:
+            rows.append(csv_row(f"coresidency_{name}_c{len(labels)}", cyc,
+                                f"full_fabric={full}"))
+        print(f"  coresidency [{name}] cores={labels}: {cyc} cycles "
+              f"(full fabric {full}), {batch / (us / 1e6):.0f} evals/s "
+              f"served co-resident")
+    seen: set = set()
+    for name, labels in label_sets.items():
+        assert not (labels & seen), \
+            f"tenant {name} shares cores with another tenant: " \
+            f"{sorted(labels & seen)}"
+        seen |= labels
+    assert len(seen) <= cores
+    st = server.stats()
+    out["mode"] = st["tenancy"]["mode"]
+    assert out["mode"] == "co-resident", \
+        f"co-residency row fell back to {out['mode']} scheduling"
+    ts_agg = len(tenants) / ts_cycle_sum
+    out["aggregate_batches_per_kilocycle"] = round(co_agg * 1e3, 4)
+    out["timesliced_batches_per_kilocycle"] = round(ts_agg * 1e3, 4)
+    out["coresidency_gain"] = round(co_agg / ts_agg, 4)
+    assert co_agg >= ts_agg, \
+        f"co-resident aggregate {co_agg:.6f} batches/cycle LOST to the " \
+        f"time-sliced baseline {ts_agg:.6f} — sharing the fabric must " \
+        f"not cost aggregate throughput"
+    if rows is not None:
+        rows.append(csv_row(f"coresidency_agg_c{cores}_{topology}",
+                            out["aggregate_batches_per_kilocycle"],
+                            f"gain={out['coresidency_gain']}x_vs_timesliced"))
+    print(f"  coresidency aggregate: {out['aggregate_batches_per_kilocycle']}"
+          f" batches/kcycle co-resident vs "
+          f"{out['timesliced_batches_per_kilocycle']} time-sliced "
+          f"({out['coresidency_gain']}x)")
+    return out
+
+
 def main(dataset: str = "nltcs", batch: int = 256,
          out_path: str = "BENCH_serve.json",
          compare_path: str | None = None,
@@ -534,6 +670,11 @@ def main(dataset: str = "nltcs", batch: int = 256,
     for ds in dict.fromkeys(noc_datasets or [dataset, "kdd"]):
         ds_prog = server.prog if ds == dataset else bench_spn(ds)[1]
         record["noc"][ds] = noc_sweep(ds, ds_prog, noc_cores, rows=rows)
+
+    # multi-SPN co-residency: two suite SPNs as tenants of one server,
+    # disjoint core sets on the mesh fabric, vs the time-sliced
+    # full-fabric baseline (deterministic cycle counts, held exactly)
+    record["coresidency"] = coresidency_bench(batch, rows=rows)
 
     # per-SPN autotuning, tuned vs default modeled cycles/eval on every
     # suite dataset at the sweep core count — exact calibrated lockstep

@@ -302,6 +302,96 @@ def _serve_spn_run(obs, dataset, batch, n_batches, substrate, query,
     return out
 
 
+def serve_tenants(specs, batch: int, n_batches: int, *,
+                  query: str = "marginal", mask_frac: float = 0.3,
+                  cores: int = 8, topology: str = "mesh",
+                  link_width: int = 32,
+                  flush_max_age_s: float | None = None) -> dict:
+    """Multi-tenant serving: N SPNs co-resident on one Server.
+
+    ``specs``: ``DATASET[:QOS_WEIGHT]`` strings (e.g. ``nltcs kdd:2``).
+    Each dataset's learned SPN becomes a tenant; with ``vliw-mc``
+    enabled the machine's cores are apportioned into disjoint
+    QoS-weighted blocks and every tenant serves from its own core set
+    (one NoC, priced by the occupancy model). Reports per-tenant
+    throughput, core allocation, parity vs the numpy oracle, and the
+    tenancy section of ``Server.stats()``.
+
+        PYTHONPATH=src python -m repro.launch.serve --mode spn \\
+            --tenants nltcs kdd:2 --cores 8 --topology mesh
+    """
+    from ..core import learn
+    from ..data import spn_datasets
+    from ..queries import random_mask
+    from ..runtime import Server, Tenant, verify_parity
+
+    tenants: dict = {}
+    eval_x: dict[str, np.ndarray] = {}
+    for spec in specs:
+        name, _, w = spec.partition(":")
+        if name in tenants:
+            raise ValueError(f"duplicate tenant dataset {name!r}")
+        X = spn_datasets.load(name, "train", 400)
+        spn = learn.learn_spn(X, min_instances=64)
+        tenants[name] = Tenant(name, prog=None, spn=spn,
+                               qos_weight=float(w) if w else 1.0)
+        Xq = spn_datasets.load(name, "test", batch)
+        if query in ("marginal", "mpe"):
+            Xq = random_mask(Xq, mask_frac, seed=0)
+        eval_x[name] = Xq
+
+    from ..core.multicore import named_interconnect
+    server = Server(tenants=tenants,
+                    substrates=("numpy", "vliw-sim", "vliw-mc"),
+                    cores=cores,
+                    interconnect=named_interconnect(
+                        topology, link_width=link_width),
+                    flush_max_age_s=flush_max_age_s)
+    print(f"tenants[{', '.join(tenants)}] query={query}: "
+          f"{cores} cores/{topology}, mode="
+          f"{server.stats()['tenancy']['mode']}")
+    out: dict = {"tenants": {}}
+    for name, t in ((n, server.registry.get(n)) for n in tenants):
+        art = server.artifact(query, "vliw-mc", tenant=name)
+        mc = art.meta["multicore"]
+        r = bench(lambda n=name: server.query(
+            eval_x[n], query, "vliw-mc", tenant=n), n_batches, batch)
+        devs = verify_parity(server, eval_x[name][:32], query=query,
+                             substrates=("vliw-mc", "vliw-sim"),
+                             tenant=name)
+        out["tenants"][name] = {
+            "qos_weight": t.qos_weight,
+            "cores": list(t.cores) if t.cores is not None else None,
+            "core_labels": list(mc["core_labels"]),
+            "cycles": art.meta["cycles"],
+            "parity": devs, **r}
+        print(f"  {name:10s} w={t.qos_weight:g} "
+              f"cores={list(mc['core_labels'])} "
+              f"{art.meta['cycles']:6d} cycles/eval-batch "
+              f"{r['us_per_batch']:10.1f} us/batch "
+              f"({r['evals_per_s']:12.0f} evals/s)  parity ok")
+    # disjoint-core invariant: co-resident tenants never share a core
+    seen: set = set()
+    for name, entry in out["tenants"].items():
+        labels = set(entry["core_labels"])
+        overlap = seen & labels
+        assert not overlap or len(tenants) > cores, \
+            f"tenant {name} shares cores {sorted(overlap)}"
+        seen |= labels
+    rb = server.rebalance(query=query)
+    if rb is not None:
+        print(f"  rebalance: applied={rb['applied']} "
+              f"makespan {rb['makespan']:g} -> "
+              f"{rb.get('candidate_makespan', rb['makespan']):g}")
+        out["rebalance"] = {k: v for k, v in rb.items()
+                            if k != "pressure"}
+    stats = server.stats()
+    out["tenancy"] = stats["tenancy"]
+    out["multicore_keys"] = sorted(stats["multicore"])
+    print(f"  stats multicore keys: {out['multicore_keys']}")
+    return out
+
+
 def serve_lm(arch: str, batch: int, prompt_len: int, gen_len: int) -> dict:
     from ..configs.base import get_smoke_config
     from ..models import api
@@ -400,6 +490,14 @@ def main() -> None:
     ap.add_argument("--metrics-dump", action="store_true",
                     help="print the metrics registry (counters, gauges, "
                          "latency percentiles) after serving")
+    ap.add_argument("--tenants", default=None, metavar="DS[:W]",
+                    nargs="+",
+                    help="multi-tenant serving: one dataset per tenant "
+                         "with an optional QoS weight (e.g. "
+                         "'--tenants nltcs kdd:2'). All tenants share "
+                         "one Server; on vliw-mc they are co-scheduled "
+                         "onto disjoint QoS-weighted core blocks of the "
+                         "--cores/--topology fabric")
     ap.add_argument("--dataset", default="nltcs")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=256)
@@ -407,7 +505,15 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     args = ap.parse_args()
-    if args.mode == "spn":
+    if args.mode == "spn" and args.tenants:
+        serve_tenants(args.tenants, args.batch, args.batches,
+                      query=("marginal" if args.query == "joint"
+                             else args.query),
+                      mask_frac=args.mask_frac, cores=args.cores,
+                      topology=(args.topology if args.topology != "xbar"
+                                else "mesh"),
+                      link_width=args.link_width)
+    elif args.mode == "spn":
         serve_spn(args.dataset, args.batch, args.batches,
                   substrate=args.substrate, query=args.query,
                   mask_frac=args.mask_frac,

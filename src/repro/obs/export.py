@@ -212,6 +212,7 @@ def observatory_report(server) -> dict:
     """
     stats = server.stats()
     artifacts = []
+    registry = getattr(server, "registry", None)
     for art in server.cache.artifacts():
         attr = art.meta.get("attribution")
         if not attr:
@@ -219,6 +220,8 @@ def observatory_report(server) -> dict:
         artifacts.append({
             "substrate": art.substrate,
             "semiring": getattr(art, "semiring", None),
+            "tenant": (registry.tenant_of_digest(art.digest)
+                       if registry is not None else None),
             "bottleneck": art.meta.get("bottleneck"),
             "attribution": attr,
             "table": attribution_table(attr),

@@ -70,7 +70,14 @@ class SLOTracker:
 
     # ---------------- configuration ------------------------------------ #
     def objective_for(self, substrate: str, semiring: str) -> SLObjective:
-        for key in ((substrate, semiring), substrate, "default"):
+        keys = [(substrate, semiring), substrate]
+        if ":" in substrate:
+            # per-tenant key ("tenant:substrate") falls back to the
+            # substrate's aggregate objective before "default"
+            base = substrate.split(":", 1)[1]
+            keys += [(base, semiring), base]
+        keys.append("default")
+        for key in keys:
             obj = self._objectives.get(key)
             if obj is not None:
                 return obj

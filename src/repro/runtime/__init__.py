@@ -18,6 +18,8 @@ from .server import DEFAULT_SUBSTRATES, ParityError, Server, verify_parity
 from .substrates import (ALIASES, LANE, QUERIES, SEMIRING_OF_QUERY, Artifact,
                          Substrate, available_substrates, canonical,
                          get_substrate, make_substrate, register)
+from .tenancy import (ModelRegistry, Tenant, allocate_cores,
+                      plan_rebalance)
 
 __all__ = [
     # fault tolerance
@@ -35,4 +37,6 @@ __all__ = [
     "make_substrate", "register",
     "ArtifactCache", "MicroBatcher", "PendingResult",
     "DEFAULT_SUBSTRATES", "ParityError", "Server", "verify_parity",
+    # multi-tenant serving
+    "ModelRegistry", "Tenant", "allocate_cores", "plan_rebalance",
 ]

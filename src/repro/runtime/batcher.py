@@ -9,11 +9,20 @@ tile with neutral all-marginalized rows (indicator 1.0 — finite in both
 domains), executes once, and scatters result slices back to each
 caller's :class:`PendingResult`.
 
-Flushes happen when the accumulated rows reach ``max_rows``, or
-explicitly (``flush()`` / first ``result()`` call) — the synchronous
-analogue of a serving deadline.
+Flushes happen when the accumulated rows reach ``max_rows`` (the
+high-water mark), when the oldest queued request exceeds an age
+deadline (``Server.pump`` polls :meth:`due`), or explicitly
+(``flush()`` / first ``result()`` call). The batcher is safe to flush
+from a pump thread concurrently with submitting threads: the queue
+swap is lock-guarded, and a :class:`PendingResult` whose rows are
+in-flight on another thread waits on its completion event instead of
+racing the flush.
 """
 from __future__ import annotations
+
+import threading
+import time
+import weakref
 
 import numpy as np
 
@@ -38,21 +47,42 @@ class PendingResult:
         self._batcher = batcher
         self._value: np.ndarray | None = None
         self._exc: BaseException | None = None
+        self._done = threading.Event()
         self.trace_id = 0
+
+    def _resolve(self, value: np.ndarray | None = None,
+                 exc: BaseException | None = None) -> None:
+        if value is not None:
+            self._value = value
+        if exc is not None:
+            self._exc = exc
+        self._done.set()
 
     def ready(self) -> bool:
         """Resolved — either with a value or with a failure."""
-        return self._value is not None or self._exc is not None
+        return self._done.is_set()
 
-    def result(self) -> np.ndarray:
+    def wait(self, timeout: float | None = None) -> bool:
+        """Block until resolved (a pump thread may be executing the
+        batch); True iff resolved within ``timeout``."""
+        return self._done.wait(timeout)
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
         if not self.ready():
+            # Synchronous path: drain the queue ourselves. If another
+            # thread already swapped the queue and is mid-execute, this
+            # is a no-op and we wait on the completion event instead.
             self._batcher.flush()
+        if not self._done.wait(timeout):
+            raise TimeoutError("request still in flight after "
+                               f"{timeout}s")
         if self._exc is not None:
             raise self._exc
         assert self._value is not None
         return self._value
 
-    def exception(self) -> BaseException | None:
+    def exception(self,
+                  timeout: float | None = None) -> BaseException | None:
         """The failure that rejected this request (flushing first if
         still queued), or ``None`` if it succeeded / is healthy."""
         if not self.ready():
@@ -60,12 +90,14 @@ class PendingResult:
                 self._batcher.flush()
             except Exception:
                 pass    # the flush stored itself on every member
+            self._done.wait(timeout)
         return self._exc
 
 
 class MicroBatcher:
     def __init__(self, execute, *, tile: int = 1, max_rows: int = 4096,
-                 split_retry: bool = False):
+                 split_retry: bool = False, pin=None,
+                 clock=time.monotonic):
         """``execute``: (rows, m_ind) linear leaves -> (rows,) values.
 
         ``tile`` is the executor's declared row multiple — the substrate's
@@ -82,6 +114,17 @@ class MicroBatcher:
         members carry an exception (the resilient server turns this on
         when fault injection is live; default off keeps the classic
         fail-the-batch contract).
+
+        ``pin`` names an object (the compiled artifact) that must stay
+        alive while rows are queued. The batcher holds it weakly when
+        idle — so the server's artifact-keyed WeakKeyDictionary can
+        still collect evicted artifacts — but takes a strong reference
+        from submit until the flush that drains those rows completes.
+        Without the pin, a cache eviction between submit and flush
+        leaves the execute closure's weakref dangling and the flush
+        crashes instead of serving queued work.
+
+        ``clock`` is injectable for deterministic age-deadline tests.
         """
         if tile < 1:
             raise ValueError(f"tile must be >= 1, got {tile}")
@@ -91,6 +134,11 @@ class MicroBatcher:
         self.tile = tile
         self.max_rows = max_rows
         self.split_retry = split_retry
+        self.clock = clock
+        self._pin_ref = weakref.ref(pin) if pin is not None else None
+        self._pin = None            # strong ref while rows are queued
+        self._lock = threading.Lock()
+        self._oldest_t: float | None = None
         self._queue: list[tuple[np.ndarray, PendingResult]] = []
         self._queued_rows = 0
         self.stats = {"requests": 0, "rows": 0, "batches": 0,
@@ -102,11 +150,36 @@ class MicroBatcher:
         total = self.stats["rows"] + self.stats["padded_rows"]
         return self.stats["padded_rows"] / total if total else 0.0
 
+    def age(self, now: float | None = None) -> float:
+        """Seconds the oldest queued request has been waiting (0 when
+        the queue is empty). ``now`` overrides the clock so callers can
+        probe hypothetical deadlines deterministically."""
+        oldest = self._oldest_t
+        if oldest is None:
+            return 0.0
+        return max(0.0, (self.clock() if now is None else now) - oldest)
+
+    def due(self, max_age_s: float, now: float | None = None) -> bool:
+        """True when queued work should be flushed by the pump: the
+        rows high-water is reached or the oldest request aged out."""
+        if not self._queued_rows:
+            return False
+        return (self._queued_rows >= self.max_rows
+                or self.age(now) >= max_age_s)
+
     def submit(self, leaves: np.ndarray) -> PendingResult:
         leaves = np.atleast_2d(np.asarray(leaves))
         pending = PendingResult(self)
-        self._queue.append((leaves, pending))
-        self._queued_rows += leaves.shape[0]
+        with self._lock:
+            if not self._queue:
+                self._oldest_t = self.clock()
+            if self._pin_ref is not None:
+                # the caller holds the artifact right now, so the deref
+                # cannot fail; the strong ref lives until the flush that
+                # drains this row completes
+                self._pin = self._pin_ref()
+            self._queue.append((leaves, pending))
+            self._queued_rows += leaves.shape[0]
         self.stats["requests"] += 1
         self.stats["rows"] += leaves.shape[0]
         if self._queued_rows >= self.max_rows:
@@ -114,9 +187,15 @@ class MicroBatcher:
         return pending
 
     def flush(self) -> None:
-        if not self._queue:
-            return
-        queue, self._queue, self._queued_rows = self._queue, [], 0
+        with self._lock:
+            if not self._queue:
+                return
+            queue, self._queue, self._queued_rows = self._queue, [], 0
+            self._oldest_t = None
+            # keep the artifact alive for the duration of this execute
+            # (local ref), but release the batcher-held pin so an
+            # evicted artifact can be collected once we return
+            pin, self._pin = self._pin, None
         rows = np.concatenate([leaves for leaves, _ in queue], axis=0)
         n = rows.shape[0]
         n_pad = (n + self.tile - 1) // self.tile * self.tile
@@ -137,12 +216,18 @@ class MicroBatcher:
                 self.stats["batches"] += 1
                 metrics.counter("batch.flush_errors").inc()
                 if self.split_retry and len(queue) > 1:
+                    # the coalesced attempt still padded and executed
+                    # n_pad - n waste rows; account for them before the
+                    # per-member retries add their own padding
+                    self.stats["padded_rows"] += n_pad - n
+                    metrics.counter("batch.padded_rows").inc(n_pad - n)
                     self._flush_split(queue)
+                    del pin
                     return
                 # reject every member with the ORIGINAL exception — a
                 # failed flush must never leave a pending unresolved
                 for _, pending in queue:
-                    pending._exc = exc
+                    pending._resolve(exc=exc)
                 raise
         self.stats["batches"] += 1
         self.stats["padded_rows"] += n_pad - n
@@ -152,8 +237,9 @@ class MicroBatcher:
         off = 0
         for leaves, pending in queue:
             k = leaves.shape[0]
-            pending._value = values[off: off + k]
+            pending._resolve(value=values[off: off + k])
             off += k
+        del pin
 
     def _flush_split(self, queue) -> None:
         """Per-member retry after a failed coalesced execute: rows from
@@ -164,7 +250,10 @@ class MicroBatcher:
         the member's ORIGINAL ``trace_id`` (and a ``split_retry`` mark),
         so in the trace view the re-execution still links back to the
         request that submitted the rows — the coalesced flush's error
-        span alone would orphan them."""
+        span alone would orphan them. Each successful retry is a real
+        flush: it counts in ``batch.flushes`` and observes its fill, so
+        the telemetry doesn't undercount exactly when faults are live
+        (``stats['batches']`` still counts the coalesced attempt once)."""
         metrics.counter("batch.split_retries").inc()
         trace.instant("batch.split_retry", {"requests": len(queue)})
         for leaves, pending in queue:
@@ -185,8 +274,11 @@ class MicroBatcher:
                                          "split_retry": True}):
                     vals = np.asarray(self.execute(rows))[:k]
             except Exception as exc:
-                pending._exc = exc
+                pending._resolve(exc=exc)
             else:
-                pending._value = vals
+                pending._resolve(value=vals)
                 self.stats["padded_rows"] += k_pad - k
+                metrics.counter("batch.flushes").inc()
                 metrics.counter("batch.padded_rows").inc(k_pad - k)
+                metrics.histogram("batch.fill").observe(
+                    k / k_pad if k_pad else 1.0)

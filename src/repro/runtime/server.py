@@ -1,18 +1,36 @@
 """The unified substrate runtime server.
 
-``Server`` owns everything between a raw SPN and a stream of answered
-queries: the lowered :class:`TensorProgram`, one instance of every
-requested substrate, the content-addressed :class:`ArtifactCache`, and a
-dynamic :class:`MicroBatcher` per live artifact. The serving driver
+``Server`` owns everything between raw SPNs and a stream of answered
+queries: a :class:`~repro.runtime.tenancy.ModelRegistry` of resident
+lowered :class:`TensorProgram`\\ s (one tenant by default, many under
+multi-tenant serving), one instance of every requested substrate, the
+content-addressed :class:`ArtifactCache`, and a dynamic
+:class:`MicroBatcher` per live artifact. The serving driver
 (``repro.launch.serve``) is a thin CLI over this class, and later
-scaling layers (sharding, async dispatch, multi-model) stack on the same
-interface.
+scaling layers (sharding, async dispatch) stack on the same interface.
 
 Request path::
 
-    submit(x, query, substrate)          # evidence -> leaves -> enqueue
-      -> flush() / result()              # coalesce, pad to tile, execute
-    query(x, query, substrate)           # synchronous convenience
+    submit(x, query, substrate, tenant)  # evidence -> leaves -> enqueue
+      -> pump() / flush() / result()     # coalesce, pad to tile, execute
+    query(x, query, substrate, tenant)   # synchronous convenience
+
+Multi-tenant co-scheduling: with several tenants and the ``vliw-mc``
+substrate enabled, the machine's cores are apportioned into disjoint
+QoS-weighted blocks (:func:`repro.runtime.tenancy.allocate_cores`) and
+each tenant compiles through its own ``allowed_cores``-restricted
+substrate — tenants never contend for issue slots, only for the NoC,
+which the occupancy model prices. :meth:`rebalance` is the serving-time
+repartitioner: it reads the artifacts' cycle attribution and moves one
+core from the least- to the most-pressured tenant when that strictly
+improves the QoS-weighted makespan.
+
+Continuous batching: requests park in per-(tenant, artifact) micro-
+batchers; a flush happens at the rows high-water mark, when
+:meth:`pump` finds the oldest queued request past ``flush_max_age_s``
+(``start_pump`` runs that check on a background thread so a pending
+resolves with *no* explicit ``flush()``/``result()`` call), or
+synchronously on first ``result()``.
 
 :func:`verify_parity` is the reusable cross-substrate agreement check —
 every substrate's root values against the float64 numpy oracle, plus the
@@ -23,8 +41,10 @@ shared by serve and the tests.
 from __future__ import annotations
 
 import copy
+import threading
 import time
 import weakref
+from typing import Mapping
 
 import numpy as np
 
@@ -34,6 +54,7 @@ from ..core.processor.config import PTREE, ProcessorConfig
 from ..core.spn import SPN
 from ..obs import metrics, trace
 from ..obs.slo import SLObjective, SLOTracker
+from . import tenancy
 from .batcher import MicroBatcher, PendingResult
 from .cache import ArtifactCache
 from .resilience import (Backpressure, CircuitOpen, CoreFault, FabricError,
@@ -45,6 +66,7 @@ from .substrates import (LANE, QUERIES, SEMIRING_OF_QUERY, Artifact,
 
 DEFAULT_SUBSTRATES = ("numpy", "leveled-jax", "pallas", "vliw-sim",
                       "vliw-mc")
+DEFAULT_TENANT = "default"
 
 
 class ParityError(AssertionError):
@@ -52,10 +74,11 @@ class ParityError(AssertionError):
 
 
 class Server:
-    """Multi-substrate, multi-query SPN inference server."""
+    """Multi-substrate, multi-query, multi-tenant SPN inference server."""
 
     def __init__(self, spn: SPN | None = None, *,
                  prog: program_mod.TensorProgram | None = None,
+                 tenants=None,
                  substrates: tuple[str, ...] | None = None,
                  processor: ProcessorConfig = PTREE,
                  interpret: bool | None = None,
@@ -67,17 +90,43 @@ class Server:
                  cache_capacity: int = 32,
                  batch_tile: int = LANE,
                  max_rows: int = 4096,
+                 flush_max_age_s: float | None = None,
                  faults=None,
                  resilience: ResiliencePolicy | None = None,
                  slo: SLObjective | dict | None = None):
-        if prog is None:
-            if spn is None:
-                raise ValueError("need an SPN or a lowered TensorProgram")
-            prog = program_mod.lower(spn)
-        self.spn = spn
-        self.prog = prog
+        # ---- resident models (see repro.runtime.tenancy) --------------
+        # Single-model construction (spn/prog) registers one tenant named
+        # "default" so every internal path is uniformly tenant-keyed;
+        # ``tenants`` registers many (dict name -> Tenant/SPN/prog/dict,
+        # or an iterable of Tenants). ``self.prog``/``self.spn`` keep
+        # pointing at the first tenant's model for backward compat.
+        self.registry = tenancy.ModelRegistry()
+        if tenants is not None:
+            if spn is not None or prog is not None:
+                raise ValueError("pass either spn/prog or tenants=, "
+                                 "not both")
+            if isinstance(tenants, Mapping):
+                for name, spec in tenants.items():
+                    self.registry.register(tenancy.as_tenant(name, spec))
+            else:
+                for t in tenants:
+                    self.registry.register(t)
+            if not len(self.registry):
+                raise ValueError("tenants= must name at least one model")
+            first = self.registry.get(self.registry.names()[0])
+            self.prog, self.spn = first.prog, first.spn
+        else:
+            if prog is None:
+                if spn is None:
+                    raise ValueError(
+                        "need an SPN or a lowered TensorProgram")
+                prog = program_mod.lower(spn)
+            self.registry.register(
+                tenancy.Tenant(DEFAULT_TENANT, prog=prog, spn=spn))
+            self.prog, self.spn = prog, spn
         self.batch_tile = batch_tile
         self.max_rows = max_rows
+        self.flush_max_age_s = flush_max_age_s
         self.cache = ArtifactCache(cache_capacity)
         self._processor = processor
         self._interpret = interpret
@@ -95,6 +144,8 @@ class Server:
             for n in names}
         self._batchers: weakref.WeakKeyDictionary[Artifact, MicroBatcher] = \
             weakref.WeakKeyDictionary()
+        self._pump_thread: threading.Thread | None = None
+        self._pump_stop: threading.Event | None = None
         # ---- resilience layer (see repro.runtime.resilience) ----------
         # ``faults`` injects a deterministic FaultPlan (a plan object,
         # one spec string, or a list of spec strings); ``resilience``
@@ -118,6 +169,135 @@ class Server:
             slo = SLObjective(**slo)
         self._slo_shedding = slo is not None
         self.slo = SLOTracker(slo)
+        # ---- multi-tenant co-scheduling on the vliw-mc fabric ---------
+        self._tenant_mc: dict[str, Substrate] = {}
+        self._tenant_pool: tuple[int, ...] = tuple(range(cores))
+        self._tenancy_events: list[dict] = []
+        self._tenancy_mode = ("single" if len(self.registry) == 1
+                              else "shared")
+        if len(self.registry) > 1 and "vliw-mc" in self.substrates:
+            self._coschedule(self._tenant_pool)
+
+    # ---------------- tenancy ---------------------------------------------- #
+    def _tenancy_event(self, kind: str, **info) -> None:
+        self._tenancy_events.append({"kind": kind, **info})
+        trace.instant("tenancy." + kind, info)
+        metrics.counter("tenancy." + kind).inc()
+
+    def _coschedule(self, core_ids, dead_links=(), slow_links=()) -> None:
+        """(Re)apportion ``core_ids`` across tenants and rebuild each
+        tenant's restricted ``vliw-mc`` substrate.
+
+        Infeasible pools (fewer cores than tenants) fall back to
+        time-sliced sharing: every tenant serves on the full surviving
+        machine through the shared substrate instance.
+        """
+        pool = tuple(sorted(int(c) for c in core_ids))
+        weights = {t.name: t.qos_weight for t in self.registry}
+        alloc = tenancy.allocate_cores(weights, pool)
+        self._tenant_pool = pool
+        if not alloc:
+            self._tenant_mc = {}
+            for t in self.registry:
+                t.cores = None
+            self._tenancy_mode = "time-sliced"
+            self._tenancy_event("time-sliced", cores=list(pool),
+                                tenants=sorted(weights))
+            return
+        self._apply_allocation(alloc, dead_links, slow_links)
+        self._tenancy_mode = "co-resident"
+        self._tenancy_event(
+            "co-schedule", cores=list(pool),
+            allocation={n: list(c) for n, c in alloc.items()})
+
+    def _apply_allocation(self, alloc, dead_links=(),
+                          slow_links=()) -> None:
+        base = self.substrates["vliw-mc"]
+        mc: dict[str, Substrate] = {}
+        for name, subset in alloc.items():
+            self.registry.get(name).cores = tuple(subset)
+            mc[name] = base.restricted(
+                subset, dead_links=dead_links, slow_links=slow_links,
+                reason="co-resident")
+        self._tenant_mc = mc
+
+    def _sub_for(self, tenant: str, cname: str) -> Substrate:
+        """The substrate instance serving ``tenant`` on ``cname`` — the
+        tenant's core-restricted ``vliw-mc`` when co-scheduled, the
+        shared instance otherwise."""
+        if cname == "vliw-mc":
+            sub = self._tenant_mc.get(tenant)
+            if sub is not None:
+                return sub
+        return self.substrates[cname]
+
+    def rebalance(self, *, query: str = "marginal",
+                  apply: bool = True) -> dict | None:
+        """Serving-time repartitioner: one core, donor -> receiver.
+
+        Reads each tenant's resident ``vliw-mc`` artifact (compiling
+        ``query`` if none is resident yet), prices tenant pressure as
+        ``qos_weight x modeled cycles``, and asks
+        :func:`tenancy.plan_rebalance` for a one-core move — skipping
+        comm-bound receivers (their cycle attribution says more cores
+        means more NoC traffic, not less makespan). The candidate
+        allocation is compiled (content-addressed, so re-proposals are
+        free) and adopted only when the QoS-weighted makespan
+        ``max_t(w_t x cycles_t)`` strictly improves — a monotone
+        ratchet that can never thrash the fabric. Returns the decision
+        record (also appended to ``stats()["tenancy"]["events"]``), or
+        ``None`` when fewer than two tenants are co-scheduled.
+        """
+        if len(self._tenant_mc) < 2:
+            return None
+        st = self.resilience.state
+        dead = tuple(sorted(st.dead_links))
+        slow = tuple((a, b, f) for (a, b), f
+                     in sorted(st.slow_links.items()))
+        cycles: dict[str, int] = {}
+        pressure: dict[str, float] = {}
+        avoid: list[str] = []
+        for name, sub in self._tenant_mc.items():
+            t = self.registry.get(name)
+            art = self.cache.get_or_compile(
+                sub, t.prog, query=query, log_domain=True,
+                batch_tile=t.batch_tile or self.batch_tile)
+            cycles[name] = int(art.meta["cycles"])
+            pressure[name] = t.qos_weight * cycles[name]
+            attribution = art.meta.get("attribution") or {}
+            if attribution.get("bottleneck_group") == "comm":
+                avoid.append(name)
+        allocation = {n: self.registry.get(n).cores or ()
+                      for n in self._tenant_mc}
+        plan = tenancy.plan_rebalance(allocation, pressure, avoid)
+        record = {"kind": "rebalance", "pressure": dict(pressure),
+                  "makespan": max(pressure.values()), "applied": False}
+        if plan is None:
+            record["reason"] = "no-legal-move"
+            self._tenancy_events.append(record)
+            return record
+        alloc = tenancy.blocks_from_counts(plan["counts"],
+                                           self._tenant_pool)
+        base = self.substrates["vliw-mc"]
+        cand_pressure: dict[str, float] = {}
+        for name, subset in alloc.items():
+            t = self.registry.get(name)
+            cand = base.restricted(subset, dead_links=dead,
+                                   slow_links=slow, reason="co-resident")
+            art = self.cache.get_or_compile(
+                cand, t.prog, query=query, log_domain=True,
+                batch_tile=t.batch_tile or self.batch_tile)
+            cand_pressure[name] = t.qos_weight * int(art.meta["cycles"])
+        record.update({"from": plan["from"], "to": plan["to"],
+                       "candidate_makespan": max(cand_pressure.values())})
+        if apply and record["candidate_makespan"] < record["makespan"]:
+            self._apply_allocation(alloc, dead_links=dead,
+                                   slow_links=slow)
+            record["applied"] = True
+            record["allocation"] = {n: list(c) for n, c in alloc.items()}
+            metrics.counter("tenancy.rebalances").inc()
+        self._tenancy_events.append(record)
+        return record
 
     # ---------------- compilation ----------------------------------------- #
     def substrate(self, name: str) -> Substrate:
@@ -128,24 +308,41 @@ class Server:
         return self.substrates[cname]
 
     def artifact(self, query: str = "joint",
-                 substrate: str = "leveled-jax") -> Artifact:
-        """Compiled artifact for (this SPN, query, substrate) — cached."""
+                 substrate: str = "leveled-jax",
+                 tenant: str = DEFAULT_TENANT) -> Artifact:
+        """Compiled artifact for (tenant's SPN, query, substrate) —
+        cached (content-addressed, so shared across tenants with
+        identical programs *and* substrate fingerprints)."""
+        cname = canonical(substrate)
+        self.substrate(cname)       # membership check + error message
+        t = self.registry.get(tenant)
         return self.cache.get_or_compile(
-            self.substrate(substrate), self.prog, query=query,
-            log_domain=True, batch_tile=self.batch_tile)
+            self._sub_for(tenant, cname), t.prog, query=query,
+            log_domain=True, batch_tile=t.batch_tile or self.batch_tile)
 
-    def _batcher_for(self, art: Artifact) -> MicroBatcher:
+    def _batcher_for(self, art: Artifact, sub: Substrate,
+                     base_prog, query: str) -> MicroBatcher:
         batcher = self._batchers.get(art)
         if batcher is None:
-            sub = self.substrate(art.substrate)
             # the closure must hold the artifact weakly, or this entry's
             # value would pin its own key and the WeakKeyDictionary could
-            # never release evicted artifacts (payloads included)
+            # never release evicted artifacts (payloads included); the
+            # batcher pins it strongly only while rows are queued, and
+            # the closure re-resolves through the cache as a last resort
             aref = weakref.ref(art)
             inj = self._injector
 
-            def _execute(leaves, _s=sub, _r=aref, _inj=inj):
+            def _execute(leaves, _s=sub, _r=aref, _inj=inj,
+                         _prog=base_prog, _query=query, _tile=art.batch_tile):
                 a = _r()
+                if a is None:
+                    # evicted while queued and the pin somehow released:
+                    # recompile through the cache instead of crashing on
+                    # a dangling weakref (content-addressed — identical
+                    # artifact, possibly a fresh compile)
+                    a = self.cache.get_or_compile(
+                        _s, _prog, query=_query, log_domain=True,
+                        batch_tile=_tile)
                 # an execute failure is recorded as an error span (the
                 # exception type lands in the span attrs) and counted —
                 # never a silently dropped span (see runtime.fault)
@@ -169,18 +366,21 @@ class Server:
             # span) is what healthy servers and their tests rely on
             batcher = MicroBatcher(
                 _execute, tile=sub.pad_tile(art.batch_tile),
-                max_rows=self.max_rows, split_retry=inj is not None)
+                max_rows=self.max_rows, split_retry=inj is not None,
+                pin=art)
             self._batchers[art] = batcher
         return batcher
 
     # ---------------- request path ----------------------------------------- #
     def submit(self, x: np.ndarray, query: str = "joint",
-               substrate: str = "leveled-jax") -> PendingResult:
+               substrate: str = "leveled-jax",
+               tenant: str = DEFAULT_TENANT) -> PendingResult:
         """Enqueue evidence rows ``x``; returns a :class:`PendingResult`.
 
         ``x``: (batch, num_vars) with ``-1`` marginalizing (or, for MPE,
         maximizing over) a variable. The result is the (batch,) root log
-        value of the query's program on the chosen substrate.
+        value of the query's program on the chosen substrate, for the
+        named tenant's model.
         """
         x = np.atleast_2d(x)
         if self._hardened:
@@ -200,85 +400,169 @@ class Server:
         # one root span per request: a fresh trace id is minted here and
         # propagated via PendingResult into the batch-flush span, so a
         # coalesced execution is attributable to every member request
+        multi = len(self.registry) > 1
         with trace.span("serve.request",
-                        lambda: {"query": query, "substrate": substrate,
-                                 "rows": int(x.shape[0])},
+                        lambda: dict({"query": query,
+                                      "substrate": substrate,
+                                      "rows": int(x.shape[0])},
+                                     **({"tenant": tenant} if multi
+                                        else {})),
                         root=True) as sp:
             if query == "joint" and (x < 0).any():
                 raise ValueError("joint queries need full evidence; "
                                  "use query='marginal' for rows "
                                  "containing -1")
-            art = self.artifact(query, substrate)
+            t = self.registry.get(tenant)
+            art = self.artifact(query, substrate, tenant)
             with trace.span("serve.leaves"):
                 leaves = art.prog.leaves_from_evidence(x)
-            pending = self._batcher_for(art).submit(leaves)
+            cname = canonical(substrate)
+            batcher = self._batcher_for(
+                art, self._sub_for(tenant, cname), t.prog, query)
+            pending = batcher.submit(leaves)
             pending.trace_id = sp.trace_id
         metrics.counter("serve.requests").inc()
         metrics.counter("serve.rows").inc(int(x.shape[0]))
+        if multi:
+            metrics.counter(f"serve.requests.{tenant}").inc()
         return pending
 
     def flush(self) -> None:
         for batcher in list(self._batchers.values()):
             batcher.flush()
 
+    def pump(self, now: float | None = None,
+             max_age_s: float | None = None) -> int:
+        """Flush every batcher whose queued work is *due* — rows at the
+        high-water mark or oldest request past the age deadline.
+
+        ``max_age_s`` defaults to the server's ``flush_max_age_s``
+        (a server constructed without one treats every queued row as
+        due, so a bare ``pump()`` is "drain now"). ``now`` overrides
+        the clock for deterministic deadline tests. Returns the number
+        of batchers flushed.
+        """
+        age = self.flush_max_age_s if max_age_s is None else max_age_s
+        if age is None:
+            age = 0.0
+        flushed = 0
+        for batcher in list(self._batchers.values()):
+            if batcher.due(age, now):
+                batcher.flush()
+                flushed += 1
+        if flushed:
+            metrics.counter("serve.pump_flushes").inc(flushed)
+        return flushed
+
+    def start_pump(self, interval_s: float | None = None) -> None:
+        """Run :meth:`pump` on a daemon thread every ``interval_s``
+        (default: half the age deadline) — the continuous-batching
+        pump: submitted requests resolve without any caller invoking
+        ``flush()``/``result()``. Idempotent."""
+        if self._pump_thread is not None:
+            return
+        if interval_s is None:
+            interval_s = (self.flush_max_age_s / 2
+                          if self.flush_max_age_s else 0.005)
+        stop = threading.Event()
+
+        def _loop():
+            while not stop.wait(interval_s):
+                try:
+                    self.pump()
+                except Exception:
+                    metrics.counter("serve.pump_errors").inc()
+
+        self._pump_stop = stop
+        self._pump_thread = threading.Thread(
+            target=_loop, name="server-pump", daemon=True)
+        self._pump_thread.start()
+
+    def stop_pump(self) -> None:
+        """Stop the background pump thread (idempotent)."""
+        if self._pump_thread is None:
+            return
+        assert self._pump_stop is not None
+        self._pump_stop.set()
+        self._pump_thread.join(timeout=2.0)
+        self._pump_thread = None
+        self._pump_stop = None
+
     def query(self, x: np.ndarray, query: str = "joint",
-              substrate: str = "leveled-jax") -> np.ndarray:
+              substrate: str = "leveled-jax",
+              tenant: str = DEFAULT_TENANT) -> np.ndarray:
         """Synchronous submit + flush: (batch,) root log values.
 
         The request path is *hardened*: bounded retry with exponential
         backoff on transient faults, degraded-mode recompilation on
-        core/link faults, substrate fallback (vliw-mc → vliw-sim →
-        numpy) when recompilation is infeasible, a circuit breaker per
-        (substrate, semiring), and a per-request deadline. Non-fabric
-        exceptions (software bugs, bad input) propagate unchanged —
-        hardening never masks a real error, and on a healthy fabric the
-        behaviour is identical to the classic path.
+        core/link faults (multi-tenant servers reapportion every
+        tenant's cores over the surviving fabric), substrate fallback
+        (vliw-mc → vliw-sim → numpy) when recompilation is infeasible,
+        a circuit breaker per (substrate, semiring), and a per-request
+        deadline. Non-fabric exceptions (software bugs, bad input)
+        propagate unchanged — hardening never masks a real error, and
+        on a healthy fabric the behaviour is identical to the classic
+        path.
 
         End-to-end latency (admission through execute) is observed into
         the per-substrate ``serve.latency_us.<name>`` histogram — the
         p50/p95/p99 source for ``Server.stats()["metrics"]`` and
-        ``BENCH_serve.json`` — and into the SLO tracker
-        (``stats()["slo"]``): failures and over-target latencies burn
-        the (substrate, query-kind) error budget, and a server
-        constructed with an explicit ``slo=`` objective sheds load
-        (:class:`Backpressure`) once the burn rate crosses the
-        objective's threshold — *before* the budget is gone.
+        ``BENCH_serve.json`` — plus a per-tenant
+        ``serve.latency_us.<tenant>.<name>`` histogram on multi-tenant
+        servers — and into the SLO tracker (``stats()["slo"]``, keyed
+        both aggregate and ``<tenant>:<substrate>``): failures and
+        over-target latencies burn the (substrate, query-kind) error
+        budget, and a server constructed with an explicit ``slo=``
+        objective sheds load (:class:`Backpressure`) once the burn rate
+        crosses the objective's threshold — *before* the budget is gone.
         """
         t0 = time.perf_counter()
         name = canonical(substrate)
         semiring = SEMIRING_OF_QUERY.get(query, query)
+        multi = len(self.registry) > 1
         try:
-            values = self._query_resilient(x, query, name, t0)
-        except (ValueError, TypeError):
+            values = self._query_resilient(x, query, name, t0, tenant)
+        except (ValueError, TypeError, KeyError):
             raise               # client errors don't burn the budget
         except Backpressure:
             raise               # shed work was never admitted
         except Exception:
-            self.slo.record(name, semiring,
-                            (time.perf_counter() - t0) * 1e6, ok=False)
+            lat = (time.perf_counter() - t0) * 1e6
+            self.slo.record(name, semiring, lat, ok=False)
+            if multi:
+                self.slo.record(f"{tenant}:{name}", semiring, lat,
+                                ok=False)
             raise
         latency_us = (time.perf_counter() - t0) * 1e6
         metrics.histogram("serve.latency_us." + name).observe(latency_us)
         self.slo.record(name, semiring, latency_us)
+        if multi:
+            metrics.histogram(
+                f"serve.latency_us.{tenant}.{name}").observe(latency_us)
+            self.slo.record(f"{tenant}:{name}", semiring, latency_us)
         return values
 
     def query_once(self, x: np.ndarray, query: str = "joint",
-                   substrate: str = "leveled-jax") -> np.ndarray:
+                   substrate: str = "leveled-jax",
+                   tenant: str = DEFAULT_TENANT) -> np.ndarray:
         """One direct submit + result on exactly the named substrate —
         no retry, no fallback, no breaker. :func:`verify_parity` uses
         this so a faulty substrate can never hide behind the oracle
         fallback and compare the oracle against itself."""
-        return self.submit(x, query, substrate).result()
+        return self.submit(x, query, substrate, tenant).result()
 
     # ---------------- resilient dispatch ----------------------------------- #
     def _query_resilient(self, x: np.ndarray, query: str, name: str,
-                         t0: float) -> np.ndarray:
+                         t0: float, tenant: str) -> np.ndarray:
         mgr = self.resilience
         pol = mgr.policy
         deadline = t0 + pol.timeout_s
         serving = mgr.redirects.get(name, name)
         semiring = SEMIRING_OF_QUERY.get(query, query)
-        if self._slo_shedding and self.slo.should_shed(name, semiring):
+        if self._slo_shedding and (
+                self.slo.should_shed(name, semiring)
+                or (len(self.registry) > 1 and self.slo.should_shed(
+                    f"{tenant}:{name}", semiring))):
             # burn-rate admission control: shed before the breaker pays
             # a failed attempt and before the window's budget is gone
             metrics.counter("fault.slo_shed").inc()
@@ -304,13 +588,13 @@ class Server:
                         f"request exceeded its {pol.timeout_s:.3f}s "
                         "deadline") from last_exc
                 try:
-                    values = self.submit(x, query, target).result()
+                    values = self.submit(x, query, target, tenant).result()
                 except (CoreFault, LinkFault) as exc:
                     last_exc, attempted = exc, True
                     breaker.record_failure()
                     mgr.record("fabric_fault", substrate=target,
                                error=f"{type(exc).__name__}: {exc}")
-                    if self._degrade(target, query):
+                    if self._degrade(target, query, tenant):
                         continue        # retry on the degraded substrate
                     break               # cannot degrade → walk the chain
                 except TransientFault as exc:
@@ -327,7 +611,7 @@ class Server:
                     last_exc, attempted = exc, True
                     breaker.record_failure()
                     break
-                except (ValueError, TypeError):
+                except (ValueError, TypeError, KeyError):
                     raise               # client error: not the fabric's
                 except Exception:
                     # non-fabric: a software bug — honest propagation of
@@ -353,19 +637,24 @@ class Server:
             f"substrate {name!r} ({query}) failed after retries, "
             "degradation and fallback") from last_exc
 
-    def _degrade(self, name: str, query: str) -> bool:
+    def _degrade(self, name: str, query: str,
+                 tenant: str = DEFAULT_TENANT) -> bool:
         """Recompile substrate ``name`` for the surviving fabric.
 
+        Multi-tenant co-scheduled servers reapportion *every* tenant's
+        cores over the healthy set (:meth:`_degrade_tenants`); a
+        single-tenant server swaps the shared substrate in place.
         Descends on infeasibility: starts from every healthy core and
         drops the highest-numbered survivor until the comm plan routes
         around the dead links (one core has no routes, so the descent
         always terminates at a feasible compile — or the substrate
         cannot degrade at all and the caller falls down the chain).
-        Swaps the serving substrate in place on success; the degraded
-        artifact is content-addressed like any other (``/alive=``,
-        ``/dead=`` fingerprint suffixes) and annotated with
-        ``meta["degraded"]``.
+        The degraded artifact is content-addressed like any other
+        (``/alive=``, ``/dead=`` fingerprint suffixes) and annotated
+        with ``meta["degraded"]``.
         """
+        if name == "vliw-mc" and self._tenant_mc:
+            return self._degrade_tenants(query, tenant)
         mgr = self.resilience
         sub = self.substrates.get(name)
         if sub is None:
@@ -397,13 +686,93 @@ class Server:
             return True
         return False
 
+    def _degrade_tenants(self, query: str, tenant: str) -> bool:
+        """Reapportion all co-scheduled tenants over the healthy cores.
+
+        The requesting tenant's artifact is compiled eagerly to prove
+        the new plan feasible (descending past dead links like the
+        single-tenant path); the other tenants recompile lazily on
+        their next request through the same hardened path.
+        """
+        mgr = self.resilience
+        dead = tuple(sorted(mgr.state.dead_links))
+        slow = tuple((a, b, f)
+                     for (a, b), f in sorted(mgr.state.slow_links.items()))
+        alive = list(mgr.state.healthy)
+        t = self.registry.get(tenant)
+        base = self.substrates["vliw-mc"]
+        while alive:
+            # the shared base must stay the original full-machine
+            # substrate across descent iterations (restricting an
+            # already-restricted instance would stack link degradations)
+            self.substrates["vliw-mc"] = base
+            self._coschedule(alive, dead_links=dead, slow_links=slow)
+            if not self._tenant_mc:
+                # time-sliced fallback: everyone shares the surviving
+                # machine through one degraded shared instance
+                self.substrates["vliw-mc"] = base.restricted(
+                    alive, dead_links=dead, slow_links=slow)
+            cand = self._sub_for(tenant, "vliw-mc")
+            try:
+                with trace.span("fault.degrade",
+                                lambda: {"substrate": "vliw-mc",
+                                         "tenant": tenant,
+                                         "alive": list(alive)}):
+                    art = self.cache.get_or_compile(
+                        cand, t.prog, query=query, log_domain=True,
+                        batch_tile=t.batch_tile or self.batch_tile)
+            except LinkDownError:
+                alive = alive[:-1]      # fewer cores ⇒ fewer routes
+                continue
+            except Exception:
+                return False
+            art.meta["degraded"] = dict(
+                mgr.state.snapshot(), substrate="vliw-mc", tenant=tenant,
+                from_cores=self._cores, to_cores=len(alive))
+            metrics.counter("fault.degraded_compiles").inc()
+            mgr.record("degrade", substrate="vliw-mc",
+                       alive=list(alive), tenant=tenant,
+                       mode=self._tenancy_mode)
+            return True
+        return False
+
     # ---------------- introspection ---------------------------------------- #
+    def _stats_key(self, art: Artifact, used: set[str]) -> str:
+        """Unique, readable stats key for a resident artifact.
+
+        Single-tenant servers keep the classic ``semiring/substrate``
+        key; multi-tenant servers prefix the owning tenant. Residual
+        collisions (same tenant, semiring and substrate — e.g. healthy
+        vs degraded compiles of one program) append the program digest
+        prefix and, if still colliding, an ordinal — two artifacts can
+        never silently overwrite each other's stats entry.
+        """
+        base = f"{art.semiring}/{art.substrate}"
+        if len(self.registry) > 1:
+            tenant = self.registry.tenant_of_digest(art.digest)
+            if tenant is not None:
+                base = f"{tenant}/{base}"
+        key = base
+        if key in used:
+            key = f"{base}@{art.digest[:8]}"
+        n = 2
+        while key in used:
+            key = f"{base}@{art.digest[:8]}#{n}"
+            n += 1
+        used.add(key)
+        return key
+
     def stats(self) -> dict:
         """Serving statistics (backward-compatible keys) + a read-only
         snapshot of the process-global metrics registry (``"metrics"``:
         request counters, per-substrate latency percentiles, batch fill,
         cache hit counters — see :mod:`repro.obs.metrics`) + the SLO
         burn-rate status (``"slo"``, see :mod:`repro.obs.slo`).
+
+        Multi-tenant servers prefix per-artifact section keys with the
+        owning tenant (``tenant/semiring/substrate``) and add a
+        ``"tenancy"`` section (mode, per-tenant core allocation and QoS
+        weights, co-scheduling/rebalance events).
 
         The returned structure is a **deep copy**: mutating it can never
         corrupt the server's live registries or resilience history.
@@ -418,16 +787,18 @@ class Server:
                "autotune": {},
                "slo": self.slo.snapshot(),
                "resilience": self.resilience.stats()}
+        used_b: set[str] = set()
         for art, b in self._batchers.items():
-            out["batchers"][f"{art.semiring}/{art.substrate}"] = dict(
+            out["batchers"][self._stats_key(art, used_b)] = dict(
                 b.stats, pad_waste=round(b.pad_waste, 4))
             out["padded_rows"] += b.stats["padded_rows"]
         # ONE materialized pass over the resident artifacts (safe
         # against concurrent eviction — see ArtifactCache.artifacts)
         # feeds the multicore, autotune and degraded-artifact sections
         degraded: dict = {}
+        used_a: set[str] = set()
         for art in self.cache.artifacts():
-            key = f"{art.semiring}/{art.substrate}"
+            key = self._stats_key(art, used_a)
             # per-core utilization / communication / barrier accounting
             # of multi-core artifacts (calibrated at compile time)
             mc = art.meta.get("multicore")
@@ -457,6 +828,9 @@ class Server:
                     # cycle-attribution verdict (see repro.obs.attr)
                     "bottleneck": art.meta.get("bottleneck"),
                 }
+                labels = mc.get("core_labels")
+                if labels is not None:
+                    out["multicore"][key]["core_labels"] = list(labels)
             # autotune outcomes: winning config, tuned vs default
             # cycles/eval, and the core-count fallback decisions
             tune = art.meta.get("autotune")
@@ -473,12 +847,24 @@ class Server:
                 degraded[key] = art.meta["degraded"]
         if degraded:
             out["resilience"]["degraded_artifacts"] = degraded
+        if len(self.registry) > 1:
+            out["tenancy"] = {
+                "mode": self._tenancy_mode,
+                "pool": list(self._tenant_pool),
+                "tenants": {
+                    t.name: {"qos_weight": t.qos_weight,
+                             "cores": (list(t.cores)
+                                       if t.cores is not None else None),
+                             "digest": t.prog.digest()[:12]}
+                    for t in self.registry},
+                "events": list(self._tenancy_events)}
         return copy.deepcopy(out)
 
 
 def verify_parity(server: Server, x: np.ndarray, *, query: str = "marginal",
                   substrates: tuple[str, ...] | None = None,
-                  atol: float = 1e-4) -> dict[str, float]:
+                  atol: float = 1e-4,
+                  tenant: str = DEFAULT_TENANT) -> dict[str, float]:
     """Cross-substrate agreement on ``x`` against the numpy oracle.
 
     Returns ``{substrate: max_abs_deviation}`` (fast-vs-checked VLIW
@@ -489,11 +875,13 @@ def verify_parity(server: Server, x: np.ndarray, *, query: str = "marginal",
     hang or a bare crash. Queries go through :meth:`Server.query_once`,
     the direct non-resilient path, so a faulty substrate can never hide
     behind the fallback chain and compare the oracle against itself.
+    ``tenant`` checks one resident model of a multi-tenant server.
     """
     if query not in QUERIES:
         raise ValueError(f"unknown query {query!r}")
     names = tuple(canonical(n) for n in (substrates or server.substrates))
     x = np.atleast_2d(x)
+    prog = server.registry.get(tenant).prog
 
     def run(name: str, fn, what: str):
         try:
@@ -506,12 +894,13 @@ def verify_parity(server: Server, x: np.ndarray, *, query: str = "marginal",
                 f"{type(exc).__name__}: {exc}") from exc
 
     if "numpy" in server.substrates:
-        ref = run("numpy", lambda: server.query_once(x, query, "numpy"),
+        ref = run("numpy",
+                  lambda: server.query_once(x, query, "numpy", tenant),
                   "execute")
     else:   # the oracle is the point of the check — build one on demand
         oracle = make_substrate("numpy")
         art = server.cache.get_or_compile(
-            oracle, server.prog, query=query, log_domain=True,
+            oracle, prog, query=query, log_domain=True,
             batch_tile=server.batch_tile)
         ref = run("numpy", lambda: oracle.execute(
             art, art.prog.leaves_from_evidence(x)), "execute")
@@ -529,14 +918,15 @@ def verify_parity(server: Server, x: np.ndarray, *, query: str = "marginal",
         if name == "numpy":
             devs[name] = 0.0
             continue
-        vals = run(name, lambda: server.query_once(x, query, name),
+        vals = run(name,
+                   lambda: server.query_once(x, query, name, tenant),
                    "execute")
         against_ref(name, vals)
-        sub = server.substrate(name)
+        sub = server._sub_for(tenant, name)
         if hasattr(sub, "execute_checked"):
             # vliw-sim / vliw-mc: the vectorized fast-sim must be
             # bit-identical to the cycle-accurate checked simulator
-            art = server.artifact(query, name)
+            art = server.artifact(query, name, tenant)
             leaves = art.prog.leaves_from_evidence(np.atleast_2d(x))
             checked = run(name, lambda: sub.execute_checked(art, leaves),
                           "execute (checked sim)")

@@ -330,7 +330,8 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
                  eta_iters: int = 2, placement: str = "aware",
                  autotune: str | None = None, autotune_seed: int = 0,
                  tune_config=None,
-                 allowed_cores: tuple | None = None) -> None:
+                 allowed_cores: tuple | None = None,
+                 restrict_reason: str = "degraded") -> None:
         super().__init__(processor)
         if cores < 1:
             raise ValueError(f"cores must be >= 1, got {cores}")
@@ -360,6 +361,11 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
                 raise ValueError("allowed_cores must name at least one core")
             allowed_cores = alive
         self.allowed_cores = allowed_cores
+        # why the restriction exists — "degraded" (fault recovery) or
+        # "co-resident" (multi-tenant co-scheduling); label only, but
+        # kept distinct in the fingerprint so a degraded artifact is
+        # never served as a co-resident one (or vice versa)
+        self.restrict_reason = restrict_reason
 
     def config_fingerprint(self) -> str:
         fp = (f"{self.processor.name}/cores={self.cores}"
@@ -374,16 +380,23 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
             fp += f"/cfg={self.tune_config.fingerprint()}"
         if self.allowed_cores is not None:
             fp += "/alive=" + ".".join(str(c) for c in self.allowed_cores)
+            if self.restrict_reason != "degraded":
+                fp += f"/as={self.restrict_reason}"
         return fp
 
-    def degraded(self, alive, dead_links=(), slow_links=()):
-        """A new substrate instance targeting the surviving fabric.
+    def restricted(self, alive, dead_links=(), slow_links=(), *,
+                   reason: str = "degraded"):
+        """A new substrate instance compiling onto a core subset.
 
-        ``alive`` are the physical core ids still serving; dead/slow
-        links are merged into the interconnect config (so they show in
-        the fingerprint → distinct cache key, and routing avoids them).
-        Autotuning is intentionally dropped: degraded artifacts compile
-        the plain comm-aware pipeline.
+        ``alive`` are the physical core ids to use; dead/slow links are
+        merged into the interconnect config (so they show in the
+        fingerprint → distinct cache key, and routing avoids them).
+        ``reason`` labels the restriction in the artifact's
+        ``core_decision`` — ``"degraded"`` for fault recovery,
+        ``"co-resident"`` for multi-tenant co-scheduling. Autotuning is
+        intentionally dropped: restricted artifacts compile the plain
+        comm-aware pipeline (the tuner's probe machine would not see
+        the restriction).
         """
         return type(self)(
             processor=self.processor, cores=self.cores,
@@ -391,7 +404,13 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
                 dead_links=dead_links, slow_links=slow_links),
             seed=self.seed, strategy=self.strategy,
             eta_iters=self.eta_iters, placement=self.placement,
-            allowed_cores=tuple(alive))
+            allowed_cores=tuple(alive), restrict_reason=reason)
+
+    def degraded(self, alive, dead_links=(), slow_links=()):
+        """A new substrate instance targeting the surviving fabric
+        (see :meth:`restricted`)."""
+        return self.restricted(alive, dead_links, slow_links,
+                               reason="degraded")
 
     def _resolve_tuning(self, prog):
         """The TuneConfig to compile with, or (None, None) when untuned.
@@ -437,7 +456,8 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
         decision = {"requested": self.cores, "chosen": self.cores,
                     "reason": "multicore"}
         if alive is not None:
-            decision.update(chosen=len(alive), reason="degraded",
+            decision.update(chosen=len(alive),
+                            reason=self.restrict_reason,
                             alive=list(alive))
         if self.cores > 1 and (alive is None or len(alive) > 1):
             # cheap single-core probe: when SEND/RECV overhead makes the
@@ -457,7 +477,8 @@ class VliwMultiCoreSubstrate(VliwSimSubstrate):
                 mcp = single
                 decision.update(
                     chosen=1, reason="single-core-fallback"
-                    if alive is None else "degraded-single-core")
+                    if alive is None
+                    else f"{self.restrict_reason}-single-core")
         dense = multicore.decode_multicore(mcp, cycles=mcp.meta["cycles"])
         attribution = attribute_multicore(mcp)
         meta = {"cycles": mcp.meta["cycles"],

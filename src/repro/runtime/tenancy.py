@@ -1,0 +1,233 @@
+"""Multi-tenant serving: tenants, model registry, core co-scheduling.
+
+One :class:`~repro.runtime.server.Server` can host many SPNs. Each
+resident model is a :class:`Tenant` — a lowered program plus a QoS
+weight — tracked by a :class:`ModelRegistry`. On the ``vliw-mc``
+substrate, co-resident tenants are *co-scheduled*: the machine's cores
+are apportioned into disjoint contiguous blocks (QoS-weighted largest
+remainder, at least one core each) and every tenant compiles against
+its own ``allowed_cores`` restriction through the same partitioner
+path the fault-tolerant degraded mode uses. Disjoint core sets mean
+tenants never share a core's issue slots; they still share the NoC,
+whose contention the PR 5 occupancy model prices per link.
+
+:func:`allocate_cores` is the pure apportionment; :func:`plan_rebalance`
+proposes the serving-time one-core move the Server's repartitioner
+evaluates against the weighted-makespan objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+from ..core import program as program_mod
+from ..core.program import TensorProgram
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One resident model: a lowered program plus serving policy.
+
+    ``qos_weight`` scales both the tenant's share of ``vliw-mc`` cores
+    and its term in the rebalancer's weighted-makespan objective — a
+    weight-2 tenant gets roughly twice the cores of a weight-1 tenant
+    and its modeled cycles count double when deciding who is the
+    bottleneck. ``cores`` is the currently assigned physical core
+    subset (``None`` until co-scheduled, or when the fabric fell back
+    to time-sliced full-machine sharing).
+    """
+    name: str
+    prog: TensorProgram
+    spn: object | None = None
+    qos_weight: float = 1.0
+    batch_tile: int | None = None
+    cores: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if not self.name or "/" in self.name or ":" in self.name:
+            raise ValueError(
+                f"tenant name must be non-empty without '/' or ':', "
+                f"got {self.name!r}")
+        if not (self.qos_weight > 0):
+            raise ValueError(
+                f"qos_weight must be > 0, got {self.qos_weight}")
+        if self.prog is None:
+            if self.spn is None:
+                raise ValueError(f"tenant {self.name!r} needs a prog "
+                                 "or an spn to lower")
+            self.prog = program_mod.lower(self.spn)
+
+
+def as_tenant(name: str, spec) -> Tenant:
+    """Coerce a registry entry to a :class:`Tenant`.
+
+    Accepts a ready ``Tenant`` (name must match), a lowered
+    ``TensorProgram``, an SPN node, or a dict of Tenant fields.
+    """
+    if isinstance(spec, Tenant):
+        if spec.name != name:
+            raise ValueError(f"tenant name mismatch: key {name!r} vs "
+                             f"Tenant.name {spec.name!r}")
+        return spec
+    if isinstance(spec, TensorProgram):
+        return Tenant(name, prog=spec)
+    if isinstance(spec, Mapping):
+        return Tenant(name, **spec)
+    # anything else is treated as an SPN root node
+    return Tenant(name, prog=program_mod.lower(spec), spn=spec)
+
+
+class ModelRegistry:
+    """Insertion-ordered name -> :class:`Tenant` map with digest
+    reverse lookup (for attributing cached artifacts to tenants)."""
+
+    def __init__(self, tenants: Iterable[Tenant] = ()):
+        self._tenants: dict[str, Tenant] = {}
+        for t in tenants:
+            self.register(t)
+
+    def register(self, tenant: Tenant) -> Tenant:
+        if tenant.name in self._tenants:
+            raise ValueError(f"tenant {tenant.name!r} already registered")
+        self._tenants[tenant.name] = tenant
+        return tenant
+
+    def get(self, name: str) -> Tenant:
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise KeyError(f"unknown tenant {name!r}; registered: "
+                           f"{sorted(self._tenants)}") from None
+
+    def names(self) -> list[str]:
+        return list(self._tenants)
+
+    def tenant_of_digest(self, digest: str) -> str | None:
+        """Name of the tenant whose program has this digest (first
+        match in registration order), or None."""
+        for name, t in self._tenants.items():
+            if t.prog.digest() == digest:
+                return name
+        return None
+
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    def __iter__(self):
+        return iter(self._tenants.values())
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tenants
+
+
+def allocate_cores(weights: Mapping[str, float],
+                   core_ids: Sequence[int] | int,
+                   ) -> dict[str, tuple[int, ...]]:
+    """QoS-weighted apportionment of physical cores to tenants.
+
+    ``core_ids`` is the pool to divide — a core count (meaning
+    ``range(n)``) or an explicit id list (the degraded path passes the
+    surviving cores). Largest-remainder apportionment on the weights
+    with a floor of one core per tenant; each tenant gets a contiguous
+    block of the (sorted) pool so XY-routed traffic stays local.
+    Returns ``{}`` when there are fewer cores than tenants —
+    co-residency is infeasible and the caller falls back to time-sliced
+    full-machine sharing. Deterministic: ties break by registration
+    order (dict order of ``weights``).
+    """
+    if isinstance(core_ids, int):
+        core_ids = range(core_ids)
+    pool = sorted(int(c) for c in core_ids)
+    names = list(weights)
+    if not names or len(pool) < len(names):
+        return {}
+    total_w = sum(float(weights[n]) for n in names)
+    n_cores = len(pool)
+    # ideal shares, floored at 1; largest remainder distributes the rest
+    quota = {n: n_cores * float(weights[n]) / total_w for n in names}
+    counts = {n: max(1, int(quota[n])) for n in names}
+    spare = n_cores - sum(counts.values())
+    if spare < 0:
+        # floors overshot (many tiny-weight tenants): strip from the
+        # largest blocks until feasible, never below 1
+        for n in sorted(names, key=lambda n: -counts[n]):
+            take = min(counts[n] - 1, -spare)
+            counts[n] -= take
+            spare += take
+            if spare == 0:
+                break
+    else:
+        remainders = sorted(
+            names, key=lambda n: (-(quota[n] - int(quota[n])),
+                                  names.index(n)))
+        i = 0
+        while spare > 0:
+            counts[remainders[i % len(remainders)]] += 1
+            spare -= 1
+            i += 1
+    alloc: dict[str, tuple[int, ...]] = {}
+    off = 0
+    for n in names:
+        alloc[n] = tuple(pool[off: off + counts[n]])
+        off += counts[n]
+    return alloc
+
+
+def plan_rebalance(allocation: Mapping[str, Sequence[int]],
+                   pressure: Mapping[str, float],
+                   avoid: Iterable[str] = (),
+                   ) -> dict | None:
+    """Propose moving ONE core from the least-pressured tenant to the
+    most-pressured one.
+
+    ``pressure`` is the weighted cost the Server computed (QoS weight x
+    modeled cycles). ``avoid`` lists tenants that should not RECEIVE a
+    core (e.g. the attribution engine says they are comm-bound: more
+    cores means more NoC traffic, not less makespan). Returns
+    ``{"from": donor, "to": receiver, "counts": {name: n}}`` or ``None``
+    when no legal move exists (donor needs >1 core, receiver must
+    differ from donor).
+    """
+    names = [n for n in allocation if n in pressure]
+    if len(names) < 2:
+        return None
+    avoid = set(avoid)
+    receivers = sorted(
+        (n for n in names if n not in avoid),
+        key=lambda n: (-pressure[n], names.index(n)))
+    if not receivers:
+        receivers = sorted(names,
+                           key=lambda n: (-pressure[n], names.index(n)))
+    receiver = receivers[0]
+    donors = sorted(
+        (n for n in names
+         if n != receiver and len(allocation[n]) > 1),
+        key=lambda n: (pressure[n], names.index(n)))
+    if not donors:
+        return None
+    donor = donors[0]
+    counts = {n: len(allocation[n]) for n in allocation}
+    counts[donor] -= 1
+    counts[receiver] += 1
+    return {"from": donor, "to": receiver, "counts": counts}
+
+
+def blocks_from_counts(counts: Mapping[str, int],
+                       core_ids: Sequence[int] | int,
+                       ) -> dict[str, tuple[int, ...]]:
+    """Contiguous disjoint blocks over the pool matching exact per-
+    tenant core counts (the rebalancer's adjusted counts)."""
+    if isinstance(core_ids, int):
+        core_ids = range(core_ids)
+    pool = sorted(int(c) for c in core_ids)
+    if sum(counts.values()) != len(pool):
+        raise ValueError(f"counts {dict(counts)} do not cover pool of "
+                         f"{len(pool)} cores")
+    alloc: dict[str, tuple[int, ...]] = {}
+    off = 0
+    for n, k in counts.items():
+        if k < 1:
+            raise ValueError(f"tenant {n!r} needs >= 1 core, got {k}")
+        alloc[n] = tuple(pool[off: off + k])
+        off += k
+    return alloc

@@ -154,6 +154,42 @@ def test_split_retry_saves_nonfaulty_members():
     assert mb.stats["batches"] == 1
 
 
+def test_split_retry_telemetry_counts_member_flushes():
+    """A successful split-retry member is a real flush: it counts in
+    ``batch.flushes`` and observes its fill, and BOTH the failed
+    coalesced attempt's padding and each retry's own padding land in
+    ``padded_rows`` — those waste rows were executed. (The old path
+    dropped all three, undercounting exactly when faults were live.)"""
+    calls = []
+
+    def execute(rows):
+        calls.append(rows.shape[0])
+        if len(calls) == 1:                     # coalesced attempt fails
+            raise RuntimeError("transient batch fault")
+        if np.isneginf(rows).any():             # one poisoned member
+            raise RuntimeError("poison row")
+        return rows.sum(axis=1)
+
+    mb = MicroBatcher(execute, tile=4, split_retry=True)
+    flushes0 = metrics.counter("batch.flushes").value
+    padded0 = metrics.counter("batch.padded_rows").value
+    fill0 = metrics.histogram("batch.fill").count
+    good = mb.submit(np.ones((2, 4)))
+    bad = mb.submit(np.full((1, 4), -np.inf))
+    mb.flush()
+    np.testing.assert_array_equal(good.result(), np.full(2, 4.0))
+    assert isinstance(bad.exception(), RuntimeError)
+    # coalesced 3->4 (fails), retry good 2->4 (ok), retry bad 1->4
+    assert calls == [4, 4, 4]
+    # padding: 1 coalesced + 2 good retry; the failed bad retry's own
+    # padding is not waste *executed for a result* and stays out
+    assert mb.stats == {"requests": 2, "rows": 3, "batches": 1,
+                        "padded_rows": 3}
+    assert metrics.counter("batch.flushes").value - flushes0 == 1
+    assert metrics.counter("batch.padded_rows").value - padded0 == 3
+    assert metrics.histogram("batch.fill").count - fill0 == 1
+
+
 # ---------------------------------------------------------------------------
 # watchdog hardening
 # ---------------------------------------------------------------------------

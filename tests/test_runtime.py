@@ -180,6 +180,52 @@ def test_server_reports_padding_waste(small_spn):
         pytest.approx(123 / 128, abs=1e-4)
 
 
+def test_eviction_mid_queue_still_serves(small_spn):
+    """A cache eviction between submit and flush must not kill queued
+    work: the execute closure holds the artifact only weakly (so the
+    WeakKeyDictionary can collect evicted entries), but the batcher
+    PINS it strongly while rows are queued — the flush serves from the
+    pinned artifact without recompiling."""
+    import gc
+
+    srv = Server(small_spn, substrates=("numpy",), cache_capacity=1)
+    x = np.abs(_evidence(srv.prog.num_vars, "joint", n=4))
+    expected = srv.query(x, "joint", "numpy")
+    p = srv.submit(x, "joint", "numpy")
+    srv.artifact("mpe", "numpy")        # capacity 1: evicts the queued
+    gc.collect()                        # artifact's cache entry
+    assert srv.cache.stats()["evictions"] >= 1
+    np.testing.assert_array_equal(p.result(), expected)
+    # served from the pin, not a recompile: joint + mpe only
+    assert srv.cache.stats()["misses"] == 2
+
+
+def test_batcher_pin_released_after_flush(small_prog):
+    """The pin is strong only while rows are queued: once flushed, an
+    evicted artifact is collectable again (the pin must not defeat the
+    server's weak batcher keying)."""
+    import gc
+    import weakref
+
+    from repro.runtime import get_substrate as _get
+
+    cache = ArtifactCache(capacity=1)
+    sub = _get("numpy")
+    art = cache.get_or_compile(sub, small_prog, query="joint")
+    b = MicroBatcher(lambda lv: lv[:, 0], pin=art)
+    ref = weakref.ref(art)
+    b.submit(np.ones((2, 4)))
+    assert b._pin is art                # strong while queued
+    b.flush()
+    assert b._pin is None               # weak again once drained
+    cache.get_or_compile(sub, program.lower(
+        random_spn(6, depth=2, num_sums=2, repetitions=1, seed=9)),
+        query="joint")                  # evict
+    del art
+    gc.collect()
+    assert ref() is None
+
+
 def test_batcher_auto_flush_at_max_rows():
     calls = []
     b = MicroBatcher(lambda lv: (calls.append(1), lv[:, 0])[1],

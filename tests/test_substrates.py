@@ -22,9 +22,10 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _abstract_mesh(multi_pod=False):
+    # AbstractMesh takes a tuple of (axis_name, size) pairs
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
+    return AbstractMesh((("data", 16), ("model", 16)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,295 @@
+"""Multi-tenant serving fabric: QoS-weighted core apportionment, the
+model registry, co-residency on the vliw-mc mesh (disjoint core sets),
+async continuous batching (age-deadline pump, pump thread), per-tenant
+stats keying without collisions, and the serving-time rebalancer."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.learn import random_spn
+from repro.queries import random_mask
+from repro.runtime import (Server, Tenant, allocate_cores, plan_rebalance,
+                           verify_parity)
+from repro.runtime.tenancy import (ModelRegistry, as_tenant,
+                                   blocks_from_counts)
+
+SUBSTRATES = ("numpy", "vliw-sim", "vliw-mc")
+
+
+def _spn(num_vars, seed):
+    return random_spn(num_vars, depth=2, num_sums=2, repetitions=2,
+                      seed=seed)
+
+
+def _evidence(num_vars, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return random_mask(rng.integers(0, 2, (n, num_vars)), 0.4, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def duo():
+    """One server, two tenant SPNs, co-scheduled on an 8-core mesh."""
+    return Server(tenants={"alpha": _spn(8, 1), "beta": _spn(10, 2)},
+                  substrates=SUBSTRATES, cores=8, topology="mesh")
+
+
+# ---------------------------------------------------------------------------
+# core apportionment (pure)
+# ---------------------------------------------------------------------------
+def test_allocate_cores_equal_weights_split_evenly():
+    assert allocate_cores({"a": 1.0, "b": 1.0}, 8) == \
+        {"a": (0, 1, 2, 3), "b": (4, 5, 6, 7)}
+
+
+def test_allocate_cores_qos_weight_skews_shares():
+    alloc = allocate_cores({"a": 1.0, "b": 3.0}, 8)
+    assert len(alloc["a"]) == 2 and len(alloc["b"]) == 6
+    # largest remainder: quotas 2.67/5.33 -> the extra core goes to a
+    alloc = allocate_cores({"a": 1.0, "b": 2.0}, 8)
+    assert len(alloc["a"]) == 3 and len(alloc["b"]) == 5
+
+
+def test_allocate_cores_floors_tiny_weights_at_one_core():
+    alloc = allocate_cores({"whale": 100.0, "shrimp": 0.001}, 4)
+    assert len(alloc["shrimp"]) == 1 and len(alloc["whale"]) == 3
+
+
+def test_allocate_cores_infeasible_pool_returns_empty():
+    assert allocate_cores({"a": 1, "b": 1, "c": 1}, 2) == {}
+    assert allocate_cores({}, 8) == {}
+
+
+def test_allocate_cores_explicit_survivor_pool():
+    """The degraded path passes surviving core ids, not a count."""
+    alloc = allocate_cores({"a": 1.0, "b": 1.0}, [5, 2, 7, 0])
+    assert alloc == {"a": (0, 2), "b": (5, 7)}
+
+
+@pytest.mark.parametrize("weights", [
+    {"a": 1, "b": 1, "c": 1},
+    {"a": 5, "b": 1, "c": 1},
+    {"a": 0.1, "b": 0.2, "c": 0.7},
+])
+def test_allocate_cores_blocks_partition_the_pool(weights):
+    alloc = allocate_cores(weights, 8)
+    cores = [c for block in alloc.values() for c in block]
+    assert sorted(cores) == list(range(8))      # disjoint and covering
+    for block in alloc.values():                # contiguous blocks
+        assert list(block) == list(range(block[0], block[-1] + 1))
+
+
+def test_plan_rebalance_moves_one_core_to_the_pressured_tenant():
+    alloc = {"a": (0, 1, 2, 3), "b": (4, 5, 6, 7)}
+    move = plan_rebalance(alloc, {"a": 10.0, "b": 500.0})
+    assert move == {"from": "a", "to": "b", "counts": {"a": 3, "b": 5}}
+    blocks = blocks_from_counts(move["counts"], 8)
+    assert blocks == {"a": (0, 1, 2), "b": (3, 4, 5, 6, 7)}
+
+
+def test_plan_rebalance_respects_avoid_and_donor_floor():
+    alloc = {"a": (0,), "b": (1, 2, 3)}
+    # b is comm-bound (avoided): a receives instead, b donates
+    move = plan_rebalance(alloc, {"a": 9.0, "b": 90.0}, avoid=("b",))
+    assert move["to"] == "a" and move["from"] == "b"
+    # the only would-be donor holds one core: no legal move
+    assert plan_rebalance({"a": (0,), "b": (1,)},
+                          {"a": 1.0, "b": 9.0}) is None
+    assert plan_rebalance({"a": (0, 1)}, {"a": 1.0}) is None
+
+
+def test_blocks_from_counts_must_cover_the_pool():
+    with pytest.raises(ValueError, match="do not cover"):
+        blocks_from_counts({"a": 3, "b": 3}, 8)
+    with pytest.raises(ValueError, match=">= 1 core"):
+        blocks_from_counts({"a": 0, "b": 8}, 8)
+
+
+# ---------------------------------------------------------------------------
+# tenants + registry
+# ---------------------------------------------------------------------------
+def test_tenant_validation():
+    prog = as_tenant("ok", _spn(6, 3)).prog
+    for bad in ("", "a/b", "a:b"):
+        with pytest.raises(ValueError, match="tenant name"):
+            Tenant(bad, prog=prog)
+    with pytest.raises(ValueError, match="qos_weight"):
+        Tenant("t", prog=prog, qos_weight=0.0)
+    with pytest.raises(ValueError, match="needs a prog"):
+        Tenant("t", prog=None)
+    with pytest.raises(ValueError, match="name mismatch"):
+        as_tenant("x", Tenant("y", prog=prog))
+
+
+def test_registry_rejects_duplicates_and_reverse_looks_up_digests():
+    t1 = as_tenant("one", _spn(6, 4))
+    t2 = as_tenant("two", _spn(7, 5))
+    reg = ModelRegistry([t1, t2])
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(Tenant("one", prog=t1.prog))
+    with pytest.raises(KeyError, match="unknown tenant"):
+        reg.get("three")
+    assert reg.names() == ["one", "two"] and "two" in reg and len(reg) == 2
+    assert reg.tenant_of_digest(t2.prog.digest()) == "two"
+    assert reg.tenant_of_digest("not-a-digest") is None
+
+
+# ---------------------------------------------------------------------------
+# co-residency on the vliw-mc fabric
+# ---------------------------------------------------------------------------
+def test_coresident_tenants_get_disjoint_core_sets(duo):
+    arts = {n: duo.artifact("marginal", "vliw-mc", tenant=n)
+            for n in ("alpha", "beta")}
+    labels = {n: set(a.meta["multicore"]["core_labels"])
+              for n, a in arts.items()}
+    assert labels["alpha"] and labels["beta"]
+    assert not (labels["alpha"] & labels["beta"])
+    assert len(labels["alpha"] | labels["beta"]) <= 8
+    st = duo.stats()
+    assert st["tenancy"]["mode"] == "co-resident"
+    for n in ("alpha", "beta"):
+        assert st["tenancy"]["tenants"][n]["cores"] is not None
+
+
+def test_coresident_parity_per_tenant(duo):
+    """Every tenant's served answers match its oracle on every
+    substrate — including checked-sim bit-exactness — through the
+    SHARED server."""
+    for name in ("alpha", "beta"):
+        prog = duo.registry.get(name).prog
+        verify_parity(duo, _evidence(prog.num_vars, n=8, seed=3),
+                      query="marginal", substrates=SUBSTRATES,
+                      tenant=name)
+
+
+@pytest.mark.parametrize("substrate", SUBSTRATES)
+def test_interleaved_submits_match_synchronous_queries(duo, substrate):
+    """Chunked submits interleaved across tenants resolve to exactly
+    the values the per-tenant synchronous query path returns."""
+    X = {n: _evidence(duo.registry.get(n).prog.num_vars, n=9, seed=7)
+         for n in ("alpha", "beta")}
+    ref = {n: duo.query(X[n], "marginal", substrate, tenant=n)
+           for n in X}
+    pend = {n: [] for n in X}
+    for lo in range(0, 9, 3):               # alpha/beta chunks interleaved
+        for n in X:
+            pend[n].append(
+                duo.submit(X[n][lo:lo + 3], "marginal", substrate,
+                           tenant=n))
+    duo.flush()
+    for n in X:
+        got = np.concatenate([p.result() for p in pend[n]])
+        assert np.array_equal(got, ref[n]), \
+            f"{substrate}/{n}: interleaved != synchronous"
+
+
+def test_threaded_tenants_with_pump_thread(duo):
+    """N tenant threads submitting concurrently, resolved only by the
+    background pump — no caller ever flushes — still bit-exact."""
+    X = {n: _evidence(duo.registry.get(n).prog.num_vars, n=8, seed=11)
+         for n in ("alpha", "beta")}
+    ref = {n: duo.query(X[n], "marginal", "numpy", tenant=n) for n in X}
+    results: dict[str, list] = {n: [] for n in X}
+
+    def client(n):
+        pend = [duo.submit(X[n][lo:lo + 2], "marginal", "numpy", tenant=n)
+                for lo in range(0, 8, 2)]
+        for p in pend:
+            assert p.wait(5.0), f"{n}: pump never resolved the request"
+            results[n].append(p.result())
+
+    duo.flush_max_age_s = 0.01
+    duo.start_pump()
+    try:
+        threads = [threading.Thread(target=client, args=(n,)) for n in X]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=10.0)
+            assert not t.is_alive()
+    finally:
+        duo.stop_pump()
+        duo.flush_max_age_s = None
+    for n in X:
+        assert np.array_equal(np.concatenate(results[n]), ref[n])
+
+
+def test_age_deadline_flush_without_explicit_flush(duo):
+    """pump() with an aged clock resolves queued work that neither hit
+    the rows high-water mark nor saw flush()/result()."""
+    X = _evidence(duo.registry.get("alpha").prog.num_vars, n=2, seed=13)
+    p = duo.submit(X, "marginal", "numpy", tenant="alpha")
+    assert not p.ready()
+    assert duo.pump(now=time.monotonic(), max_age_s=3600.0) == 0
+    assert not p.ready()                    # young request: not due yet
+    assert duo.pump(now=time.monotonic() + 7200.0, max_age_s=3600.0) >= 1
+    assert p.ready() and p.result().shape == (2,)
+
+
+def test_qos_weights_skew_core_allocation():
+    srv = Server(tenants={"hi": Tenant("hi", prog=None, spn=_spn(8, 21),
+                                       qos_weight=3.0),
+                          "lo": Tenant("lo", prog=None, spn=_spn(8, 22),
+                                       qos_weight=1.0)},
+                 substrates=("numpy", "vliw-mc"), cores=8,
+                 topology="mesh")
+    hi = srv.registry.get("hi").cores
+    lo = srv.registry.get("lo").cores
+    assert len(hi) == 6 and len(lo) == 2
+    assert not (set(hi) & set(lo))
+
+
+def test_stats_keys_disambiguate_coresident_tenants(duo):
+    """Two co-resident SPNs with the SAME semiring/substrate pair must
+    land in distinct stats entries — the pre-tenancy keying silently
+    overwrote one with the other."""
+    for n in ("alpha", "beta"):
+        X = _evidence(duo.registry.get(n).prog.num_vars, n=4, seed=17)
+        duo.query(X, "marginal", "vliw-mc", tenant=n)
+    st = duo.stats()
+    for section in ("batchers", "multicore"):
+        keys = [k for k in st[section] if k.endswith("sum/vliw-mc")]
+        assert "alpha/sum/vliw-mc" in keys and "beta/sum/vliw-mc" in keys
+    a = st["multicore"]["alpha/sum/vliw-mc"]
+    b = st["multicore"]["beta/sum/vliw-mc"]
+    assert not (set(a["core_labels"]) & set(b["core_labels"]))
+    # per-tenant SLO keys recorded next to the aggregate
+    assert {"vliw-mc/sum", "alpha:vliw-mc/sum",
+            "beta:vliw-mc/sum"} <= set(st["slo"])
+
+
+def test_single_tenant_stats_keys_unchanged(duo):
+    srv = Server(_spn(8, 31), substrates=("numpy",))
+    srv.query(_evidence(8, n=3, seed=19), "marginal", "numpy")
+    assert "sum/numpy" in srv.stats()["batchers"]      # no tenant prefix
+
+
+def test_unknown_tenant_is_a_client_error(duo):
+    X = _evidence(8, n=2, seed=23)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        duo.submit(X, "marginal", "numpy", tenant="nobody")
+    with pytest.raises(KeyError, match="unknown tenant"):
+        duo.query(X, "marginal", "numpy", tenant="nobody")
+
+
+def test_rebalance_ratchets_on_weighted_makespan():
+    srv = Server(tenants={"big": _spn(12, 41), "small": _spn(6, 42)},
+                 substrates=("numpy", "vliw-mc"), cores=8,
+                 topology="mesh")
+    ev = srv.rebalance(query="marginal")
+    assert ev is not None
+    assert ev["applied"] == (ev["candidate_makespan"] < ev["makespan"])
+    if ev["applied"]:
+        blocks = [set(srv.registry.get(n).cores)
+                  for n in ("big", "small")]
+        assert not (blocks[0] & blocks[1])        # still disjoint
+        assert len(blocks[0] | blocks[1]) <= 8
+    # the ratchet is monotone: a second pass never adopts a move that
+    # worsens the makespan the first pass settled on
+    ev2 = srv.rebalance(query="marginal")
+    if ev2 is not None and ev2["applied"]:
+        assert ev2["candidate_makespan"] < ev2["makespan"]
+    events = [e for e in srv.stats()["tenancy"]["events"]
+              if e["kind"] == "rebalance"]
+    assert len(events) >= 2
